@@ -1,0 +1,44 @@
+"""Customizable bits-per-dimension sweep (the paper's core configurability
+claim: "we can tailor the number of bits for different applications to
+trade off accuracy loss and cost savings", bits = m x (u+1)).
+
+Sweeps (m, levels) on the web corpus and reports recall@10, index bytes,
+and the SDC scan's HBM-byte cost per 1M docs — the accuracy/cost frontier
+an application owner picks from.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import encode, make_corpus, recall_at, train_binarizer
+from repro.index.flat import FlatFloat, FlatSDC
+
+
+def run(steps: int = 200):
+    docs, queries, gt, spec = make_corpus("web")
+    dim = spec["dim"]
+
+    ff = FlatFloat.build(jnp.asarray(docs))
+    _, idx = ff.search(jnp.asarray(queries), 10)
+    rows = [("float", 32 * dim, recall_at(idx, gt, 10),
+             ff.nbytes() / len(docs))]
+
+    for m, levels in ((32, 2), (64, 2), (64, 4), (128, 2), (128, 4),
+                      (256, 2), (256, 4)):
+        state, cfg, _ = train_binarizer(docs, dim, m, levels, steps=steps)
+        index = FlatSDC.build(encode(state, cfg, docs), levels)
+        _, idx = index.search(encode(state, cfg, queries), 10)
+        rows.append((f"m={m},u+1={levels}", m * levels,
+                     recall_at(idx, gt, 10), index.nbytes() / len(docs)))
+
+    print("\n# Bits sweep — accuracy/cost frontier (web corpus)")
+    print("config,bits,recall@10,bytes_per_doc")
+    for name, bits, rec, bpd in rows:
+        print(f"{name},{bits},{rec:.3f},{bpd:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,117 @@
+"""Roofline analysis (deliverable g): derive the three terms per cell from
+the dry-run's compiled artifacts (dryrun_results.json).
+
+  compute    = HLO_FLOPs / peak_FLOPs            (per device)
+  memory     = HLO_bytes / HBM_bw                (per device)
+  collective = wire_bytes / (links * link_bw)    (per device)
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, 4 ICI links x ~50 GB/s.
+MODEL_FLOPS: 6*N*D (dense train), 6*N_act*D (MoE), 2*N*D (+ KV read) for
+inference; family-specific analogues for gnn/recsys.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # B/s
+LINK_BW = 50e9  # B/s per ICI link
+N_LINKS = 4
+
+
+def model_flops(meta: Dict, kind: str) -> float:
+    fam = meta.get("family")
+    if fam == "lm":
+        n_act = meta["active_params"]
+        toks = meta["tokens_per_step"]
+        if kind == "train":
+            base = 6.0 * n_act * toks
+        else:
+            base = 2.0 * n_act * toks
+        # attention FLOPs (not in 6ND): 12*B*S^2*H*hd fwd+bwd approx
+        H, hd, L = meta["n_heads"], meta["head_dim"], meta["n_layers"]
+        if kind == "train":
+            S, B = meta["seq"], meta["batch"]
+            base += 12.0 * B * S * S * H * hd * L / 2  # causal half
+        elif kind == "prefill":
+            S, B = meta["seq"], meta["batch"]
+            base += 4.0 * B * S * S * H * hd * L / 2
+        elif kind == "decode":
+            T, B = meta.get("cache_len", 0), meta["batch"]
+            base += 4.0 * B * T * H * hd * L
+        return base
+    if fam == "gnn":
+        # per edge: 2 MLPs of ~2*(3h*h + h*h) flops, fwd+bwd 3x
+        h = meta["d_hidden"]
+        per_edge = 2 * (3 * h * h + h * h) + 2 * (2 * h * h + h * h)
+        return 3.0 * meta["edges"] * per_edge * meta["n_layers"]
+    # recsys: 6 * dense params * examples (embedding lookups are bytes, not flops)
+    dense_params = meta["params"]
+    if meta.get("model") == "dlrm":
+        dense_params = meta["params"] - 26 * 1_048_576 * 64
+    elif meta.get("model") == "two_tower":
+        dense_params = meta["params"] - 2 * 2_097_152 * 256
+    mult = 6.0 if meta.get("batch") and "train" in kind else 2.0
+    return mult * dense_params * meta["examples_per_step"]
+
+
+def analyse(results_path: str = "dryrun_results.json"):
+    with open(results_path) as f:
+        results = json.load(f)
+    rows = []
+    for key, r in sorted(results.items()):
+        if not r.get("ok"):
+            rows.append({"cell": key, "ok": False, "error": r.get("error")})
+            continue
+        flops = r["cost"]["flops_per_device"]
+        mem_bytes = r["cost"]["bytes_per_device"]
+        wire = sum(r["collectives"]["wire_bytes_per_device"].values())
+        t_c = flops / PEAK_FLOPS
+        t_m = mem_bytes / HBM_BW
+        t_x = wire / (N_LINKS * LINK_BW)
+        dominant = max(
+            (("compute", t_c), ("memory", t_m), ("collective", t_x)),
+            key=lambda kv: kv[1],
+        )[0]
+        mf = model_flops(r["meta"], r["kind"])
+        mf_dev = mf / r["n_devices"]
+        useful = mf_dev / flops if flops else 0.0
+        bound = max(t_c, t_m, t_x)
+        # roofline fraction: useful model-flops time over the binding term
+        frac = (mf_dev / PEAK_FLOPS) / bound if bound else 0.0
+        rows.append({
+            "cell": key, "ok": True, "kind": r["kind"],
+            "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "dominant": dominant,
+            "model_flops_per_dev": mf_dev,
+            "useful_flops_ratio": useful,
+            "roofline_fraction": frac,
+            "peak_gib": r["memory"]["peak_bytes_per_device"] / 2**30,
+        })
+    return rows
+
+
+def run(results_path: str = "dryrun_results.json"):
+    if not os.path.exists(results_path):
+        print(f"# roofline: {results_path} missing — run launch/dryrun.py first")
+        return []
+    rows = analyse(results_path)
+    print("\n# Roofline — per (arch x shape x mesh), times in ms/device")
+    print("cell,kind,compute_ms,memory_ms,collective_ms,dominant,"
+          "useful_flops_ratio,roofline_fraction,peak_GiB")
+    for r in rows:
+        if not r["ok"]:
+            print(f"{r['cell']},FAILED,,,,,,,")
+            continue
+        print(f"{r['cell']},{r['kind']},{1e3*r['compute_s']:.2f},"
+              f"{1e3*r['memory_s']:.2f},{1e3*r['collective_s']:.2f},"
+              f"{r['dominant']},{r['useful_flops_ratio']:.3f},"
+              f"{r['roofline_fraction']:.3f},{r['peak_gib']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

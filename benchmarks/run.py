@@ -1,0 +1,65 @@
+"""Benchmark harness: one entry per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only tableN]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer training steps (CI mode)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    steps = 120 if args.fast else 400
+    from benchmarks import (
+        bits_sweep,
+        fig6_ann_integration,
+        roofline,
+        table1_recall_public,
+        table2_recall_industrial,
+        table3_training_pipelines,
+        table4_backward_compat,
+        table5_search_latency,
+        table67_system_ab,
+    )
+
+    suites = {
+        "table1": lambda: table1_recall_public.run(steps=steps),
+        "table2": lambda: table2_recall_industrial.run(steps=steps),
+        "table3": lambda: table3_training_pipelines.run(steps=max(steps // 3, 60)),
+        "table4": lambda: table4_backward_compat.run(steps=max(steps // 2, 100)),
+        "table5": table5_search_latency.run,
+        "fig6": lambda: fig6_ann_integration.run(steps=max(steps // 2, 100)),
+        "table67": lambda: table67_system_ab.run(steps=max(steps // 2, 100)),
+        "bits_sweep": lambda: bits_sweep.run(steps=max(steps // 2, 100)),
+        "roofline": roofline.run,
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    failures = []
+    for name, fn in suites.items():
+        t0 = time.time()
+        print(f"\n===== {name} =====", flush=True)
+        try:
+            fn()
+            print(f"===== {name} done in {time.time()-t0:.1f}s =====", flush=True)
+        except Exception:  # noqa: BLE001 — report all suites
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"\nFAILED suites: {failures}")
+        sys.exit(1)
+    print("\nall benchmark suites completed.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Paper Table 5: exhaustive-search latency per distance engine.
+
+  hash(bitwise) | ours(u=2, bitwise) | ours(u=2, SDC) | ours(u=4, bitwise)
+  | ours(u=4, SDC) | float(flat)
+
+Measured on this host's CPU through the same JAX stack (Pallas kernels in
+interpret mode are Python-slow, so kernel rows are measured through their
+jit'd XLA-equivalent math — the ranking between engines is what the table
+claims; the absolute numbers for the TPU target come from §Roofline).
+Key claims to reproduce: bitwise cost grows with levels^2, SDC cost is
+~flat in levels, SDC beats bitwise at u=4, float is slowest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.core.binarize_lib import (
+    code_affine_constants,
+    pack_bitplanes,
+    unpack_codes,
+)
+from repro.kernels.sdc import ref as R
+
+
+N, Q, M = 100_000, 16, 64  # corpus, queries, code dim (256 bits at u=4)
+
+
+@functools.partial(jax.jit, static_argnames=("n_levels", "m"))
+def bitwise_scores(q_packed, d_packed, n_levels: int, m: int):
+    """xor+popcount evaluation of Eq. 11 (the [44] baseline)."""
+    acc = None
+    for s in range(n_levels):
+        for t in range(n_levels):
+            x = q_packed[:, s, :]
+            y = d_packed[:, t, :]
+            xors = jnp.bitwise_xor(x[:, None, :], y[None, :, :])
+            ham = jnp.sum(jax.lax.population_count(xors).astype(jnp.int32), -1)
+            dot = (m - 2 * ham).astype(jnp.float32) * (2.0 ** -(s + t))
+            acc = dot if acc is None else acc + dot
+    return acc
+
+
+@functools.partial(jax.jit, static_argnames=("n_levels",))
+def sdc_scores_xla(q_codes, d_codes, d_inv, n_levels: int):
+    """The SDC affine-identity int8 matmul (what the Pallas kernel does)."""
+    a, beta = code_affine_constants(n_levels)
+    D = q_codes.shape[-1]
+    dot = q_codes.astype(jnp.int32) @ d_codes.astype(jnp.int32).T
+    sq = jnp.sum(q_codes.astype(jnp.int32), -1, keepdims=True)
+    sd = jnp.sum(d_codes.astype(jnp.int32), -1)[None, :]
+    return ((a * a) * dot.astype(jnp.float32)
+            + (a * beta) * (sq + sd).astype(jnp.float32)
+            + D * beta * beta) * d_inv[None, :]
+
+
+@jax.jit
+def float_scores(q, d):
+    return q @ d.T
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    for levels, label in ((1, "hash(256b)"), (2, "ours u=2"), (4, "ours u=4")):
+        m = 256 // levels  # constant 256-bit budget, like the paper
+        cq = jax.random.randint(key, (Q, m), 0, 2**levels).astype(jnp.int8)
+        cd = jax.random.randint(jax.random.fold_in(key, 1), (N, m), 0,
+                                2**levels).astype(jnp.int8)
+        pq = pack_bitplanes(unpack_codes(cq, levels))
+        pd = pack_bitplanes(unpack_codes(cd, levels))
+        inv = R.doc_inv_norms(cd, levels)
+
+        t_bit, _ = timeit(lambda: bitwise_scores(pq, pd, levels, m))
+        rows.append((f"{label} bitwise", 256, t_bit))
+        t_sdc, _ = timeit(lambda: sdc_scores_xla(cq, cd, inv, levels))
+        rows.append((f"{label} SDC", 256, t_sdc))
+
+    qf = jax.random.normal(key, (Q, 128))
+    df = jax.random.normal(jax.random.fold_in(key, 2), (N, 128))
+    t_f, _ = timeit(lambda: float_scores(qf, df))
+    rows.append(("float flat(4096b)", 4096, t_f))
+
+    print(f"\n# Table 5 — exhaustive search latency ({N} docs, {Q} queries, CPU)")
+    print("engine,bits,search_s,qps")
+    for name, bits, t in rows:
+        print(f"{name},{bits},{t:.4f},{Q/t:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,13 @@
+"""meshgraphnet: 15 layers, d_hidden=128, sum aggregator, 2-layer MLPs
+[arXiv:2010.03409]. Per-shape input dims come from configs/cells.py."""
+from repro.models.gnn import GNNConfig
+
+CONFIG = GNNConfig(
+    name="meshgraphnet", n_layers=15, d_hidden=128, mlp_layers=2,
+    aggregator="sum", d_out=3,
+)
+
+SMOKE = GNNConfig(
+    name="meshgraphnet-smoke", n_layers=3, d_hidden=16, mlp_layers=2,
+    aggregator="sum", d_node_in=8, d_edge_in=4, d_out=3,
+)

@@ -1,0 +1,404 @@
+"""Cell abstraction: one (architecture x input shape) dry-run unit.
+
+A CellSpec carries everything launch/dryrun.py needs to lower + compile a
+production step on a mesh: the step function, abstract (ShapeDtypeStruct)
+arguments, input shardings, and metadata for the roofline analysis
+(parameter counts, tokens/examples per step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import gnn as gnn_lib
+from repro.models import transformer as tf
+from repro.models.recsys import dien as dien_lib
+from repro.models.recsys import dlrm as dlrm_lib
+from repro.models.recsys import mind as mind_lib
+from repro.models.recsys import two_tower as tt_lib
+from repro.parallel import sharding as shd
+from repro.train import optim, steps
+
+
+@dataclasses.dataclass
+class CellSpec:
+    arch: str
+    shape: str
+    kind: str  # train | prefill | decode | serve | retrieval
+    fn: Callable
+    abstract_args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    meta: Dict[str, Any]  # params, active_params, tokens/examples, notes
+
+
+def _abstract(tree):
+    """ShapeDtypeStruct pytree from an init closure — no allocation."""
+    return jax.eval_shape(tree)
+
+
+def _ns(mesh, *spec):
+    return NamedSharding(mesh, P(*spec))
+
+
+def _rep(mesh, tree):
+    return jax.tree_util.tree_map(lambda _: _ns(mesh), tree)
+
+
+ADAM = optim.AdamConfig(lr=3e-4, clip_norm=1.0)
+
+
+# ---------------------------------------------------------------------------
+# LM family.
+# ---------------------------------------------------------------------------
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1, context_parallel=True),
+}
+
+
+def lm_cell(cfg: tf.TransformerConfig, shape_id: str, mesh: Mesh) -> CellSpec:
+    info = LM_SHAPES[shape_id]
+    dp = shd.dp_axes(mesh)
+    params_s = _abstract(lambda: tf.init_params(jax.random.PRNGKey(0), cfg))
+    param_sh = shd.lm_param_sharding(mesh, cfg)
+    meta = {
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "family": "lm",
+        "n_layers": cfg.n_layers,
+        "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads,
+        "n_kv_heads": cfg.n_kv_heads,
+        "head_dim": cfg.head_dim,
+        "seq": info["seq"],
+        "batch": info["batch"],
+    }
+
+    if info["kind"] == "train":
+        opt_s = _abstract(lambda: optim.adam_init(params_s))
+        opt_sh = optim.AdamState(
+            step=_ns(mesh),
+            mu=jax.tree_util.tree_map(lambda s: s, param_sh),
+            nu=jax.tree_util.tree_map(lambda s: s, param_sh),
+        )
+        batch_s = {
+            "tokens": jax.ShapeDtypeStruct((info["batch"], info["seq"]), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((info["batch"], info["seq"]), jnp.int32),
+        }
+        batch_sh = {"tokens": shd.lm_batch_sharding(mesh),
+                    "labels": shd.lm_batch_sharding(mesh)}
+        constrain = shd.lm_activation_constraint(mesh, cfg)
+        fn = steps.lm_train_step(cfg, ADAM, constrain=constrain)
+        meta["tokens_per_step"] = info["batch"] * info["seq"]
+        return CellSpec(cfg.name, shape_id, "train", fn,
+                        (params_s, opt_s, batch_s),
+                        (param_sh, opt_sh, batch_sh), meta)
+
+    if info["kind"] == "prefill":
+        batch_s = {"tokens": jax.ShapeDtypeStruct((info["batch"], info["seq"]), jnp.int32)}
+        batch_sh = {"tokens": shd.lm_batch_sharding(mesh)}
+        fn = steps.lm_prefill_step(cfg)
+        meta["tokens_per_step"] = info["batch"] * info["seq"]
+        return CellSpec(cfg.name, shape_id, "prefill", fn,
+                        (params_s, batch_s), (param_sh, batch_sh), meta)
+
+    # decode
+    cp = info.get("context_parallel", False)
+    cache_s = _abstract(
+        lambda: tf.init_kv_cache(cfg, info["batch"], info["seq"])
+    )
+    cache_sh_kv = shd.lm_cache_sharding(mesh, cfg, context_parallel=cp)
+    if cp:
+        kv_spec = _ns(mesh, None, None, None, dp, None)
+    else:
+        kv_spec = _ns(mesh, None, dp, None, "model", None)
+    cache_sh = {k: kv_spec for k in cache_s if k != "length"}
+    cache_sh["length"] = _ns(mesh)
+    batch_s = {"token": jax.ShapeDtypeStruct((info["batch"],), jnp.int32)}
+    batch_sh = {"token": _ns(mesh, dp) if info["batch"] > 1 else _ns(mesh, None)}
+    fn = steps.lm_decode_step(cfg)
+    meta["tokens_per_step"] = info["batch"]
+    meta["cache_len"] = info["seq"]
+    meta["context_parallel"] = cp
+    return CellSpec(cfg.name, shape_id, "decode", fn,
+                    (params_s, batch_s, cache_s),
+                    (param_sh, batch_sh, cache_sh), meta)
+
+
+# ---------------------------------------------------------------------------
+# GNN family (meshgraphnet).
+# ---------------------------------------------------------------------------
+
+GNN_SHAPES = {
+    "full_graph_sm": dict(nodes=2708, edges=10556, d_feat=1433),
+    "minibatch_lg": dict(nodes=169_984, edges=168_960, d_feat=100, sampled=True),
+    "ogb_products": dict(nodes=2_449_029, edges=61_859_140, d_feat=100),
+    "molecule": dict(nodes=3840, edges=8192, d_feat=16, batched=128),
+}
+
+
+def gnn_cell(base_cfg: gnn_lib.GNNConfig, shape_id: str, mesh: Mesh) -> CellSpec:
+    info = GNN_SHAPES[shape_id]
+    dp = shd.dp_axes(mesh)
+    cfg = dataclasses.replace(base_cfg, d_node_in=info["d_feat"], d_edge_in=8)
+    params_s = _abstract(lambda: gnn_lib.init_params(jax.random.PRNGKey(0), cfg))
+    param_sh = _rep(mesh, params_s)
+    N, E = info["nodes"], info["edges"]
+    # pad N/E so nodes shard over `model` and edges over dp (any mesh)
+    pad_to = mesh.devices.size
+    N = N + (-N) % pad_to
+    E = E + (-E) % pad_to
+    batch_s = {
+        "node_feat": jax.ShapeDtypeStruct((N, info["d_feat"]), jnp.float32),
+        "edge_feat": jax.ShapeDtypeStruct((E, 8), jnp.float32),
+        "senders": jax.ShapeDtypeStruct((E,), jnp.int32),
+        "receivers": jax.ShapeDtypeStruct((E,), jnp.int32),
+        "edge_mask": jax.ShapeDtypeStruct((E,), jnp.bool_),
+        "targets": jax.ShapeDtypeStruct((N, cfg.d_out), jnp.float32),
+    }
+    batch_sh = {
+        "node_feat": shd.gnn_node_sharding(mesh),
+        "edge_feat": shd.gnn_edge_feat_sharding(mesh),
+        "senders": shd.gnn_edge_sharding(mesh),
+        "receivers": shd.gnn_edge_sharding(mesh),
+        "edge_mask": shd.gnn_edge_sharding(mesh),
+        "targets": shd.gnn_node_sharding(mesh),
+    }
+    opt_s = _abstract(lambda: optim.adam_init(params_s))
+    opt_sh = optim.AdamState(step=_ns(mesh), mu=_rep(mesh, params_s),
+                             nu=_rep(mesh, params_s))
+    fn = steps.gnn_train_step(cfg, ADAM)
+    meta = {
+        "params": cfg.param_count(), "active_params": cfg.param_count(),
+        "family": "gnn", "nodes": N, "edges": E, "d_hidden": cfg.d_hidden,
+        "n_layers": cfg.n_layers,
+    }
+    return CellSpec(base_cfg.name, shape_id, "train", fn,
+                    (params_s, opt_s, batch_s),
+                    (param_sh, opt_sh, batch_sh), meta)
+
+
+# ---------------------------------------------------------------------------
+# RecSys family.
+# ---------------------------------------------------------------------------
+
+RS_SHAPES = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, candidates=1_000_000),
+}
+
+
+def _recsys_common(mesh, model_init, table_keys, stacked_table_keys=()):
+    params_s = _abstract(model_init)
+    param_sh = shd.fill_param_sharding(mesh, params_s, table_keys,
+                                       stacked_table_keys)
+    return params_s, param_sh
+
+
+def _opt_for(mesh, params_s, param_sh):
+    opt_s = _abstract(lambda: optim.adam_init(params_s))
+    opt_sh = optim.AdamState(
+        step=_ns(mesh),
+        mu=jax.tree_util.tree_map(lambda s: s, param_sh),
+        nu=jax.tree_util.tree_map(lambda s: s, param_sh),
+    )
+    return opt_s, opt_sh
+
+
+def dlrm_cell(cfg: dlrm_lib.DLRMConfig, shape_id: str, mesh: Mesh) -> CellSpec:
+    info = RS_SHAPES[shape_id]
+    dp = shd.dp_axes(mesh)
+    params_s, param_sh = _recsys_common(
+        mesh, lambda: dlrm_lib.init_params(jax.random.PRNGKey(0), cfg),
+        table_keys=(), stacked_table_keys=("tables",),
+    )
+    meta = {"params": cfg.param_count(), "active_params": cfg.param_count(),
+            "family": "recsys", "model": "dlrm", "batch": info["batch"],
+            "embed_dim": cfg.embed_dim, "n_sparse": cfg.n_sparse}
+
+    B = info["batch"] if info["kind"] != "retrieval" else info["candidates"]
+    batch_s = {
+        "dense": jax.ShapeDtypeStruct((B, cfg.n_dense), jnp.float32),
+        "sparse_ids": jax.ShapeDtypeStruct((B, cfg.n_sparse), jnp.int32),
+    }
+    # candidate rows shard over dp (1e6 divides dp extents, not dp*model)
+    row_ax = dp
+    batch_sh = {"dense": _ns(mesh, row_ax, None),
+                "sparse_ids": _ns(mesh, row_ax, None)}
+    meta["examples_per_step"] = B
+
+    if info["kind"] == "train":
+        batch_s["labels"] = jax.ShapeDtypeStruct((B,), jnp.float32)
+        batch_sh["labels"] = _ns(mesh, dp)
+        opt_s, opt_sh = _opt_for(mesh, params_s, param_sh)
+        fn = steps.dlrm_train_step(cfg, ADAM)
+        return CellSpec(cfg.name, shape_id, "train", fn,
+                        (params_s, opt_s, batch_s),
+                        (param_sh, opt_sh, batch_sh), meta)
+    fn = steps.dlrm_serve_step(cfg)
+    return CellSpec(cfg.name, shape_id, info["kind"], fn,
+                    (params_s, batch_s), (param_sh, batch_sh), meta)
+
+
+def tt_cell(cfg: tt_lib.TwoTowerConfig, shape_id: str, mesh: Mesh) -> CellSpec:
+    info = RS_SHAPES[shape_id]
+    dp = shd.dp_axes(mesh)
+    params_s, param_sh = _recsys_common(
+        mesh, lambda: tt_lib.init_params(jax.random.PRNGKey(0), cfg),
+        table_keys=("user_table", "item_table"),
+    )
+    meta = {"params": cfg.param_count(), "active_params": cfg.param_count(),
+            "family": "recsys", "model": "two_tower", "batch": info["batch"],
+            "embed_dim": cfg.embed_dim}
+    L = cfg.hist_len
+
+    if info["kind"] == "train":
+        B = info["batch"]
+        batch_s = {
+            "hist_ids": jax.ShapeDtypeStruct((B, L), jnp.int32),
+            "hist_mask": jax.ShapeDtypeStruct((B, L), jnp.float32),
+            "pos_items": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "item_logq": jax.ShapeDtypeStruct((B,), jnp.float32),
+        }
+        batch_sh = {"hist_ids": _ns(mesh, dp, None), "hist_mask": _ns(mesh, dp, None),
+                    "pos_items": _ns(mesh, dp), "item_logq": _ns(mesh, dp)}
+        opt_s, opt_sh = _opt_for(mesh, params_s, param_sh)
+        fn = steps.tt_train_step(cfg, ADAM)
+        meta["examples_per_step"] = B
+        return CellSpec(cfg.name, shape_id, "train", fn,
+                        (params_s, opt_s, batch_s),
+                        (param_sh, opt_sh, batch_sh), meta)
+
+    if info["kind"] == "retrieval":
+        Bq, Nc = info["batch"], info["candidates"]
+        batch_s = {
+            "hist_ids": jax.ShapeDtypeStruct((Bq, L), jnp.int32),
+            "hist_mask": jax.ShapeDtypeStruct((Bq, L), jnp.float32),
+            "cand_ids": jax.ShapeDtypeStruct((Nc,), jnp.int32),
+        }
+        batch_sh = {"hist_ids": _ns(mesh, None, None),
+                    "hist_mask": _ns(mesh, None, None),
+                    "cand_ids": _ns(mesh, dp)}
+        fn = steps.tt_retrieval_step(cfg, k=100)
+        meta["examples_per_step"] = Nc
+        meta["candidates"] = Nc
+        return CellSpec(cfg.name, shape_id, "retrieval", fn,
+                        (params_s, batch_s), (param_sh, batch_sh), meta)
+
+    B = info["batch"]
+    batch_s = {
+        "hist_ids": jax.ShapeDtypeStruct((B, L), jnp.int32),
+        "hist_mask": jax.ShapeDtypeStruct((B, L), jnp.float32),
+        "cand_ids": jax.ShapeDtypeStruct((256,), jnp.int32),
+    }
+    batch_sh = {"hist_ids": _ns(mesh, dp, None), "hist_mask": _ns(mesh, dp, None),
+                "cand_ids": _ns(mesh, None)}
+    fn = steps.tt_serve_step(cfg)
+    meta["examples_per_step"] = B
+    return CellSpec(cfg.name, shape_id, "serve", fn,
+                    (params_s, batch_s), (param_sh, batch_sh), meta)
+
+
+def mind_cell(cfg: mind_lib.MINDConfig, shape_id: str, mesh: Mesh) -> CellSpec:
+    info = RS_SHAPES[shape_id]
+    dp = shd.dp_axes(mesh)
+    params_s, param_sh = _recsys_common(
+        mesh, lambda: mind_lib.init_params(jax.random.PRNGKey(0), cfg),
+        table_keys=("item_table",),
+    )
+    meta = {"params": cfg.param_count(), "active_params": cfg.param_count(),
+            "family": "recsys", "model": "mind", "batch": info["batch"],
+            "embed_dim": cfg.embed_dim}
+    L = cfg.hist_len
+
+    if info["kind"] == "train":
+        B = info["batch"]
+        batch_s = {
+            "hist_ids": jax.ShapeDtypeStruct((B, L), jnp.int32),
+            "hist_mask": jax.ShapeDtypeStruct((B, L), jnp.float32),
+            "pos_items": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "neg_items": jax.ShapeDtypeStruct((B, 8), jnp.int32),
+        }
+        batch_sh = {k: _ns(mesh, dp, None) if batch_s[k].ndim == 2 else _ns(mesh, dp)
+                    for k in batch_s}
+        opt_s, opt_sh = _opt_for(mesh, params_s, param_sh)
+        fn = steps.mind_train_step(cfg, ADAM)
+        meta["examples_per_step"] = B
+        return CellSpec(cfg.name, shape_id, "train", fn,
+                        (params_s, opt_s, batch_s),
+                        (param_sh, opt_sh, batch_sh), meta)
+
+    if info["kind"] == "retrieval":
+        Bq, Nc = info["batch"], info["candidates"]
+        batch_s = {
+            "hist_ids": jax.ShapeDtypeStruct((Bq, L), jnp.int32),
+            "hist_mask": jax.ShapeDtypeStruct((Bq, L), jnp.float32),
+            "cand_ids": jax.ShapeDtypeStruct((Nc,), jnp.int32),
+        }
+        batch_sh = {"hist_ids": _ns(mesh, None, None),
+                    "hist_mask": _ns(mesh, None, None),
+                    "cand_ids": _ns(mesh, dp)}
+        fn = steps.mind_retrieval_step(cfg, k=100)
+        meta["examples_per_step"] = Nc
+        return CellSpec(cfg.name, shape_id, "retrieval", fn,
+                        (params_s, batch_s), (param_sh, batch_sh), meta)
+
+    B = info["batch"]
+    batch_s = {
+        "hist_ids": jax.ShapeDtypeStruct((B, L), jnp.int32),
+        "hist_mask": jax.ShapeDtypeStruct((B, L), jnp.float32),
+    }
+    batch_sh = {k: _ns(mesh, dp, None) for k in batch_s}
+    fn = steps.mind_serve_step(cfg)
+    meta["examples_per_step"] = B
+    return CellSpec(cfg.name, shape_id, "serve", fn,
+                    (params_s, batch_s), (param_sh, batch_sh), meta)
+
+
+def dien_cell(cfg: dien_lib.DIENConfig, shape_id: str, mesh: Mesh) -> CellSpec:
+    info = RS_SHAPES[shape_id]
+    dp = shd.dp_axes(mesh)
+    params_s, param_sh = _recsys_common(
+        mesh, lambda: dien_lib.init_params(jax.random.PRNGKey(0), cfg),
+        table_keys=("item_table", "cate_table"),
+    )
+    meta = {"params": cfg.param_count(), "active_params": cfg.param_count(),
+            "family": "recsys", "model": "dien", "batch": info["batch"],
+            "embed_dim": cfg.embed_dim, "seq": cfg.seq_len}
+    L = cfg.seq_len
+    B = info["batch"] if info["kind"] != "retrieval" else info["candidates"]
+
+    batch_s = {
+        "hist_items": jax.ShapeDtypeStruct((B, L), jnp.int32),
+        "hist_cates": jax.ShapeDtypeStruct((B, L), jnp.int32),
+        "hist_mask": jax.ShapeDtypeStruct((B, L), jnp.float32),
+        "target_item": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "target_cate": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+    ax = dp
+    batch_sh = {k: _ns(mesh, ax, None) if batch_s[k].ndim == 2 else _ns(mesh, ax)
+                for k in batch_s}
+    meta["examples_per_step"] = B
+
+    if info["kind"] == "train":
+        batch_s["labels"] = jax.ShapeDtypeStruct((B,), jnp.float32)
+        batch_sh["labels"] = _ns(mesh, dp)
+        opt_s, opt_sh = _opt_for(mesh, params_s, param_sh)
+        fn = steps.dien_train_step(cfg, ADAM)
+        return CellSpec(cfg.name, shape_id, "train", fn,
+                        (params_s, opt_s, batch_s),
+                        (param_sh, opt_sh, batch_sh), meta)
+    fn = steps.dien_serve_step(cfg)
+    return CellSpec(cfg.name, shape_id, info["kind"], fn,
+                    (params_s, batch_s), (param_sh, batch_sh), meta)

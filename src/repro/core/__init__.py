@@ -1,0 +1,23 @@
+"""BEBR core: recurrent binarization, contrastive training, compatibility."""
+
+from repro.core.binarize_lib import (
+    BinarizerConfig,
+    binarize,
+    binarize_eval,
+    code_affine_constants,
+    codes_to_values,
+    init_binarizer,
+    pack_bitplanes,
+    pack_codes,
+    ste_sign,
+    unpack_bitplanes,
+    unpack_codes,
+    values_to_codes,
+)
+from repro.core.trainer import (
+    TrainConfig,
+    TrainState,
+    bc_train_step,
+    init_train_state,
+    train_step,
+)

@@ -1,0 +1,294 @@
+"""Recurrent binarization module (BEBR §3.2.1).
+
+The module phi maps a full-precision embedding f in R^d to a recurrent
+binary embedding with ``m * n_levels`` bits (paper: n_levels = u + 1):
+
+    b_0   = sign(W_0(f))                         # base binarization
+    f̂_t   = normalize(R_t(b_t))                  # reconstruction
+    r_t   = sign(W_{t+1}(f - f̂_t))               # residual binarization
+    b_t+1 = b_t + 2^{-(t+1)} r_t
+
+``W_*`` and ``R_*`` are MLPs (linear -> batchnorm -> ReLU -> linear),
+richer than the plain linear maps of Shan et al. [44]. ``sign`` uses a
+straight-through estimator so the module is trainable end to end.
+
+Everything is a pure function over an explicit parameter pytree so it
+composes with pjit/shard_map without framework baggage.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class BinarizerConfig:
+    """Configuration of the recurrent binarization module.
+
+    Attributes:
+      input_dim: dimension d of the incoming float embeddings.
+      code_dim: m, output dimension of each binarization block.
+      n_levels: u + 1 total binary vectors (base + u residual loops).
+      hidden_dim: width of the MLP hidden layer (0 => single linear).
+      bn_momentum: batch-norm running-stat momentum.
+    """
+
+    input_dim: int
+    code_dim: int
+    n_levels: int = 4
+    hidden_dim: int = 0
+    bn_momentum: float = 0.9
+    # learnable input-alignment map (identity-initialised). Used by
+    # backward-compatible training: fold a stage-1 cross-space alignment
+    # into P and refine it jointly with L_BC (RBT-style transformation).
+    input_map: bool = False
+
+    @property
+    def total_bits(self) -> int:
+        return self.code_dim * self.n_levels
+
+    @property
+    def u(self) -> int:
+        return self.n_levels - 1
+
+
+# ---------------------------------------------------------------------------
+# Straight-through sign.
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def ste_sign(x: jax.Array) -> jax.Array:
+    """sign(x) in {-1, +1}; gradient is identity clipped to |x| <= 1."""
+    return jnp.where(x > 0, 1.0, -1.0).astype(x.dtype)
+
+
+def _ste_fwd(x):
+    return ste_sign(x), x
+
+
+def _ste_bwd(x, g):
+    return (jnp.where(jnp.abs(x) <= 1.0, g, 0.0),)
+
+
+ste_sign.defvjp(_ste_fwd, _ste_bwd)
+
+
+# ---------------------------------------------------------------------------
+# MLP block: linear -> BN -> ReLU -> linear (hidden_dim=0 => single linear).
+# ---------------------------------------------------------------------------
+
+
+def _init_linear(key, d_in, d_out, dtype=jnp.float32):
+    kw, _ = jax.random.split(key)
+    scale = jnp.sqrt(2.0 / d_in).astype(dtype)
+    return {
+        "w": jax.random.normal(kw, (d_in, d_out), dtype) * scale,
+        "b": jnp.zeros((d_out,), dtype),
+    }
+
+
+def _init_mlp(key, d_in, d_hidden, d_out, dtype=jnp.float32):
+    if d_hidden <= 0:
+        return {"out": _init_linear(key, d_in, d_out, dtype)}
+    k1, k2 = jax.random.split(key)
+    return {
+        "in": _init_linear(k1, d_in, d_hidden, dtype),
+        "bn_scale": jnp.ones((d_hidden,), dtype),
+        "bn_bias": jnp.zeros((d_hidden,), dtype),
+        "out": _init_linear(k2, d_hidden, d_out, dtype),
+    }
+
+
+def _init_mlp_state(d_hidden, dtype=jnp.float32):
+    if d_hidden <= 0:
+        return {}
+    return {
+        "bn_mean": jnp.zeros((d_hidden,), dtype),
+        "bn_var": jnp.ones((d_hidden,), dtype),
+    }
+
+
+def _apply_mlp(params, state, x, *, train: bool, momentum: float):
+    """Returns (y, new_state)."""
+    if "in" not in params:
+        y = x @ params["out"]["w"] + params["out"]["b"]
+        return y, state
+    h = x @ params["in"]["w"] + params["in"]["b"]
+    if train:
+        mean = jnp.mean(h, axis=0)
+        var = jnp.var(h, axis=0)
+        new_state = {
+            "bn_mean": momentum * state["bn_mean"] + (1 - momentum) * mean,
+            "bn_var": momentum * state["bn_var"] + (1 - momentum) * var,
+        }
+    else:
+        mean, var = state["bn_mean"], state["bn_var"]
+        new_state = state
+    h = (h - mean) * jax.lax.rsqrt(var + 1e-5)
+    h = h * params["bn_scale"] + params["bn_bias"]
+    h = jax.nn.relu(h)
+    y = h @ params["out"]["w"] + params["out"]["b"]
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Recurrent binarizer.
+# ---------------------------------------------------------------------------
+
+
+def init_binarizer(key: jax.Array, cfg: BinarizerConfig, dtype=jnp.float32) -> Tuple[Params, Params]:
+    """Initialise (params, state) for the recurrent binarizer.
+
+    params["W"][t]: binarization MLP t (d -> m), t in [0, n_levels)
+    params["R"][t]: reconstruction MLP t (m -> d), t in [0, n_levels - 1)
+    """
+    n = cfg.n_levels
+    keys = jax.random.split(key, 2 * n)
+    h = cfg.hidden_dim
+    params = {
+        "W": [_init_mlp(keys[t], cfg.input_dim, h, cfg.code_dim, dtype) for t in range(n)],
+        "R": [_init_mlp(keys[n + t], cfg.code_dim, h, cfg.input_dim, dtype) for t in range(n - 1)],
+    }
+    if cfg.input_map:
+        params["P"] = jnp.eye(cfg.input_dim, dtype=dtype)
+    state = {
+        "W": [_init_mlp_state(h, dtype) for _ in range(n)],
+        "R": [_init_mlp_state(h, dtype) for _ in range(n - 1)],
+    }
+    return params, state
+
+
+def _l2norm(x, axis=-1, eps=1e-12):
+    return x * jax.lax.rsqrt(jnp.sum(x * x, axis=axis, keepdims=True) + eps)
+
+
+def binarize(
+    params: Params,
+    state: Params,
+    f: jax.Array,
+    cfg: BinarizerConfig,
+    *,
+    train: bool = False,
+) -> Tuple[jax.Array, jax.Array, Params]:
+    """Run recurrent binarization.
+
+    Args:
+      f: [batch, input_dim] float embeddings.
+
+    Returns:
+      bits:  [batch, n_levels, code_dim] in {-1, +1} — level t holds the
+             t-th binary vector (b_0, r_0, ..., r_{u-1}).
+      b_u:   [batch, code_dim] the recurrent binary embedding (grid values).
+      new_state: updated BN running stats (== state when train=False).
+    """
+    n = cfg.n_levels
+    new_state = {"W": list(state["W"]), "R": list(state["R"])}
+    levels: List[jax.Array] = []
+
+    if cfg.input_map and "P" in params:
+        f = _l2norm(f @ params["P"])
+
+    h, new_state["W"][0] = _apply_mlp(
+        params["W"][0], state["W"][0], f, train=train, momentum=cfg.bn_momentum
+    )
+    b = ste_sign(h)
+    levels.append(b)
+    acc = b
+    for t in range(n - 1):
+        recon, new_state["R"][t] = _apply_mlp(
+            params["R"][t], state["R"][t], acc, train=train, momentum=cfg.bn_momentum
+        )
+        recon = _l2norm(recon)
+        resid = _l2norm(f) - recon
+        h, new_state["W"][t + 1] = _apply_mlp(
+            params["W"][t + 1], state["W"][t + 1], resid, train=train, momentum=cfg.bn_momentum
+        )
+        r = ste_sign(h)
+        levels.append(r)
+        acc = acc + (2.0 ** -(t + 1)) * r
+    bits = jnp.stack(levels, axis=-2)  # [batch, n_levels, m]
+    return bits, acc, new_state
+
+
+def binarize_eval(params, state, f, cfg: BinarizerConfig) -> jax.Array:
+    """Inference helper: returns only the recurrent binary embedding b_u."""
+    _, b_u, _ = binarize(params, state, f, cfg, train=False)
+    return b_u
+
+
+# ---------------------------------------------------------------------------
+# Code packing.
+#
+# bits[-1/+1] per level  <->  integer codes in [0, 2^n_levels)  <->  values.
+#
+# Identity (DESIGN.md §2): value = a * code + beta with
+#   a = 2^(2 - n_levels),  beta = -(2 - 2^(1 - n_levels))
+# (in terms of u = n_levels - 1: a = 2^(1-u), beta = -(2 - 2^-u)).
+# ---------------------------------------------------------------------------
+
+
+def code_affine_constants(n_levels: int) -> Tuple[float, float]:
+    u = n_levels - 1
+    a = 2.0 ** (1 - u)
+    beta = -(2.0 - 2.0 ** (-u))
+    return a, beta
+
+
+def pack_codes(bits: jax.Array) -> jax.Array:
+    """[-1,+1] bits [..., n_levels, m] -> integer codes [..., m] (int8).
+
+    Level 0 (the base vector) is the MSB so that the affine identity holds.
+    """
+    n = bits.shape[-2]
+    weights = (2 ** jnp.arange(n - 1, -1, -1, dtype=jnp.int32))  # [n]
+    zo = ((bits + 1.0) * 0.5).astype(jnp.int32)  # {0,1}
+    codes = jnp.tensordot(zo.swapaxes(-1, -2), weights, axes=([-1], [0]))
+    return codes.astype(jnp.int8)
+
+
+def unpack_codes(codes: jax.Array, n_levels: int) -> jax.Array:
+    """Integer codes [..., m] -> bits [..., n_levels, m] in {-1, +1}."""
+    c = codes.astype(jnp.int32)
+    shifts = jnp.arange(n_levels - 1, -1, -1, dtype=jnp.int32)  # level t -> shift n-1-t
+    planes = (c[..., None, :] >> shifts[:, None]) & 1  # [..., n_levels, m]
+    return (planes * 2 - 1).astype(jnp.float32)
+
+
+def codes_to_values(codes: jax.Array, n_levels: int) -> jax.Array:
+    """Integer codes -> recurrent binary grid values b_u (float32)."""
+    a, beta = code_affine_constants(n_levels)
+    return codes.astype(jnp.float32) * a + beta
+
+
+def values_to_codes(values: jax.Array, n_levels: int) -> jax.Array:
+    """Grid values b_u -> integer codes (exact for on-grid values)."""
+    a, beta = code_affine_constants(n_levels)
+    return jnp.round((values - beta) / a).astype(jnp.int8)
+
+
+def pack_bitplanes(bits: jax.Array) -> jax.Array:
+    """[-1,+1] bits [..., n_levels, m] -> packed uint32 [..., n_levels, m/32].
+
+    Used by the xor+popcount baseline (kernels/binary_dot). m must be a
+    multiple of 32. Bit j of word w holds dimension w*32 + j.
+    """
+    *lead, n, m = bits.shape
+    assert m % 32 == 0, f"code_dim {m} must be a multiple of 32"
+    zo = ((bits + 1.0) * 0.5).astype(jnp.uint32).reshape(*lead, n, m // 32, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(zo << shifts, axis=-1).astype(jnp.uint32)
+
+
+def unpack_bitplanes(packed: jax.Array, m: int) -> jax.Array:
+    """Packed uint32 [..., n_levels, m/32] -> bits [..., n_levels, m]."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    zo = (packed[..., None] >> shifts) & jnp.uint32(1)
+    *lead, n, words, _ = zo.shape
+    return (zo.reshape(*lead, n, words * 32)[..., :m].astype(jnp.float32) * 2 - 1)

@@ -1,0 +1,139 @@
+"""Contrastive objectives for embedding-to-embedding binarizer training.
+
+Implements the paper's Eq. (4)/(5): NCE over cosine similarity of recurrent
+binary embeddings, with a MoCo-style momentum queue and top-k hardest
+negative mining, plus the backward-compatible loss of Eq. (10).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine(a: jax.Array, b: jax.Array, eps: float = 1e-12) -> jax.Array:
+    """Row-wise cosine similarity matrix [A, B]."""
+    a = a * jax.lax.rsqrt(jnp.sum(a * a, -1, keepdims=True) + eps)
+    b = b * jax.lax.rsqrt(jnp.sum(b * b, -1, keepdims=True) + eps)
+    return a @ b.T
+
+
+def info_nce(
+    anchors: jax.Array,
+    positives: jax.Array,
+    negatives: jax.Array,
+    *,
+    temperature: float = 0.07,
+) -> jax.Array:
+    """NCE loss (Eq. 4) with explicit negatives.
+
+    Args:
+      anchors:   [B, m] binary (or float) embeddings of phi(f).
+      positives: [B, m] embeddings of phi(k_plus), row-aligned with anchors.
+      negatives: [B, K, m] per-anchor negative embeddings kappa(Q).
+    """
+    pos = jnp.sum(
+        _unit(anchors) * _unit(positives), axis=-1, keepdims=True
+    )  # [B, 1]
+    neg = jnp.einsum("bm,bkm->bk", _unit(anchors), _unit(negatives))  # [B, K]
+    logits = jnp.concatenate([pos, neg], axis=-1) / temperature
+    return -jnp.mean(jax.nn.log_softmax(logits, axis=-1)[:, 0])
+
+
+def _unit(x, eps=1e-12):
+    return x * jax.lax.rsqrt(jnp.sum(x * x, -1, keepdims=True) + eps)
+
+
+# ---------------------------------------------------------------------------
+# Momentum queue with top-k hard-negative mining (Eq. 5).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QueueConfig:
+    length: int  # L, ~16x batch
+    dim: int  # m (code_dim of the binarizer output)
+    top_k: int  # hardest negatives per anchor
+
+
+def init_queue(cfg: QueueConfig) -> Dict[str, jax.Array]:
+    """The queue stores momentum-encoded binary embeddings.
+
+    ``filled`` counts valid rows so that cold-start batches do not mine
+    garbage; unfilled rows are masked out of the top-k.
+    """
+    return {
+        "buf": jnp.zeros((cfg.length, cfg.dim), jnp.float32),
+        "ptr": jnp.zeros((), jnp.int32),
+        "filled": jnp.zeros((), jnp.int32),
+    }
+
+
+def queue_push(queue: Dict[str, jax.Array], batch: jax.Array) -> Dict[str, jax.Array]:
+    """FIFO push of a batch (oldest entries overwritten). jit-safe."""
+    length = queue["buf"].shape[0]
+    bsz = batch.shape[0]
+    idx = (queue["ptr"] + jnp.arange(bsz)) % length
+    buf = queue["buf"].at[idx].set(batch)
+    return {
+        "buf": buf,
+        "ptr": (queue["ptr"] + bsz) % length,
+        "filled": jnp.minimum(queue["filled"] + bsz, length),
+    }
+
+
+def mine_hard_negatives(
+    queue: Dict[str, jax.Array],
+    anchors: jax.Array,
+    top_k: int,
+    *,
+    positives: jax.Array | None = None,
+    pos_exclusion_sim: float = 0.999,
+) -> jax.Array:
+    """kappa(Q): top-k highest-cosine queue entries per anchor.
+
+    Entries nearly identical to the anchor's positive (possible duplicates
+    pushed in an earlier step) are excluded to avoid false negatives.
+
+    Returns [B, top_k, dim].
+    """
+    sims = cosine(anchors, queue["buf"])  # [B, L]
+    valid = jnp.arange(queue["buf"].shape[0]) < queue["filled"]
+    sims = jnp.where(valid[None, :], sims, -jnp.inf)
+    if positives is not None:
+        pos_sims = cosine(positives, queue["buf"])
+        sims = jnp.where(pos_sims > pos_exclusion_sim, -jnp.inf, sims)
+    _, idx = jax.lax.top_k(sims, top_k)  # [B, top_k]
+    return queue["buf"][idx]
+
+
+# ---------------------------------------------------------------------------
+# Momentum (EMA) parameter update for the key encoder.
+# ---------------------------------------------------------------------------
+
+
+def ema_update(online_params, momentum_params, decay: float = 0.999):
+    return jax.tree_util.tree_map(
+        lambda m, o: decay * m + (1.0 - decay) * o, momentum_params, online_params
+    )
+
+
+# ---------------------------------------------------------------------------
+# Backward-compatible NCE (Eq. 10): new anchors vs old-encoded keys.
+# ---------------------------------------------------------------------------
+
+
+def backward_compat_nce(
+    new_anchors: jax.Array,
+    old_positives: jax.Array,
+    old_negatives: jax.Array,
+    *,
+    temperature: float = 0.07,
+) -> jax.Array:
+    """L_BC — identical form to info_nce but keys come from phi_old."""
+    return info_nce(
+        new_anchors, old_positives, old_negatives, temperature=temperature
+    )

@@ -1,0 +1,186 @@
+"""Task-agnostic embedding-to-embedding binarizer training (BEBR §3.2.2-3).
+
+Implements:
+  * the standard training loop: anchors/positives are float embeddings
+    (two views of the same item or query-doc pairs); the online binarizer
+    encodes anchors, a momentum copy encodes positives/queue keys;
+  * queue-based global hard negative mining (top-k in a MoCo queue);
+  * backward-compatible training (§3.2.3): L + L_BC against a frozen
+    phi_old, queue keys encoded by phi_old.
+
+The step functions are pure and jit/pjit-friendly; distribution is a
+NamedSharding over the ``data`` axis applied by the caller (launch/train.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binarize_lib as B
+import repro.core.losses as L
+from repro.train import optim
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    binarizer: B.BinarizerConfig
+    queue: L.QueueConfig
+    temperature: float = 0.07
+    ema_decay: float = 0.999
+    adam: optim.AdamConfig = dataclasses.field(
+        default_factory=lambda: optim.AdamConfig(lr=0.02, clip_norm=5.0)
+    )
+    bc_weight: float = 1.0  # weight on L_BC during compatible training
+    # BC mining: queue entries this similar to the positive are treated as
+    # potential duplicates/same-item views and excluded from negatives
+    # (hard negatives at ~0.95 cosine to the positive give contradictory
+    # alignment gradients and stall L_BC).
+    bc_pos_exclusion: float = 0.85
+    # Influence weight (Shen et al. [45]): direct same-item cosine
+    # maximisation between phi_new and phi_old codes. The NCE term alone
+    # plateaus once the positive clears the mined negatives; the influence
+    # term keeps sharpening point-wise alignment past that plateau.
+    bc_influence_weight: float = 2.0
+
+
+class TrainState(NamedTuple):
+    params: Any
+    bn_state: Any
+    m_params: Any  # momentum (key) encoder params
+    m_bn_state: Any
+    opt_state: optim.AdamState
+    queue: Dict[str, jax.Array]
+    step: jax.Array
+
+
+def init_train_state(key: jax.Array, cfg: TrainConfig) -> TrainState:
+    params, bn_state = B.init_binarizer(key, cfg.binarizer)
+    return TrainState(
+        params=params,
+        bn_state=bn_state,
+        m_params=jax.tree_util.tree_map(jnp.copy, params),
+        m_bn_state=jax.tree_util.tree_map(jnp.copy, bn_state),
+        opt_state=optim.adam_init(params),
+        queue=L.init_queue(cfg.queue),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def _encode(params, bn_state, f, cfg: TrainConfig, train: bool):
+    bits, b_u, new_state = B.binarize(params, bn_state, f, cfg.binarizer, train=train)
+    del bits
+    return b_u, new_state
+
+
+def train_step(
+    state: TrainState,
+    anchors: jax.Array,
+    positives: jax.Array,
+    cfg: TrainConfig,
+) -> Tuple[TrainState, Dict[str, jax.Array]]:
+    """One emb2emb contrastive step (Eq. 4-5)."""
+
+    # Momentum encoder produces keys (positives + queue refresh), no grad.
+    keys_pos, m_bn_state = _encode(
+        state.m_params, state.m_bn_state, positives, cfg, train=True
+    )
+    keys_pos = jax.lax.stop_gradient(keys_pos)
+
+    negatives = L.mine_hard_negatives(
+        state.queue, keys_pos, cfg.queue.top_k, positives=keys_pos
+    )
+
+    def loss_fn(params):
+        enc, bn_state = _encode(params, state.bn_state, anchors, cfg, train=True)
+        loss = L.info_nce(enc, keys_pos, negatives, temperature=cfg.temperature)
+        return loss, bn_state
+
+    (loss, bn_state), grads = jax.value_and_grad(loss_fn, has_aux=True)(state.params)
+    new_params, opt_state = optim.adam_update(grads, state.opt_state, state.params, cfg.adam)
+    m_params = L.ema_update(new_params, state.m_params, cfg.ema_decay)
+    queue = L.queue_push(state.queue, keys_pos)
+
+    new_state = TrainState(
+        params=new_params,
+        bn_state=bn_state,
+        m_params=m_params,
+        m_bn_state=m_bn_state,
+        opt_state=opt_state,
+        queue=queue,
+        step=state.step + 1,
+    )
+    metrics = {"loss": loss, "grad_norm": optim.global_norm(grads)}
+    return new_state, metrics
+
+
+def bc_train_step(
+    state: TrainState,
+    old_params: Any,
+    old_bn_state: Any,
+    anchors: jax.Array,
+    positives: jax.Array,
+    cfg: TrainConfig,
+) -> Tuple[TrainState, Dict[str, jax.Array]]:
+    """Backward-compatible step (Eq. 9-10): arg min L + L_BC.
+
+    ``anchors`` are embeddings from the (possibly new) backbone phi-tilde;
+    ``positives`` are embeddings the *old* stack would see. phi_old is
+    frozen; its codes populate the BC queue so new queries learn to rank
+    correctly against the historical binary index.
+    """
+    # Old-model keys (the frozen index side).
+    old_pos, _ = _encode(old_params, old_bn_state, positives, cfg, train=False)
+    old_pos = jax.lax.stop_gradient(old_pos)
+    old_negatives = L.mine_hard_negatives(
+        state.queue, old_pos, cfg.queue.top_k, positives=old_pos,
+        pos_exclusion_sim=cfg.bc_pos_exclusion,
+    )
+
+    # New-model momentum keys for the self-discrimination term.
+    new_pos, m_bn_state = _encode(
+        state.m_params, state.m_bn_state, positives, cfg, train=True
+    )
+    new_pos = jax.lax.stop_gradient(new_pos)
+    # Self negatives must live in the NEW space (other keys in the batch):
+    # mixing old-space negatives into the self softmax would repel the new
+    # embedding space away from the old one, fighting L_BC.
+    B = new_pos.shape[0]
+    new_negatives = jnp.stack(
+        [jnp.roll(new_pos, s, axis=0) for s in range(1, min(B, 8))], axis=1
+    )
+
+    def loss_fn(params):
+        enc, bn_state = _encode(params, state.bn_state, anchors, cfg, train=True)
+        l_self = L.info_nce(enc, new_pos, new_negatives, temperature=cfg.temperature)
+        l_bc = L.backward_compat_nce(
+            enc, old_pos, old_negatives, temperature=cfg.temperature
+        )
+        # influence term: point-wise alignment to the frozen old codes
+        enc_u = enc * jax.lax.rsqrt(jnp.sum(enc * enc, -1, keepdims=True) + 1e-12)
+        old_u = old_pos * jax.lax.rsqrt(
+            jnp.sum(old_pos * old_pos, -1, keepdims=True) + 1e-12)
+        l_inf = 1.0 - jnp.mean(jnp.sum(enc_u * old_u, -1))
+        total = l_self + cfg.bc_weight * l_bc + cfg.bc_influence_weight * l_inf
+        return total, (bn_state, l_self, l_bc)
+
+    (loss, (bn_state, l_self, l_bc)), grads = jax.value_and_grad(
+        loss_fn, has_aux=True
+    )(state.params)
+    new_params, opt_state = optim.adam_update(grads, state.opt_state, state.params, cfg.adam)
+    m_params = L.ema_update(new_params, state.m_params, cfg.ema_decay)
+    queue = L.queue_push(state.queue, old_pos)  # queue holds OLD-space keys
+
+    new_state = TrainState(
+        params=new_params,
+        bn_state=bn_state,
+        m_params=m_params,
+        m_bn_state=m_bn_state,
+        opt_state=opt_state,
+        queue=queue,
+        step=state.step + 1,
+    )
+    return new_state, {"loss": loss, "loss_self": l_self, "loss_bc": l_bc}

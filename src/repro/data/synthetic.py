@@ -1,0 +1,232 @@
+"""Synthetic data pipeline: deterministic, restart-safe batches per step.
+
+Every generator is a pure function of (step, shape/config) via
+jax.random.fold_in — re-running step i after a restart reproduces the
+exact batch, which is what makes checkpoint/restart bitwise reproducible.
+
+Also provides the clustered-embedding corpora used by the BEBR
+benchmarks (stand-ins for the private Sogou / video-copyright datasets,
+statistics matched to the paper: 256-dim / 8192-bit and 128-dim /
+4096-bit float vectors with query/doc positive pairs).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _key(step: int, salt: int = 0) -> jax.Array:
+    return jax.random.fold_in(jax.random.PRNGKey(20230713 + salt), step)
+
+
+# ---------------------------------------------------------------------------
+# Per-family train batches.
+# ---------------------------------------------------------------------------
+
+
+def lm_batch(step: int, batch: int, seq: int, vocab: int) -> Dict[str, jax.Array]:
+    k = _key(step)
+    tokens = jax.random.randint(k, (batch, seq + 1), 0, vocab, jnp.int32)
+    return {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
+
+
+def gnn_batch(step: int, n_nodes: int, n_edges: int, cfg) -> Dict[str, jax.Array]:
+    k = _key(step, 1)
+    ks = jax.random.split(k, 5)
+    return {
+        "node_feat": jax.random.normal(ks[0], (n_nodes, cfg.d_node_in)),
+        "edge_feat": jax.random.normal(ks[1], (n_edges, cfg.d_edge_in)),
+        "senders": jax.random.randint(ks[2], (n_edges,), 0, n_nodes, jnp.int32),
+        "receivers": jax.random.randint(ks[3], (n_edges,), 0, n_nodes, jnp.int32),
+        "edge_mask": jnp.ones((n_edges,), jnp.bool_),
+        "targets": jax.random.normal(ks[4], (n_nodes, cfg.d_out)),
+    }
+
+
+def dlrm_batch(step: int, batch: int, cfg) -> Dict[str, jax.Array]:
+    k = _key(step, 2)
+    ks = jax.random.split(k, 3)
+    return {
+        "dense": jax.random.normal(ks[0], (batch, cfg.n_dense)),
+        "sparse_ids": jax.random.randint(
+            ks[1], (batch, cfg.n_sparse), 0, cfg.table_vocab, jnp.int32
+        ),
+        "labels": jax.random.bernoulli(ks[2], 0.25, (batch,)).astype(jnp.float32),
+    }
+
+
+def tt_batch(step: int, batch: int, cfg) -> Dict[str, jax.Array]:
+    k = _key(step, 3)
+    ks = jax.random.split(k, 3)
+    return {
+        "hist_ids": jax.random.randint(
+            ks[0], (batch, cfg.hist_len), 0, cfg.user_vocab, jnp.int32
+        ),
+        "hist_mask": jnp.ones((batch, cfg.hist_len), jnp.float32),
+        "pos_items": jax.random.randint(ks[1], (batch,), 0, cfg.item_vocab, jnp.int32),
+        "item_logq": jnp.zeros((batch,), jnp.float32),
+    }
+
+
+def mind_batch(step: int, batch: int, cfg) -> Dict[str, jax.Array]:
+    k = _key(step, 4)
+    ks = jax.random.split(k, 3)
+    return {
+        "hist_ids": jax.random.randint(
+            ks[0], (batch, cfg.hist_len), 0, cfg.item_vocab, jnp.int32
+        ),
+        "hist_mask": jnp.ones((batch, cfg.hist_len), jnp.float32),
+        "pos_items": jax.random.randint(ks[1], (batch,), 0, cfg.item_vocab, jnp.int32),
+        "neg_items": jax.random.randint(ks[2], (batch, 8), 0, cfg.item_vocab, jnp.int32),
+    }
+
+
+def dien_batch(step: int, batch: int, cfg) -> Dict[str, jax.Array]:
+    k = _key(step, 5)
+    ks = jax.random.split(k, 5)
+    return {
+        "hist_items": jax.random.randint(
+            ks[0], (batch, cfg.seq_len), 0, cfg.item_vocab, jnp.int32
+        ),
+        "hist_cates": jax.random.randint(
+            ks[1], (batch, cfg.seq_len), 0, cfg.cate_vocab, jnp.int32
+        ),
+        "hist_mask": jnp.ones((batch, cfg.seq_len), jnp.float32),
+        "target_item": jax.random.randint(ks[2], (batch,), 0, cfg.item_vocab, jnp.int32),
+        "target_cate": jax.random.randint(ks[3], (batch,), 0, cfg.cate_vocab, jnp.int32),
+        "labels": jax.random.bernoulli(ks[4], 0.3, (batch,)).astype(jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Clustered embedding corpora for BEBR experiments.
+# ---------------------------------------------------------------------------
+
+
+def clustered_corpus(
+    seed: int,
+    n_docs: int,
+    n_queries: int,
+    dim: int,
+    n_clusters: int = 64,
+    noise: float = 0.25,
+    query_noise: float = 0.15,
+    spectrum: float = 0.0,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Synthetic EBR corpus with cluster structure + query/doc positives.
+
+    Returns (doc_emb [N, dim], query_emb [Q, dim], gt [Q] index of the
+    positive doc for each query). Queries are noisy views of their positive
+    document — matching the paper's web-search setting where the relevant
+    doc is semantically near the query in the backbone's latent space.
+
+    ``spectrum`` > 0 applies a decaying per-axis scale 1/(1+i)^spectrum
+    followed by a random rotation — the anisotropic, effectively low-rank
+    geometry of real backbone embeddings (where learned binarization beats
+    random-hyperplane hashing; spectrum=0 keeps the isotropic toy geometry
+    where 1-bit hashing at equal bit budget is near-optimal).
+    """
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_clusters, dim)).astype(np.float32)
+    assign = rng.integers(0, n_clusters, n_docs)
+    docs = centers[assign] + noise * rng.normal(size=(n_docs, dim)).astype(np.float32)
+    gt = rng.choice(n_docs, size=n_queries, replace=False)
+    queries = docs[gt] + query_noise * rng.normal(size=(n_queries, dim)).astype(np.float32)
+    if spectrum > 0:
+        scales = (1.0 / (1.0 + np.arange(dim)) ** spectrum).astype(np.float32)
+        rot, _ = np.linalg.qr(rng.normal(size=(dim, dim)).astype(np.float32))
+        docs = (docs * scales) @ rot
+        queries = (queries * scales) @ rot
+    docs /= np.linalg.norm(docs, axis=-1, keepdims=True) + 1e-12
+    queries /= np.linalg.norm(queries, axis=-1, keepdims=True) + 1e-12
+    return docs, queries, gt
+
+
+def upgraded_corpus(
+    seed: int,
+    n_docs: int,
+    n_queries: int,
+    dim: int,
+    n_clusters: int = 96,
+    old_noise: float = 0.30,
+    new_noise: float = 0.15,
+    old_qnoise: float = 0.25,
+    new_qnoise: float = 0.12,
+    drift: float = 0.3,
+    nonlinear: float = 0.3,
+):
+    """Paired corpora for backbone-upgrade experiments: the same items
+    embedded by an OLD backbone (noisier) and a NEW backbone (cleaner,
+    drifted space). Mirrors the paper's Table 4 setting where the upgraded
+    model is strictly better, so compatible training can EXCEED the
+    (old, old) baseline.
+
+    Returns (old_docs, old_queries, new_docs, new_queries, gt).
+    """
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_clusters, dim)).astype(np.float32)
+    assign = rng.integers(0, n_clusters, n_docs)
+    item_id = rng.normal(size=(n_docs, dim)).astype(np.float32)
+
+    def unit(x):
+        return x / (np.linalg.norm(x, axis=-1, keepdims=True) + 1e-12)
+
+    # intrinsic item identity is shared; noise level models encoder quality
+    old_raw = centers[assign] + old_noise * item_id
+    new_raw = centers[assign] + new_noise * item_id
+
+    gt = rng.choice(n_docs, size=n_queries, replace=False)
+    qnoise_dir = rng.normal(size=(n_queries, dim)).astype(np.float32)
+
+    old_docs = unit(old_raw)
+    new_base = unit(new_raw)
+    old_queries = unit(old_raw[gt] + old_qnoise * qnoise_dir)
+    new_queries_base = unit(new_raw[gt] + new_qnoise * qnoise_dir)
+
+    # the new backbone lives in a drifted space
+    G = rng.normal(size=(dim, dim)).astype(np.float32) / np.sqrt(dim)
+    A = rng.normal(size=(dim, dim)).astype(np.float32) / np.sqrt(dim)
+    B = rng.normal(size=(dim, dim)).astype(np.float32) / np.sqrt(dim)
+
+    def to_new_space(e):
+        out = e + drift * e @ G + nonlinear * np.tanh(e @ A) @ B
+        return out / (np.linalg.norm(out, axis=-1, keepdims=True) + 1e-12)
+
+    return (old_docs, old_queries, to_new_space(new_base),
+            to_new_space(new_queries_base), gt)
+
+
+def backbone_upgrade(
+    emb: np.ndarray, seed: int, *, strength: float = 0.4,
+    nonlinear: float = 0.15,
+) -> np.ndarray:
+    """Simulate a backbone model upgrade: the new float space is a
+    near-identity linear drift of the old one plus a small nonlinear
+    component (what a finetuned v2 encoder looks like relative to v1 —
+    strongly correlated, not identical, not linearly reachable)."""
+    rng = np.random.default_rng(seed)
+    d = emb.shape[-1]
+    G = rng.normal(size=(d, d)).astype(np.float32) / np.sqrt(d)
+    A = rng.normal(size=(d, d)).astype(np.float32) / np.sqrt(d)
+    B = rng.normal(size=(d, d)).astype(np.float32) / np.sqrt(d)
+    out = emb + strength * emb @ G + nonlinear * np.tanh(emb @ A) @ B
+    return out / (np.linalg.norm(out, axis=-1, keepdims=True) + 1e-12)
+
+
+def pair_batches(
+    docs: np.ndarray, seed: int, batch: int, noise: float = 0.1
+):
+    """Infinite generator of (anchor, positive) float-embedding pairs for
+    emb2emb binarizer training (two noisy views of a sampled doc)."""
+    rng = np.random.default_rng(seed)
+    n, d = docs.shape
+    while True:
+        idx = rng.integers(0, n, batch)
+        base = docs[idx]
+        a = base + noise * rng.normal(size=(batch, d)).astype(np.float32)
+        p = base + noise * rng.normal(size=(batch, d)).astype(np.float32)
+        yield jnp.asarray(a), jnp.asarray(p)

@@ -1,0 +1,94 @@
+"""Flat (exhaustive) indexes over three embedding forms.
+
+Mirrors the paper's Table 5 contenders:
+  * FlatFloat   — full-precision cosine (the "float / flat" row).
+  * FlatBitwise — recurrent binary, xor+popcount (Shan et al. [44] on CPU).
+  * FlatSDC     — recurrent binary, SDC kernel (ours).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.binarize_lib import pack_bitplanes, unpack_codes
+from repro.kernels.binary_dot.ops import binary_dot_search
+from repro.kernels.sdc import ref as sdc_ref
+from repro.kernels.sdc.ops import sdc_search
+
+
+@dataclasses.dataclass
+class FlatFloat:
+    emb: jax.Array  # [N, D] float, L2-normalised at build
+
+    @staticmethod
+    def build(emb: jax.Array) -> "FlatFloat":
+        emb = emb * jax.lax.rsqrt(jnp.sum(emb * emb, -1, keepdims=True) + 1e-12)
+        return FlatFloat(emb=emb)
+
+    def search(self, q: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+        q = q * jax.lax.rsqrt(jnp.sum(q * q, -1, keepdims=True) + 1e-12)
+        scores = q @ self.emb.T
+        return jax.lax.top_k(scores, k)
+
+    def nbytes(self) -> int:
+        return self.emb.size * self.emb.dtype.itemsize
+
+
+@dataclasses.dataclass
+class FlatSDC:
+    codes: jax.Array  # [N, m] int8
+    inv_norm: jax.Array  # [N] f32
+    n_levels: int
+    interpret: bool = True  # CPU container; False on real TPU
+
+    @staticmethod
+    def build(codes: jax.Array, n_levels: int, interpret: bool = True) -> "FlatSDC":
+        inv = sdc_ref.doc_inv_norms(codes, n_levels)
+        return FlatSDC(codes=codes, inv_norm=inv, n_levels=n_levels, interpret=interpret)
+
+    def search(self, q_codes: jax.Array, k: int, block_n: int = 512):
+        return sdc_search(
+            q_codes,
+            self.codes,
+            self.inv_norm,
+            n_levels=self.n_levels,
+            k=k,
+            block_q=8,
+            block_n=block_n,
+            interpret=self.interpret,
+        )
+
+    def nbytes(self) -> int:
+        # 4-bit codes pack two dims per byte on disk; +4B quantised norm.
+        packed_codes = (self.codes.shape[1] * self.n_levels + 7) // 8
+        return self.codes.shape[0] * (packed_codes + 4)
+
+
+@dataclasses.dataclass
+class FlatBitwise:
+    packed: jax.Array  # [N, n_levels, m/32] uint32
+    m: int
+    n_levels: int
+    interpret: bool = True
+
+    @staticmethod
+    def build(codes: jax.Array, n_levels: int, interpret: bool = True) -> "FlatBitwise":
+        bits = unpack_codes(codes, n_levels)
+        return FlatBitwise(
+            packed=pack_bitplanes(bits), m=codes.shape[1], n_levels=n_levels,
+            interpret=interpret,
+        )
+
+    def search(self, q_codes: jax.Array, k: int):
+        q_bits = unpack_codes(q_codes, self.n_levels)
+        q_packed = pack_bitplanes(q_bits)
+        return binary_dot_search(
+            q_packed, self.packed, m=self.m, k=k, interpret=self.interpret
+        )
+
+    def nbytes(self) -> int:
+        return self.packed.size * 4

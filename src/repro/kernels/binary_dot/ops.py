@@ -1,0 +1,43 @@
+"""Public wrapper for the bitwise baseline: padding + top-k search."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.binary_dot.kernel import binary_dot
+
+NEG_INF = -1e30
+
+
+@functools.partial(
+    jax.jit, static_argnames=("m", "k", "block_q", "block_n", "interpret")
+)
+def binary_dot_search(
+    q_packed: jax.Array,
+    d_packed: jax.Array,
+    *,
+    m: int,
+    k: int,
+    block_q: int = 8,
+    block_n: int = 128,
+    interpret: bool = False,
+):
+    """Top-k exhaustive search with the xor+popcount distance."""
+    Q0, N0 = q_packed.shape[0], d_packed.shape[0]
+    pq = (-Q0) % block_q
+    pn = (-N0) % block_n
+    if pq:
+        q_packed = jnp.pad(q_packed, ((0, pq), (0, 0), (0, 0)))
+    if pn:
+        d_packed = jnp.pad(d_packed, ((0, pn), (0, 0), (0, 0)))
+    scores = binary_dot(
+        q_packed, d_packed, m=m, block_q=block_q, block_n=block_n,
+        interpret=interpret,
+    )
+    valid = jnp.arange(scores.shape[1]) < N0
+    scores = jnp.where(valid[None, :], scores, NEG_INF)
+    vals, idx = jax.lax.top_k(scores, k)
+    return vals[:Q0], idx[:Q0]

@@ -1,0 +1,32 @@
+"""Oracle for the bitwise recurrent-binary dot product (paper Eq. 11-12).
+
+Ground truth: unpack the +-1 bit planes and evaluate
+
+  <b_u^q, b_u^d> = sum_{s,t} 2^{-(s+t)} (bits_s^q . bits_t^d)
+
+which equals the dot of the grid values (checked against sdc ref).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.binarize_lib import unpack_bitplanes
+
+
+def binary_dot_ref(q_packed: jax.Array, d_packed: jax.Array, m: int) -> jax.Array:
+    """Scores [Q, N] from packed uint32 bit planes.
+
+    Args:
+      q_packed: [Q, n_levels, W] uint32, W = m // 32.
+      d_packed: [N, n_levels, W] uint32.
+      m: code dimension.
+    """
+    qb = unpack_bitplanes(q_packed, m)  # [Q, n, m] in {-1, +1}
+    db = unpack_bitplanes(d_packed, m)
+    n = qb.shape[1]
+    w_q = 2.0 ** -jnp.arange(n)  # level weights
+    vq = jnp.einsum("qnm,n->qm", qb, w_q)
+    vd = jnp.einsum("dnm,n->dm", db, w_q)
+    return vq @ vd.T

@@ -1,0 +1,31 @@
+"""Public wrapper: pads batch and dispatches to the fused kernel, with a
+pure-XLA fallback for shapes where the kernel is not profitable."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dot_interact.kernel import dot_interact
+from repro.kernels.dot_interact.ref import dot_interact_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret", "use_kernel"))
+def dot_interaction(
+    emb: jax.Array,
+    *,
+    block_b: int = 128,
+    interpret: bool = False,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Fused DLRM feature interaction with batch padding."""
+    if not use_kernel:
+        return dot_interact_ref(emb)
+    B = emb.shape[0]
+    pad = (-B) % block_b
+    if pad:
+        emb = jnp.pad(emb, ((0, pad), (0, 0), (0, 0)))
+    out = dot_interact(emb, block_b=block_b, interpret=interpret)
+    return out[:B]

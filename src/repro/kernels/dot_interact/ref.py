@@ -1,0 +1,26 @@
+"""Oracle for DLRM dot-interaction (arXiv:1906.00091 §2).
+
+Given per-example feature embeddings E in [B, F, D] (dense-bottom output +
+sparse embedding-bag outputs stacked), the interaction op is the strictly
+lower triangle of the Gram matrix E @ E^T, flattened per example and
+concatenated with the dense feature.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tril_indices(num_feat: int):
+    """Strictly-lower-triangle (i > j) index pair arrays, static."""
+    rows, cols = np.tril_indices(num_feat, k=-1)
+    return jnp.asarray(rows), jnp.asarray(cols)
+
+
+def dot_interact_ref(emb: jax.Array) -> jax.Array:
+    """[B, F, D] -> [B, F*(F-1)//2] pairwise dots (i > j)."""
+    gram = jnp.einsum("bfd,bgd->bfg", emb, emb)
+    rows, cols = tril_indices(emb.shape[1])
+    return gram[:, rows, cols]

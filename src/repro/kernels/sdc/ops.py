@@ -1,0 +1,96 @@
+"""jit'd public wrappers around the SDC kernel: padding, top-k search."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sdc import ref as sdc_ref_mod
+from repro.kernels.sdc.sdc import sdc_scores, sdc_topk
+
+NEG_INF = -1e30
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int, value=0):
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), n
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_levels", "k", "block_q", "block_n", "interpret", "fused"),
+)
+def sdc_search(
+    q_codes: jax.Array,
+    d_codes: jax.Array,
+    d_inv_norm: jax.Array,
+    *,
+    n_levels: int,
+    k: int,
+    block_q: int = 128,
+    block_n: int = 512,
+    interpret: bool = False,
+    fused: bool = True,
+):
+    """Top-k SDC search of queries against a code corpus.
+
+    Args:
+      q_codes: [Q, D] int8 recurrent-binary codes of queries.
+      d_codes: [N, D] int8 codes of documents.
+      d_inv_norm: [N] f32 reciprocal doc-value norms.
+      fused: use the fused scan+top-k kernel (no [Q, N] materialisation).
+
+    Returns:
+      (scores [Q, k], indices [Q, k]); padded docs never appear (their
+      inv-norm is forced to 0 and score to -inf).
+    """
+    Q0 = q_codes.shape[0]
+    q_codes, _ = _pad_to(q_codes, 0, block_q)
+    d_codes, N0 = _pad_to(d_codes, 0, block_n)
+    d_inv_norm, _ = _pad_to(d_inv_norm, 0, block_n)
+    # Force padded docs out of the ranking.
+    valid = jnp.arange(d_codes.shape[0]) < N0
+    d_inv_norm = jnp.where(valid, d_inv_norm, 0.0)
+
+    if fused:
+        vals, idx = sdc_topk(
+            q_codes,
+            d_codes,
+            d_inv_norm,
+            n_levels=n_levels,
+            k=k,
+            block_q=block_q,
+            block_n=max(block_n, k),
+            interpret=interpret,
+        )
+        pad_score = jnp.where(idx < N0, vals, NEG_INF)
+        # Re-sort in case padded entries (score D*beta^2*0 = 0) leaked in.
+        vals2, order = jax.lax.top_k(pad_score, k)
+        idx2 = jnp.take_along_axis(idx, order, axis=-1)
+        return vals2[:Q0], idx2[:Q0]
+
+    scores = sdc_scores(
+        q_codes,
+        d_codes,
+        d_inv_norm,
+        n_levels=n_levels,
+        block_q=block_q,
+        block_n=block_n,
+        interpret=interpret,
+    )
+    scores = jnp.where(valid[None, :], scores, NEG_INF)
+    vals, idx = jax.lax.top_k(scores, k)
+    return vals[:Q0], idx[:Q0]
+
+
+def sdc_search_ref(q_codes, d_codes, n_levels: int, k: int):
+    """Oracle top-k via the exact reference (for tests/benchmarks)."""
+    scores = sdc_ref_mod.sdc_ref(q_codes, d_codes, n_levels)
+    return jax.lax.top_k(scores, k)

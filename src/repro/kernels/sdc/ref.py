@@ -1,0 +1,125 @@
+"""Pure-jnp oracles for Symmetric Distance Calculation (SDC).
+
+Three references:
+  * sdc_ref          — exact: reconstruct grid values, scaled dot product.
+                       This is the ground truth the Pallas kernel must match
+                       bit-exactly (all arithmetic is exact in int32/f32).
+  * sdc_ref_affine   — the affine-identity formulation (DESIGN.md §2) in
+                       plain jnp; proves the identity the kernel exploits.
+  * sdc_ref_lut      — faithful emulation of the paper's CPU algorithm:
+                       per-query int8-quantized 16-entry lookup tables per
+                       dimension, gathered by 4-bit code, saturating adds.
+                       Used by benchmarks to quantify the extra error the
+                       paper's int8 LUTs introduce (our MXU path has none).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.binarize_lib import code_affine_constants, codes_to_values
+
+
+def doc_inv_norms(d_codes: jax.Array, n_levels: int) -> jax.Array:
+    """Reciprocal L2 norms of document grid values (paper stores these
+    quantized alongside each inverted-list entry)."""
+    v = codes_to_values(d_codes, n_levels)
+    return jax.lax.rsqrt(jnp.sum(v * v, axis=-1) + 1e-12)
+
+
+def sdc_ref(
+    q_codes: jax.Array,
+    d_codes: jax.Array,
+    n_levels: int,
+    d_inv_norm: jax.Array | None = None,
+) -> jax.Array:
+    """Exact SDC scores [Q, N]: <v(q), v(d)> / ||v(d)||.
+
+    The query norm is constant per query, so it does not affect ranking;
+    following the paper we normalise by the document magnitude only.
+    """
+    vq = codes_to_values(q_codes, n_levels)  # [Q, D]
+    vd = codes_to_values(d_codes, n_levels)  # [N, D]
+    if d_inv_norm is None:
+        d_inv_norm = doc_inv_norms(d_codes, n_levels)
+    return (vq @ vd.T) * d_inv_norm[None, :]
+
+
+def sdc_ref_affine(
+    q_codes: jax.Array,
+    d_codes: jax.Array,
+    n_levels: int,
+    d_inv_norm: jax.Array | None = None,
+) -> jax.Array:
+    """Affine-identity formulation: integer code matmul + rank-1 terms.
+
+      <v(q), v(d)> = a^2 (c_q . c_d) + a*beta*(sum c_q + sum c_d) + D*beta^2
+    """
+    a, beta = code_affine_constants(n_levels)
+    D = q_codes.shape[-1]
+    cq = q_codes.astype(jnp.int32)
+    cd = d_codes.astype(jnp.int32)
+    dot = cq @ cd.T  # exact in int32
+    sq = jnp.sum(cq, axis=-1, keepdims=True)  # [Q, 1]
+    sd = jnp.sum(cd, axis=-1, keepdims=True).T  # [1, N]
+    scores = (a * a) * dot.astype(jnp.float32) + (a * beta) * (
+        sq + sd
+    ).astype(jnp.float32) + D * beta * beta
+    if d_inv_norm is None:
+        d_inv_norm = doc_inv_norms(d_codes, n_levels)
+    return scores * d_inv_norm[None, :]
+
+
+def sdc_ref_lut(
+    q_codes: jax.Array,
+    d_codes: jax.Array,
+    n_levels: int,
+    d_inv_norm: jax.Array | None = None,
+) -> jax.Array:
+    """Paper-faithful SIMD-LUT emulation (int8 tables, 4-bit subcodes).
+
+    Per query, per dimension-group, a 16-entry int8 table holds the partial
+    inner product between the query's grid value(s) and every possible
+    4-bit document code. Distances are the gathered sums. Matches the
+    paper's u=4 layout when n_levels == 4 (one dim per 4-bit code) and the
+    u=2 layout when n_levels == 2 (two dims per code, tables pre-summed).
+    """
+    assert n_levels in (2, 4), "paper layout packs 4-bit subcodes"
+    vq = codes_to_values(q_codes, n_levels)  # [Q, D]
+    centroids = codes_to_values(
+        jnp.arange(2**n_levels, dtype=jnp.int8), n_levels
+    )  # [2**n_levels]
+
+    if n_levels == 4:
+        # LUT[q, d, c] = vq[q, d] * centroid[c], quantised to int8.
+        lut_f = vq[:, :, None] * centroids[None, None, :]  # [Q, D, 16]
+        groups = d_codes.astype(jnp.int32)  # [N, D]
+    else:
+        # Two adjacent 2-bit dims form one 4-bit code; the table entry is
+        # the sum of both dims' partial products.
+        Q, D = vq.shape
+        assert D % 2 == 0
+        c_hi = centroids[(jnp.arange(16) >> 2)]
+        c_lo = centroids[(jnp.arange(16) & 3)]
+        vq2 = vq.reshape(Q, D // 2, 2)
+        lut_f = vq2[..., 0:1] * c_hi[None, None, :] + vq2[..., 1:2] * c_lo[None, None, :]
+        d2 = d_codes.astype(jnp.int32).reshape(d_codes.shape[0], D // 2, 2)
+        groups = d2[..., 0] * 4 + d2[..., 1]  # [N, D//2]
+
+    # Quantise tables to int8 the way the paper does (scale to +-127 by the
+    # per-query max |entry|).
+    scale = jnp.max(jnp.abs(lut_f), axis=(1, 2), keepdims=True) + 1e-12
+    lut_i8 = jnp.clip(jnp.round(lut_f / scale * 127.0), -128, 127)
+
+    # Gather + accumulate (int32 here; the CPU version saturates in int16).
+    gathered = jnp.take_along_axis(
+        lut_i8[:, None, :, :],  # [Q, 1, G, 16]
+        groups[None, :, :, None],  # [1, N, G, 1]
+        axis=-1,
+    )[..., 0]  # [Q, N, G]
+    acc = jnp.sum(gathered, axis=-1)  # [Q, N]
+    scores = acc * (scale[:, :, 0] / 127.0)
+    if d_inv_norm is None:
+        d_inv_norm = doc_inv_norms(d_codes, n_levels)
+    return scores * d_inv_norm[None, :]

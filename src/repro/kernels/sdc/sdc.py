@@ -1,0 +1,180 @@
+"""Pallas TPU kernel for Symmetric Distance Calculation (SDC).
+
+TPU-native adaptation of the paper's SIMD-LUT scan (DESIGN.md §2): the
+recurrent-binary grid value is affine in the packed integer code
+(v = a*c + beta), so the whole scan becomes an int8 x int8 -> int32 MXU
+matmul over the code matrices plus rank-1 affine corrections and a
+reciprocal-norm epilogue on the VPU.
+
+Layout/tiling:
+  * codes stream HBM -> VMEM at 8 bits/dim (4 meaningful), documents tiled
+    along N, queries tiled along Q; the code dim D stays whole (D <= 2048
+    in all BEBR deployments => a (512, D) int8 tile is <= 1 MiB of VMEM).
+  * MXU tiles want multiples of (128, 128); defaults TQ=128, TN=512.
+  * int32 accumulation is exact — unlike the paper's saturating int8/16
+    adds, the TPU path introduces zero quantisation error.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.binarize_lib import code_affine_constants
+
+
+def _sdc_kernel(q_ref, d_ref, dnorm_ref, out_ref, *, a: float, beta: float, dim: int):
+    """One (TQ, TN) output tile.
+
+    q_ref:    [TQ, D] int8 query codes
+    d_ref:    [TN, D] int8 document codes
+    dnorm_ref:[TN]    f32 reciprocal document norms
+    out_ref:  [TQ, TN] f32 scores
+    """
+    q = q_ref[...]
+    d = d_ref[...]
+    # MXU int8 path: accumulate in int32 (exact).
+    dot = jax.lax.dot_general(
+        q,
+        d,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )  # [TQ, TN]
+    sq = jnp.sum(q.astype(jnp.int32), axis=-1, keepdims=True)  # [TQ, 1]
+    sd = jnp.sum(d.astype(jnp.int32), axis=-1, keepdims=True).T  # [1, TN]
+    scores = (
+        (a * a) * dot.astype(jnp.float32)
+        + (a * beta) * (sq + sd).astype(jnp.float32)
+        + (dim * beta * beta)
+    )
+    out_ref[...] = scores * dnorm_ref[...][None, :]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_levels", "block_q", "block_n", "interpret")
+)
+def sdc_scores(
+    q_codes: jax.Array,
+    d_codes: jax.Array,
+    d_inv_norm: jax.Array,
+    *,
+    n_levels: int,
+    block_q: int = 128,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """SDC score matrix [Q, N] = <v(q), v(d)> / ||v(d)||.
+
+    Q and N must be multiples of block_q / block_n (callers pad; see
+    ops.sdc_search which handles padding + top-k).
+    """
+    Q, D = q_codes.shape
+    N, D2 = d_codes.shape
+    assert D == D2, (D, D2)
+    assert Q % block_q == 0 and N % block_n == 0, (Q, N, block_q, block_n)
+    a, beta = code_affine_constants(n_levels)
+
+    grid = (Q // block_q, N // block_n)
+    return pl.pallas_call(
+        functools.partial(_sdc_kernel, a=a, beta=beta, dim=D),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, D), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Q, N), jnp.float32),
+        interpret=interpret,
+    )(q_codes, d_codes, d_inv_norm)
+
+
+def _sdc_topk_kernel(
+    q_ref, d_ref, dnorm_ref, vals_ref, idx_ref, *, a, beta, dim, k, block_n
+):
+    """Fused scan + per-tile top-k (streaming reduction over the N grid).
+
+    Grid is (Q_tiles, N_tiles) with N innermost; for each query tile we keep
+    a running top-k merged across N tiles in the output refs (VMEM-resident
+    accumulator pattern — out blocks map to the same (i, 0) slot for all j,
+    so they persist across the inner grid dimension).
+    """
+    j = pl.program_id(1)
+    q = q_ref[...]
+    d = d_ref[...]
+    dot = jax.lax.dot_general(
+        q, d, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    sq = jnp.sum(q.astype(jnp.int32), axis=-1, keepdims=True)
+    sd = jnp.sum(d.astype(jnp.int32), axis=-1, keepdims=True).T
+    scores = (
+        (a * a) * dot.astype(jnp.float32)
+        + (a * beta) * (sq + sd).astype(jnp.float32)
+        + (dim * beta * beta)
+    ) * dnorm_ref[...][None, :]
+
+    tile_vals, tile_arg = jax.lax.top_k(scores, k)  # [TQ, k]
+    tile_idx = (j * block_n + tile_arg).astype(jnp.int32)
+
+    @pl.when(j == 0)
+    def _init():
+        vals_ref[...] = tile_vals
+        idx_ref[...] = tile_idx
+
+    @pl.when(j > 0)
+    def _merge():
+        cat_v = jnp.concatenate([vals_ref[...], tile_vals], axis=-1)
+        cat_i = jnp.concatenate([idx_ref[...], tile_idx], axis=-1)
+        best_v, best_a = jax.lax.top_k(cat_v, k)
+        vals_ref[...] = best_v
+        idx_ref[...] = jnp.take_along_axis(cat_i, best_a, axis=-1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_levels", "k", "block_q", "block_n", "interpret")
+)
+def sdc_topk(
+    q_codes: jax.Array,
+    d_codes: jax.Array,
+    d_inv_norm: jax.Array,
+    *,
+    n_levels: int,
+    k: int,
+    block_q: int = 128,
+    block_n: int = 1024,
+    interpret: bool = False,
+):
+    """Fused SDC scan + top-k: returns (values [Q, k], indices [Q, k]).
+
+    Avoids materialising the [Q, N] score matrix in HBM — the dominant
+    memory term of the naive pipeline (hillclimbed in EXPERIMENTS.md §Perf).
+    """
+    Q, D = q_codes.shape
+    N, _ = d_codes.shape
+    assert Q % block_q == 0 and N % block_n == 0 and k <= block_n
+    a, beta = code_affine_constants(n_levels)
+    grid = (Q // block_q, N // block_n)
+    return pl.pallas_call(
+        functools.partial(
+            _sdc_topk_kernel, a=a, beta=beta, dim=D, k=k, block_n=block_n
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, D), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, k), jnp.float32),
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q_codes, d_codes, d_inv_norm)

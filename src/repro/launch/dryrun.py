@@ -1,0 +1,227 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the process entry point (device count locks at first jax init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b \
+        --shape train_4k [--multi-pod] [--all] [--out dryrun_results.json]
+
+Per cell it records: per-device memory analysis, HLO FLOPs/bytes from
+cost_analysis, collective wire bytes parsed from the post-SPMD HLO, and
+timing — the inputs to EXPERIMENTS.md §Dry-run and §Roofline.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+# ruff: noqa: E402
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\(.*?\)|\S+)\s*(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\("
+)
+SHAPE_RE = re.compile(r"=\s*((?:\(?[a-z0-9]+\[[0-9,]*\][^ ]*)+)\s")
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of one 'bf16[128,1024]' (or tuple '(f32[..], f32[..])')."""
+    total = 0
+    for m in re.finditer(r"([a-z0-9]+)\[([0-9,]*)\]", shape_str):
+        dt, dims = m.group(1), m.group(2)
+        nbytes = DTYPE_BYTES.get(dt)
+        if nbytes is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nbytes
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    """Parse replica group size from an HLO collective line."""
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)  # iota form
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def parse_collectives(hlo_text: str, n_devices: int):
+    """Per-device wire-byte model per collective op (ring algorithms):
+      all-reduce: 2*B*(g-1)/g   all-gather: B_out*(g-1)/g
+      reduce-scatter: B_in*(g-1)/g ~= B_out*(g-1)
+      all-to-all: B*(g-1)/g     collective-permute: B
+    Shapes in post-SPMD HLO are already per-device shards.
+    """
+    totals = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+              "all-to-all": 0.0, "collective-permute": 0.0}
+    counts = dict.fromkeys(totals, 0)
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1)
+        eq = line.split("=", 1)
+        if len(eq) != 2:
+            continue
+        out_bytes = _shape_bytes(eq[1].split(op)[0])
+        g = _group_size(line, n_devices)
+        if g <= 1:
+            continue
+        if op == "all-reduce":
+            wire = 2.0 * out_bytes * (g - 1) / g
+        elif op == "all-gather":
+            wire = out_bytes * (g - 1) / g
+        elif op == "reduce-scatter":
+            wire = out_bytes * (g - 1)
+        elif op == "all-to-all":
+            wire = out_bytes * (g - 1) / g
+        else:  # collective-permute
+            wire = float(out_bytes)
+        totals[op] += wire
+        counts[op] += 1
+    return totals, counts
+
+
+def run_cell(arch_id: str, shape_id: str, multi_pod: bool):
+    from repro.configs.registry import build_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    cell = build_cell(arch_id, shape_id, mesh)
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings)
+        lowered = jitted.lower(*cell.abstract_args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    from repro.launch.hlo_cost import hlo_costs
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll, coll_counts = parse_collectives(hlo, n_dev)
+    # loop-corrected structural cost model (XLA's cost_analysis counts
+    # while bodies once — scan-over-layers under-reports by ~n_layers)
+    corrected = hlo_costs(hlo, n_dev)
+
+    result = {
+        "arch": arch_id,
+        "shape": shape_id,
+        "kind": cell.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "ok": True,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes_per_device": (
+                ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+            ),
+        },
+        "cost": {
+            "flops_per_device": corrected["flops"],
+            "bytes_per_device": corrected["bytes"],
+            "xla_body_once_flops": ca.get("flops", 0.0),
+            "xla_body_once_bytes": ca.get("bytes accessed", 0.0),
+            "transcendentals": ca.get("transcendentals", 0.0),
+        },
+        "collectives": {
+            "wire_bytes_per_device": corrected["collectives"],
+            "body_once_wire_bytes": coll,
+            "counts": coll_counts,
+        },
+        "meta": cell.meta,
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="dryrun_results.json")
+    args = ap.parse_args()
+
+    from repro.configs.registry import all_cells
+
+    if args.all:
+        cells_list = list(all_cells())
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells_list = [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    # incremental: merge into existing results file
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for arch_id, shape_id in cells_list:
+        for mp in meshes:
+            key = f"{arch_id}|{shape_id}|{'2x16x16' if mp else '16x16'}"
+            if results.get(key, {}).get("ok"):
+                print(f"[skip] {key} (cached)")
+                continue
+            print(f"[run ] {key}", flush=True)
+            try:
+                res = run_cell(arch_id, shape_id, mp)
+                gib = res["memory"]["peak_bytes_per_device"] / 2**30
+                print(
+                    f"[ ok ] {key}: compile={res['compile_s']}s "
+                    f"peak={gib:.2f} GiB/dev "
+                    f"flops={res['cost']['flops_per_device']:.3e}",
+                    flush=True,
+                )
+            except Exception as e:  # noqa: BLE001 — record and continue
+                res = {
+                    "arch": arch_id, "shape": shape_id,
+                    "mesh": "2x16x16" if mp else "16x16",
+                    "ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:],
+                }
+                print(f"[FAIL] {key}: {res['error']}", flush=True)
+            results[key] = res
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+
+    n_ok = sum(1 for r in results.values() if r.get("ok"))
+    print(f"\n{n_ok}/{len(results)} cells OK -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""BEBR serving launcher (paper Figure 5: query -> phi -> proxy/leaf/merge).
+
+    PYTHONPATH=src python -m repro.launch.serve --docs 20000 --queries 64
+
+End-to-end: train a binarizer on the corpus embeddings (emb2emb, minutes),
+binarize + index the corpus, then serve batched queries through
+  float backbone emb -> recurrent binarization -> SDC search (flat or IVF)
+and report recall vs the float-embedding exhaustive baseline, plus index
+bytes (the paper's memory-saving claim) and per-batch latency.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    BinarizerConfig,
+    TrainConfig,
+    binarize_eval,
+    init_train_state,
+    pack_codes,
+    train_step,
+)
+from repro.core import binarize_lib
+import repro.core.losses as losses_lib
+from repro.data import synthetic
+from repro.index import ivf as ivf_lib
+from repro.index.flat import FlatFloat, FlatSDC
+from repro.kernels.sdc import ref as sdc_ref
+
+
+def train_binarizer(docs: np.ndarray, cfg: TrainConfig, steps: int = 300,
+                    batch: int = 256, seed: int = 0):
+    state = init_train_state(jax.random.PRNGKey(seed), cfg)
+    step = jax.jit(functools.partial(train_step, cfg=cfg))
+    gen = synthetic.pair_batches(docs, seed + 1, batch)
+    for i in range(steps):
+        a, p = next(gen)
+        state, metrics = step(state, a, p)
+    return state
+
+
+def encode_codes(state, emb: np.ndarray, bcfg: BinarizerConfig, batch=4096):
+    outs = []
+    for i in range(0, emb.shape[0], batch):
+        bits, _, _ = binarize_lib.binarize(
+            state.params, state.bn_state, jnp.asarray(emb[i : i + batch]), bcfg
+        )
+        outs.append(pack_codes(bits))
+    return jnp.concatenate(outs, 0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=20000)
+    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--dim", type=int, default=256)
+    ap.add_argument("--code-dim", type=int, default=128)
+    ap.add_argument("--levels", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--index", choices=["flat", "ivf"], default="flat")
+    ap.add_argument("--k", type=int, default=10)
+    args = ap.parse_args()
+
+    print(f"[data] {args.docs} docs, {args.queries} queries, dim={args.dim}")
+    docs, queries, gt = synthetic.clustered_corpus(
+        0, args.docs, args.queries, args.dim
+    )
+
+    bcfg = BinarizerConfig(
+        input_dim=args.dim, code_dim=args.code_dim, n_levels=args.levels,
+        hidden_dim=2 * args.dim,
+    )
+    from repro.train import optim
+
+    tcfg = TrainConfig(
+        binarizer=bcfg,
+        queue=losses_lib.QueueConfig(length=4096, dim=args.code_dim, top_k=64),
+        adam=optim.AdamConfig(lr=2e-3, clip_norm=5.0),
+    )
+    print(f"[train] binarizer {bcfg.total_bits} bits "
+          f"({32 * args.dim // bcfg.total_bits}x compression), "
+          f"{args.steps} steps")
+    t0 = time.time()
+    state = train_binarizer(docs, tcfg, steps=args.steps)
+    print(f"[train] done in {time.time() - t0:.1f}s")
+
+    # --- index build ---
+    d_codes = encode_codes(state, docs, bcfg)
+    q_codes = encode_codes(state, queries, bcfg)
+
+    flat_float = FlatFloat.build(jnp.asarray(docs))
+    if args.index == "flat":
+        index = FlatSDC.build(d_codes, bcfg.n_levels)
+        search = lambda q: index.search(q, args.k)
+        nbytes = index.nbytes()
+    else:
+        index = ivf_lib.build_ivf(
+            jax.random.PRNGKey(1), d_codes, n_levels=bcfg.n_levels, nlist=64
+        )
+        search = lambda q: ivf_lib.search(index, q, nprobe=32, k=args.k)
+        nbytes = index.nbytes()
+
+    float_bytes = flat_float.nbytes()
+    print(f"[index] {args.index}: {nbytes/2**20:.2f} MiB "
+          f"(float flat: {float_bytes/2**20:.2f} MiB, "
+          f"saving {100*(1-nbytes/float_bytes):.1f}%)")
+
+    # --- serve ---
+    _, idx_f = flat_float.search(jnp.asarray(queries), args.k)
+    t0 = time.time()
+    _, idx_b = search(q_codes)
+    idx_b = jax.block_until_ready(idx_b)
+    dt = time.time() - t0
+
+    gt_t = jnp.asarray(gt)[:, None]
+    r_float = float(jnp.mean(jnp.any(idx_f == gt_t, axis=-1)))
+    r_bebr = float(jnp.mean(jnp.any(idx_b == gt_t, axis=-1)))
+    print(f"[serve] recall@{args.k}: float={r_float:.4f} BEBR={r_bebr:.4f}")
+    print(f"[serve] batch of {args.queries} queries in {dt*1000:.1f} ms "
+          f"({args.queries/dt:.0f} QPS single-host CPU)")
+
+
+if __name__ == "__main__":
+    main()

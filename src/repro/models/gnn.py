@@ -1,0 +1,141 @@
+"""MeshGraphNet (arXiv:2010.03409): encode-process-decode GNN.
+
+Message passing uses the edge-index -> scatter formulation mandated for
+TPU/JAX: gather endpoint features with jnp.take, update edges with an MLP,
+aggregate back to nodes with jax.ops.segment_sum. Static shapes throughout
+(padded edges carry a mask) so the same code handles full-batch graphs,
+sampled mini-batches, and batched small molecules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    n_layers: int = 15
+    d_hidden: int = 128
+    mlp_layers: int = 2
+    d_node_in: int = 16
+    d_edge_in: int = 8
+    d_out: int = 3
+    aggregator: str = "sum"
+    remat: bool = True  # rematerialise each message-passing layer
+    dtype: Any = jnp.float32
+
+    def param_count(self) -> int:
+        h = self.d_hidden
+        mlp = lambda i, o: i * h + h + (self.mlp_layers - 2) * (h * h + h) + h * o + o
+        enc = mlp(self.d_node_in, h) + mlp(self.d_edge_in, h)
+        proc = self.n_layers * (mlp(3 * h, h) + mlp(2 * h, h))
+        dec = mlp(h, self.d_out)
+        return enc + proc + dec
+
+
+def _init_mlp(key, d_in, d_h, d_out, n_layers, dtype):
+    dims = [d_in] + [d_h] * (n_layers - 1) + [d_out]
+    ks = jax.random.split(key, len(dims) - 1)
+    return [
+        {
+            "w": (jax.random.normal(k, (a, b), jnp.float32) / jnp.sqrt(a)).astype(dtype),
+            "b": jnp.zeros((b,), dtype),
+        }
+        for k, a, b in zip(ks, dims[:-1], dims[1:])
+    ]
+
+
+def _mlp(layers, x):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i + 1 < len(layers):
+            x = jax.nn.relu(x)
+    return x
+
+
+def init_params(key: jax.Array, cfg: GNNConfig) -> Params:
+    ks = jax.random.split(key, 4 + cfg.n_layers * 2)
+    h, m = cfg.d_hidden, cfg.mlp_layers
+    layers = []
+    for i in range(cfg.n_layers):
+        layers.append(
+            {
+                "edge_mlp": _init_mlp(ks[4 + 2 * i], 3 * h, h, h, m + 1, cfg.dtype),
+                "node_mlp": _init_mlp(ks[5 + 2 * i], 2 * h, h, h, m + 1, cfg.dtype),
+            }
+        )
+    return {
+        "node_enc": _init_mlp(ks[0], cfg.d_node_in, h, h, m + 1, cfg.dtype),
+        "edge_enc": _init_mlp(ks[1], cfg.d_edge_in, h, h, m + 1, cfg.dtype),
+        "decoder": _init_mlp(ks[2], h, h, cfg.d_out, m + 1, cfg.dtype),
+        "layers": layers,
+    }
+
+
+def forward(
+    params: Params,
+    node_feat: jax.Array,  # [N, d_node_in]
+    edge_feat: jax.Array,  # [E, d_edge_in]
+    senders: jax.Array,  # [E] int32
+    receivers: jax.Array,  # [E] int32
+    edge_mask: jax.Array | None = None,  # [E] bool (False = padding)
+    cfg: GNNConfig = None,
+    node_constrain=None,  # sharding constraint applied to node-state tensors
+) -> jax.Array:
+    """Returns per-node outputs [N, d_out]."""
+    n_nodes = node_feat.shape[0]
+    v = _mlp(params["node_enc"], node_feat)
+    e = _mlp(params["edge_enc"], edge_feat)
+    if edge_mask is not None:
+        e = e * edge_mask[:, None].astype(e.dtype)
+
+    def layer_fn(lp, v, e):
+        # edge update: concat(e, v_s, v_r) -> MLP, residual
+        vs = jnp.take(v, senders, axis=0)
+        vr = jnp.take(v, receivers, axis=0)
+        e_new = _mlp(lp["edge_mlp"], jnp.concatenate([e, vs, vr], axis=-1))
+        if edge_mask is not None:
+            e_new = e_new * edge_mask[:, None].astype(e.dtype)
+        e = e + e_new
+        # node update: aggregate incoming edges, concat, MLP, residual
+        if cfg is not None and cfg.aggregator == "max":
+            agg = jax.ops.segment_max(e, receivers, num_segments=n_nodes)
+            agg = jnp.where(jnp.isfinite(agg), agg, 0.0)
+        else:
+            agg = jax.ops.segment_sum(e, receivers, num_segments=n_nodes)
+        if node_constrain is not None:
+            # force the aggregate to the node partition: GSPMD then emits
+            # reduce-scatter (+ later all-gather) instead of a full-array
+            # all-reduce per layer — half the wire, sharded node MLP.
+            agg = node_constrain(agg)
+        v = v + _mlp(lp["node_mlp"], jnp.concatenate([v, agg], axis=-1))
+        if node_constrain is not None:
+            v = node_constrain(v)
+        return v, e
+
+    if cfg is not None and cfg.remat:
+        layer_fn = jax.checkpoint(layer_fn)
+    for lp in params["layers"]:
+        v, e = layer_fn(lp, v, e)
+
+    return _mlp(params["decoder"], v)
+
+
+def mse_loss(params, node_feat, edge_feat, senders, receivers, targets,
+             node_mask=None, edge_mask=None, cfg: GNNConfig = None,
+             node_constrain=None) -> jax.Array:
+    out = forward(params, node_feat, edge_feat, senders, receivers,
+                  edge_mask=edge_mask, cfg=cfg, node_constrain=node_constrain)
+    err = jnp.square(out - targets)
+    if node_mask is not None:
+        err = err * node_mask[:, None].astype(err.dtype)
+        denom = jnp.sum(node_mask) * out.shape[-1]
+        return jnp.sum(err) / jnp.maximum(denom, 1.0)
+    return jnp.mean(err)

@@ -1,0 +1,151 @@
+"""DIEN (arXiv:1809.03672): interest extraction GRU + interest evolution
+AUGRU over user behavior sequences. Assigned config: embed_dim=18,
+seq_len=100, gru_dim=108 (= 6*18: concat item+cate embeddings doubled),
+MLP 200-80, AUGRU interaction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.recsys.embedding import TableConfig, init_table, mlp_params, mlp_apply
+
+
+@dataclasses.dataclass(frozen=True)
+class DIENConfig:
+    name: str = "dien"
+    embed_dim: int = 18
+    seq_len: int = 100
+    gru_dim: int = 108
+    mlp: tuple = (200, 80)
+    item_vocab: int = 500_000
+    cate_vocab: int = 5_000
+    dtype: Any = jnp.float32
+
+    @property
+    def beh_dim(self) -> int:
+        return 2 * self.embed_dim  # item + category embeddings
+
+    def param_count(self) -> int:
+        gru = 3 * (self.beh_dim + self.gru_dim + 1) * self.gru_dim
+        augru = 3 * (self.gru_dim + self.gru_dim + 1) * self.gru_dim
+        att = (2 * self.gru_dim) * 36 + 36
+        mlp_in = self.gru_dim + 2 * self.beh_dim
+        dims = (mlp_in,) + self.mlp + (1,)
+        mlp = sum(a * b + b for a, b in zip(dims[:-1], dims[1:]))
+        emb = (self.item_vocab + self.cate_vocab) * self.embed_dim
+        return emb + gru + augru + att + mlp
+
+
+def _init_gru(key, d_in, d_h, dtype):
+    ks = jax.random.split(key, 3)
+    mk = lambda k: {
+        "wx": (jax.random.normal(k, (d_in, d_h), jnp.float32) / jnp.sqrt(d_in)).astype(dtype),
+        "wh": (jax.random.normal(jax.random.fold_in(k, 1), (d_h, d_h), jnp.float32)
+               / jnp.sqrt(d_h)).astype(dtype),
+        "b": jnp.zeros((d_h,), dtype),
+    }
+    return {"r": mk(ks[0]), "z": mk(ks[1]), "n": mk(ks[2])}
+
+
+def _gru_cell(p, x, h):
+    r = jax.nn.sigmoid(x @ p["r"]["wx"] + h @ p["r"]["wh"] + p["r"]["b"])
+    z = jax.nn.sigmoid(x @ p["z"]["wx"] + h @ p["z"]["wh"] + p["z"]["b"])
+    n = jnp.tanh(x @ p["n"]["wx"] + (r * h) @ p["n"]["wh"] + p["n"]["b"])
+    return (1 - z) * n + z * h
+
+
+def _augru_cell(p, x, h, att):
+    """AUGRU: attention score scales the update gate."""
+    r = jax.nn.sigmoid(x @ p["r"]["wx"] + h @ p["r"]["wh"] + p["r"]["b"])
+    z = jax.nn.sigmoid(x @ p["z"]["wx"] + h @ p["z"]["wh"] + p["z"]["b"])
+    z = att[:, None] * z
+    n = jnp.tanh(x @ p["n"]["wx"] + (r * h) @ p["n"]["wh"] + p["n"]["b"])
+    return (1 - z) * h + z * n
+
+
+def init_params(key: jax.Array, cfg: DIENConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    beh = cfg.beh_dim
+    mlp_in = cfg.gru_dim + 2 * beh
+    return {
+        "item_table": init_table(ks[0], TableConfig(cfg.item_vocab, cfg.embed_dim), cfg.dtype),
+        "cate_table": init_table(ks[1], TableConfig(cfg.cate_vocab, cfg.embed_dim), cfg.dtype),
+        "gru": _init_gru(ks[2], beh, cfg.gru_dim, cfg.dtype),
+        "augru": _init_gru(ks[3], cfg.gru_dim, cfg.gru_dim, cfg.dtype),
+        "att": mlp_params(ks[4], (2 * cfg.gru_dim, 36, 1), cfg.dtype),
+        "mlp": mlp_params(ks[5], (mlp_in,) + cfg.mlp + (1,), cfg.dtype),
+        "target_proj": (jax.random.normal(jax.random.fold_in(ks[4], 7),
+                        (beh, cfg.gru_dim), jnp.float32) / jnp.sqrt(beh)).astype(cfg.dtype),
+    }
+
+
+def _behavior_embed(params, item_ids, cate_ids):
+    it = jnp.take(params["item_table"], item_ids, axis=0)
+    ct = jnp.take(params["cate_table"], cate_ids, axis=0)
+    return jnp.concatenate([it, ct], axis=-1)
+
+
+def forward(
+    params,
+    hist_items: jax.Array,  # [B, L]
+    hist_cates: jax.Array,  # [B, L]
+    hist_mask: jax.Array,  # [B, L]
+    target_item: jax.Array,  # [B]
+    target_cate: jax.Array,  # [B]
+    cfg: DIENConfig,
+) -> jax.Array:
+    """CTR logits [B]. Two-stage: GRU over behaviors, then AUGRU weighted by
+    target attention."""
+    B, L = hist_items.shape
+    beh = _behavior_embed(params, hist_items, hist_cates)  # [B, L, 2e]
+    tgt = _behavior_embed(params, target_item, target_cate)  # [B, 2e]
+    mask = hist_mask.astype(beh.dtype)
+
+    # Stage 1: interest extraction GRU (scan over time).
+    def gru_step(h, xt):
+        x, m = xt
+        h_new = _gru_cell(params["gru"], x, h)
+        h = m[:, None] * h_new + (1 - m[:, None]) * h
+        return h, h
+
+    h0 = jnp.zeros((B, cfg.gru_dim), beh.dtype)
+    _, states = jax.lax.scan(gru_step, h0, (beh.swapaxes(0, 1), mask.swapaxes(0, 1)))
+    states = states.swapaxes(0, 1)  # [B, L, H]
+
+    # Target attention over extracted interests.
+    tgt_h = tgt @ params["target_proj"]  # [B, H]
+    att_in = jnp.concatenate(
+        [states, jnp.broadcast_to(tgt_h[:, None, :], states.shape)], axis=-1
+    )
+    att = mlp_apply(params["att"], att_in)[..., 0]  # [B, L]
+    att = jnp.where(mask > 0, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+
+    # Stage 2: interest evolution AUGRU.
+    def augru_step(h, xt):
+        s, a, m = xt
+        h_new = _augru_cell(params["augru"], s, h, a)
+        return m[:, None] * h_new + (1 - m[:, None]) * h, None
+
+    h_final, _ = jax.lax.scan(
+        augru_step,
+        jnp.zeros((B, cfg.gru_dim), beh.dtype),
+        (states.swapaxes(0, 1), att.swapaxes(0, 1), mask.swapaxes(0, 1)),
+    )
+
+    feats = jnp.concatenate([h_final, tgt, jnp.sum(beh * mask[..., None], 1)], axis=-1)
+    return mlp_apply(params["mlp"], feats)[:, 0]
+
+
+def bce_loss(params, hist_items, hist_cates, hist_mask, target_item, target_cate,
+             labels, cfg: DIENConfig) -> jax.Array:
+    logits = forward(params, hist_items, hist_cates, hist_mask, target_item,
+                     target_cate, cfg)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )

@@ -1,0 +1,89 @@
+"""DLRM-RM2 (arXiv:1906.00091): bottom MLP + embedding bags + dot interaction
++ top MLP. Config matches the assigned shape: 13 dense, 26 sparse fields,
+embed_dim 64, bot 13-512-256-64, top 512-512-256-1, dot interaction.
+
+The interaction uses the fused Pallas kernel (kernels/dot_interact) on TPU
+and the jnp reference elsewhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dot_interact.ref import dot_interact_ref
+from repro.models.recsys.embedding import (
+    TableConfig,
+    embedding_lookup,
+    init_table,
+    mlp_apply,
+    mlp_params,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-rm2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    bot_mlp: Tuple[int, ...] = (13, 512, 256, 64)
+    top_mlp_hidden: Tuple[int, ...] = (512, 512, 256, 1)
+    table_vocab: int = 1_000_000
+    dtype: Any = jnp.float32
+
+    @property
+    def n_feat(self) -> int:
+        return self.n_sparse + 1  # +1 bottom-MLP output as a feature
+
+    @property
+    def interact_dim(self) -> int:
+        return self.n_feat * (self.n_feat - 1) // 2 + self.embed_dim
+
+    def param_count(self) -> int:
+        emb = self.n_sparse * self.table_vocab * self.embed_dim
+        bot = sum(a * b + b for a, b in zip(self.bot_mlp[:-1], self.bot_mlp[1:]))
+        top_dims = (self.interact_dim,) + self.top_mlp_hidden
+        top = sum(a * b + b for a, b in zip(top_dims[:-1], top_dims[1:]))
+        return emb + bot + top
+
+
+def init_params(key: jax.Array, cfg: DLRMConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, cfg.n_sparse + 2)
+    tables = jnp.stack(
+        [
+            init_table(ks[i], TableConfig(cfg.table_vocab, cfg.embed_dim), cfg.dtype)
+            for i in range(cfg.n_sparse)
+        ]
+    )  # [F, V, D] — stacked so the table axis can shard over `model`
+    top_dims = (cfg.interact_dim,) + cfg.top_mlp_hidden
+    return {
+        "tables": tables,
+        "bot": mlp_params(ks[-2], cfg.bot_mlp, cfg.dtype),
+        "top": mlp_params(ks[-1], top_dims, cfg.dtype),
+    }
+
+
+def forward(params, dense: jax.Array, sparse_ids: jax.Array, cfg: DLRMConfig,
+            interact_fn=None) -> jax.Array:
+    """dense [B, 13] f32; sparse_ids [B, 26] int32 -> logits [B]."""
+    x = mlp_apply(params["bot"], dense)  # [B, D]
+    # vmap over the 26 field tables: [F, V, D] x [B, F] -> [B, F, D]
+    emb = jax.vmap(embedding_lookup, in_axes=(0, 1), out_axes=1)(
+        params["tables"], sparse_ids
+    )
+    feats = jnp.concatenate([x[:, None, :], emb], axis=1)  # [B, F+1, D]
+    inter = (interact_fn or dot_interact_ref)(feats)  # [B, P]
+    top_in = jnp.concatenate([inter, x], axis=-1)
+    return mlp_apply(params["top"], top_in)[:, 0]
+
+
+def bce_loss(params, dense, sparse_ids, labels, cfg: DLRMConfig,
+             interact_fn=None) -> jax.Array:
+    logits = forward(params, dense, sparse_ids, cfg, interact_fn=interact_fn)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )

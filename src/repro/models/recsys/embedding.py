@@ -1,0 +1,116 @@
+"""EmbeddingBag and sparse-feature plumbing for recsys models.
+
+JAX has no nn.EmbeddingBag and no CSR sparse — per the system design this
+is built from jnp.take + jax.ops.segment_sum (multi-hot bags) and plain
+take (one-hot fields). Tables are row-sharded over the ``model`` mesh axis
+in production (parallel/sharding.py); the lookup lowers to a collective
+gather under GSPMD.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TableConfig:
+    vocab: int
+    dim: int
+    combiner: str = "sum"  # sum | mean
+
+
+def init_table(key: jax.Array, cfg: TableConfig, dtype=jnp.float32) -> jax.Array:
+    scale = 1.0 / jnp.sqrt(cfg.dim)
+    return (jax.random.normal(key, (cfg.vocab, cfg.dim), jnp.float32) * scale).astype(dtype)
+
+
+def embedding_lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """One-hot field lookup: ids [...]-> [..., dim]."""
+    return jnp.take(table, ids, axis=0)
+
+
+def embedding_bag(
+    table: jax.Array,
+    ids: jax.Array,
+    segment_ids: jax.Array,
+    num_bags: int,
+    *,
+    weights: jax.Array | None = None,
+    combiner: str = "sum",
+) -> jax.Array:
+    """Ragged multi-hot bag lookup (torch EmbeddingBag equivalent).
+
+    Args:
+      table: [V, D].
+      ids: [total] flattened indices across all bags.
+      segment_ids: [total] bag id per index (sorted not required).
+      num_bags: static number of bags.
+      weights: optional [total] per-sample weights.
+    """
+    rows = jnp.take(table, ids, axis=0)  # [total, D]
+    if weights is not None:
+        rows = rows * weights[:, None]
+    summed = jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)
+    if combiner == "mean":
+        counts = jax.ops.segment_sum(
+            jnp.ones_like(ids, table.dtype), segment_ids, num_segments=num_bags
+        )
+        summed = summed / jnp.maximum(counts, 1.0)[:, None]
+    return summed
+
+
+def embedding_bag_fixed(
+    table: jax.Array, ids: jax.Array, mask: jax.Array | None = None,
+    combiner: str = "sum",
+) -> jax.Array:
+    """Fixed-width bags (TPU-preferred layout): ids [B, L] -> [B, D].
+
+    Padded slots carry mask=0. This is the layout the assigned recsys
+    shapes use (static shapes, no ragged metadata on device).
+    """
+    rows = jnp.take(table, ids, axis=0)  # [B, L, D]
+    if mask is not None:
+        rows = rows * mask[..., None].astype(rows.dtype)
+    out = jnp.sum(rows, axis=1)
+    if combiner == "mean":
+        denom = (
+            jnp.sum(mask, axis=1, keepdims=True).astype(rows.dtype)
+            if mask is not None
+            else jnp.full((ids.shape[0], 1), ids.shape[1], rows.dtype)
+        )
+        out = out / jnp.maximum(denom, 1.0)
+    return out
+
+
+def hash_bucket(ids: jax.Array, vocab: int) -> jax.Array:
+    """Deterministic hashing trick for unbounded id spaces."""
+    h = ids.astype(jnp.uint32)
+    h = (h ^ (h >> 16)) * jnp.uint32(0x45D9F3B)
+    h = (h ^ (h >> 16)) * jnp.uint32(0x45D9F3B)
+    h = h ^ (h >> 16)
+    return (h % jnp.uint32(vocab)).astype(jnp.int32)
+
+
+def mlp_params(key, dims: Sequence[int], dtype=jnp.float32) -> list:
+    ks = jax.random.split(key, len(dims) - 1)
+    return [
+        {
+            "w": (jax.random.normal(k, (a, b), jnp.float32) * jnp.sqrt(2.0 / a)).astype(dtype),
+            "b": jnp.zeros((b,), dtype),
+        }
+        for k, a, b in zip(ks, dims[:-1], dims[1:])
+    ]
+
+
+def mlp_apply(layers, x, final_act=None):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i + 1 < len(layers):
+            x = jax.nn.relu(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x

@@ -1,0 +1,101 @@
+"""Two-tower retrieval (YouTube RecSys'19): query/item MLP towers, dot
+similarity, in-batch sampled softmax with logQ correction.
+
+This is the arch most representative of the paper's setting: the item
+tower's embeddings are exactly what BEBR binarizes and indexes; the
+``retrieval_cand`` shape (1 query vs 1M candidates) runs through the SDC
+engine (launch/serve.py) as well as the float matmul baseline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.recsys.embedding import (
+    TableConfig,
+    embedding_bag_fixed,
+    init_table,
+    mlp_apply,
+    mlp_params,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str = "two-tower-retrieval"
+    embed_dim: int = 256
+    tower_mlp: Tuple[int, ...] = (1024, 512, 256)
+    user_vocab: int = 1_000_000
+    item_vocab: int = 1_000_000
+    hist_len: int = 32
+    dtype: Any = jnp.float32
+
+    @property
+    def tower_in(self) -> int:
+        return self.embed_dim  # bagged history / item id embedding
+
+    def param_count(self) -> int:
+        emb = (self.user_vocab + self.item_vocab) * self.embed_dim
+        dims = (self.embed_dim,) + self.tower_mlp
+        tower = sum(a * b + b for a, b in zip(dims[:-1], dims[1:]))
+        return emb + 2 * tower
+
+
+def init_params(key: jax.Array, cfg: TwoTowerConfig) -> Dict[str, Any]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dims = (cfg.embed_dim,) + cfg.tower_mlp
+    return {
+        "user_table": init_table(k1, TableConfig(cfg.user_vocab, cfg.embed_dim), cfg.dtype),
+        "item_table": init_table(k2, TableConfig(cfg.item_vocab, cfg.embed_dim), cfg.dtype),
+        "q_tower": mlp_params(k3, dims, cfg.dtype),
+        "i_tower": mlp_params(k4, dims, cfg.dtype),
+    }
+
+
+def _unit(x, eps=1e-12):
+    return x * jax.lax.rsqrt(jnp.sum(x * x, -1, keepdims=True) + eps)
+
+
+def query_embed(params, hist_ids: jax.Array, hist_mask: jax.Array, cfg) -> jax.Array:
+    """User history bag -> query tower -> unit embedding [B, out]."""
+    bag = embedding_bag_fixed(params["user_table"], hist_ids, hist_mask, "mean")
+    return _unit(mlp_apply(params["q_tower"], bag))
+
+
+def item_embed(params, item_ids: jax.Array, cfg) -> jax.Array:
+    emb = jnp.take(params["item_table"], item_ids, axis=0)
+    return _unit(mlp_apply(params["i_tower"], emb))
+
+
+def sampled_softmax_loss(
+    params,
+    hist_ids: jax.Array,
+    hist_mask: jax.Array,
+    pos_items: jax.Array,
+    item_logq: jax.Array,
+    cfg: TwoTowerConfig,
+    temperature: float = 0.05,
+) -> jax.Array:
+    """In-batch sampled softmax with logQ correction (Yi et al. RecSys'19)."""
+    q = query_embed(params, hist_ids, hist_mask, cfg)  # [B, D]
+    it = item_embed(params, pos_items, cfg)  # [B, D]
+    logits = (q @ it.T) / temperature - item_logq[None, :]
+    labels = jnp.arange(q.shape[0])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def score_candidates(params, hist_ids, hist_mask, cand_ids, cfg) -> jax.Array:
+    """retrieval_cand serve path: [B_q] queries x [N_c] candidates -> scores.
+
+    Candidate embeddings are computed through the item tower; in the BEBR
+    deployment they are precomputed, binarized and searched via the SDC
+    engine instead (examples/serve_bebr.py) — this is the float baseline.
+    """
+    q = query_embed(params, hist_ids, hist_mask, cfg)
+    it = item_embed(params, cand_ids, cfg)
+    return q @ it.T

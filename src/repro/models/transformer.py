@@ -1,0 +1,433 @@
+"""LM transformer family: dense (llama3/mistral) and MoE (llama4/grok).
+
+One config covers all five assigned LM architectures: GQA attention with
+RoPE, RMSNorm, SwiGLU FFN or top-k routed MoE, tied scan-over-layers
+(stacked [L, ...] parameters) so HLO size is O(1) in depth, full causal
+train step + KV-cache decode step (batch-sharded or context-parallel).
+
+Distribution is GSPMD-first: parameters carry logical axis names mapped to
+PartitionSpecs by parallel/sharding.py; the train step is a plain jit with
+in/out shardings, microbatched gradient accumulation, and per-layer remat.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    # MoE (n_experts = 0 => dense SwiGLU)
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    rope_theta: float = 500000.0
+    dtype: Any = jnp.bfloat16
+    # training-time knobs
+    microbatches: int = 1
+    remat: bool = True
+    # activation sharding of the scan carry: None | "seq" (Megatron-SP)
+    activation_sharding: Optional[str] = "seq"
+    # query-chunked (flash-style online) attention; 0 = single-shot.
+    attn_chunk: int = 1024
+    # MoE routing-group length: tokens are routed in fixed groups of this
+    # many tokens (0 = one group per batch row). Bounds the GShard one-hot
+    # dispatch at [*, G, k, E, C~G*k/E] — LINEAR in sequence length,
+    # instead of the O(S^2) blow-up of per-row routing at long prefill.
+    moe_group: int = 0
+    # KV cache dtype: jnp.bfloat16 | jnp.int8 (BEBR-style quantised serving)
+    kv_cache_dtype: Any = jnp.bfloat16
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def param_count(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        attn = d * self.n_heads * self.head_dim + 2 * d * self.n_kv_heads * self.head_dim
+        attn += self.n_heads * self.head_dim * d
+        if self.is_moe:
+            ffn = self.n_experts * 3 * d * f + d * self.n_experts  # experts + router
+        else:
+            ffn = 3 * d * f
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + v * d + d  # embed (tied out) + final norm
+
+    def active_param_count(self) -> int:
+        if not self.is_moe:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        dense_like = self.param_count() - self.n_layers * self.n_experts * 3 * d * f
+        return dense_like + self.n_layers * self.top_k * 3 * d * f
+
+
+# ---------------------------------------------------------------------------
+# Primitives.
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: [..., S, H, hd]; positions: [..., S]."""
+    hd = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[..., None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def _init(key, shape, dtype, scale=None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else (1.0 / jnp.sqrt(fan_in))
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+def init_params(key: jax.Array, cfg: TransformerConfig) -> Params:
+    """Stacked [L, ...] parameters for scan-over-layers."""
+    L, d, f = cfg.n_layers, cfg.d_model, cfg.d_ff
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 12)
+    layer = {
+        "attn_norm": jnp.ones((L, d), cfg.dtype),
+        "wq": _init(ks[0], (L, d, H * hd), cfg.dtype),
+        "wk": _init(ks[1], (L, d, KV * hd), cfg.dtype),
+        "wv": _init(ks[2], (L, d, KV * hd), cfg.dtype),
+        "wo": _init(ks[3], (L, H * hd, d), cfg.dtype),
+        "ffn_norm": jnp.ones((L, d), cfg.dtype),
+    }
+    if cfg.is_moe:
+        layer.update(
+            router=_init(ks[4], (L, d, cfg.n_experts), cfg.dtype),
+            w_gate=_init(ks[5], (L, cfg.n_experts, d, f), cfg.dtype),
+            w_up=_init(ks[6], (L, cfg.n_experts, d, f), cfg.dtype),
+            w_down=_init(ks[7], (L, cfg.n_experts, f, d), cfg.dtype),
+        )
+    else:
+        layer.update(
+            w_gate=_init(ks[5], (L, d, f), cfg.dtype),
+            w_up=_init(ks[6], (L, d, f), cfg.dtype),
+            w_down=_init(ks[7], (L, f, d), cfg.dtype),
+        )
+    return {
+        "embed": _init(ks[8], (cfg.vocab, d), cfg.dtype, scale=0.02),
+        "final_norm": jnp.ones((d,), cfg.dtype),
+        "layers": layer,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Attention / FFN / MoE blocks (single layer; used inside lax.scan).
+# ---------------------------------------------------------------------------
+
+
+def _quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-(.., token) symmetric int8: x [..., T, hd] -> (q int8, scale)."""
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _causal_chunk_attn(qh, kh, vh, q_offset, S_kv, chunk, dtype):
+    """Query-chunked online attention (flash-style memory profile).
+
+    qh [B, KV, G, S, hd]; kh/vh [B, KV, T, hd]. Each chunk materialises only
+    [B, KV, G, C, T] logits. Causal with absolute positions (q_offset).
+    """
+    B, KV, G, S, hd = qh.shape
+    n_chunks = S // chunk
+    qc = qh.reshape(B, KV, G, n_chunks, chunk, hd).transpose(3, 0, 1, 2, 4, 5)
+    kpos = jnp.arange(S_kv)
+
+    def one(carry, args):
+        i, q = args
+        logits = jnp.einsum("bkgqh,bkth->bkgqt", q, kh)
+        qpos = q_offset + i * chunk + jnp.arange(chunk)
+        causal = kpos[None, :] <= qpos[:, None]
+        logits = jnp.where(causal[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(dtype)
+        ctx = jnp.einsum("bkgqt,bkth->bkgqh", probs, vh)
+        return carry, ctx
+
+    _, ctxs = jax.lax.scan(one, None, (jnp.arange(n_chunks), qc))
+    # ctxs [n_chunks, B, KV, G, chunk, hd] -> [B, KV, G, S, hd]
+    return ctxs.transpose(1, 2, 3, 0, 4, 5).reshape(B, KV, G, S, hd)
+
+
+def _attention(lp, x, positions, cfg: TransformerConfig, mask=None, kv_cache=None):
+    """x: [B, S, d]. kv_cache: optional dict with k/v [B, KV, T, hd] and
+    ``length`` — decode mode appends and attends to the cache."""
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ lp["wq"]).reshape(B, S, H, hd)
+    k = (x @ lp["wk"]).reshape(B, S, KV, hd)
+    v = (x @ lp["wv"]).reshape(B, S, KV, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = q * (hd ** -0.5)
+
+    if kv_cache is not None:
+        # decode: S == 1; cache is [B, KV, T, hd] pre-filled to ``length``.
+        quantized = "k_scale" in kv_cache
+        k_new = k.transpose(0, 2, 1, 3)  # [B, KV, S, hd]
+        v_new = v.transpose(0, 2, 1, 3)
+        if quantized:
+            kq, ks = _quantize_kv(k_new)
+            vq, vs = _quantize_kv(v_new)
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["k"], kq, kv_cache["length"], axis=2)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["v"], vq, kv_cache["length"], axis=2)
+            cks = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["k_scale"], ks, kv_cache["length"], axis=2)
+            cvs = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["v_scale"], vs, kv_cache["length"], axis=2)
+            keys = ck.astype(q.dtype) * cks.astype(q.dtype)
+            vals = cv.astype(q.dtype) * cvs.astype(q.dtype)
+            new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
+                         "length": kv_cache["length"] + S}
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["k"], k_new.astype(kv_cache["k"].dtype),
+                kv_cache["length"], axis=2)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["v"], v_new.astype(kv_cache["v"].dtype),
+                kv_cache["length"], axis=2)
+            keys = ck.astype(q.dtype)
+            vals = cv.astype(q.dtype)
+            new_cache = {"k": ck, "v": cv, "length": kv_cache["length"] + S}
+        T = keys.shape[2]
+        groups = H // KV
+        qg = q.transpose(0, 2, 1, 3).reshape(B, KV, groups * S, hd)
+        logits = jnp.einsum("bkqh,bkth->bkqt", qg, keys)
+        tpos = jnp.arange(T)
+        valid = tpos[None, None, None, :] <= kv_cache["length"]
+        logits = jnp.where(valid, logits, -1e30)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+        ctx = jnp.einsum("bkqt,bkth->bkqh", probs, vals)
+        ctx = ctx.reshape(B, KV, groups, S, hd).transpose(0, 3, 1, 2, 4)
+        ctx = ctx.reshape(B, S, H * hd)
+        return ctx @ lp["wo"], new_cache
+
+    # training / prefill: causal attention, GQA via head grouping; query
+    # chunking bounds the logits working set at [.., chunk, S].
+    groups = H // KV
+    qh = q.transpose(0, 2, 1, 3).reshape(B, KV, groups, S, hd)
+    kh = k.transpose(0, 2, 1, 3)  # [B, KV, S, hd]
+    vh = v.transpose(0, 2, 1, 3)
+    if cfg.attn_chunk and S > cfg.attn_chunk and S % cfg.attn_chunk == 0 and mask is None:
+        ctx = _causal_chunk_attn(qh, kh, vh, 0, S, cfg.attn_chunk, x.dtype)
+    else:
+        logits = jnp.einsum("bkgqh,bkth->bkgqt", qh, kh)
+        causal = jnp.tril(jnp.ones((S, S), bool))
+        if mask is not None:
+            causal = jnp.logical_and(causal, mask)
+        logits = jnp.where(causal, logits, -1e30)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(x.dtype)
+        ctx = jnp.einsum("bkgqt,bkth->bkgqh", probs, vh)
+    ctx = ctx.transpose(0, 3, 1, 2, 4).reshape(B, S, H * hd)
+    return ctx @ lp["wo"], None
+
+
+def _dense_ffn(lp, x):
+    gate = jax.nn.silu(x @ lp["w_gate"])
+    up = x @ lp["w_up"]
+    return (gate * up) @ lp["w_down"]
+
+
+def _moe_ffn(lp, x, cfg: TransformerConfig):
+    """Grouped dense-dispatch top-k MoE (GShard-style einsum routing).
+
+    Each batch row is a routing group: capacity is per-group, so the
+    one-hot dispatch tensor is [B, S, k, E, C] with B shardable over dp
+    (C = capacity_factor * S * k / E). Under GSPMD with experts sharded
+    over ``model`` the dispatch/combine einsums lower to all-to-alls —
+    the canonical EP pattern.
+    """
+    B0, S0, d = x.shape
+    if cfg.moe_group and S0 > cfg.moe_group and S0 % cfg.moe_group == 0:
+        x = x.reshape(B0 * S0 // cfg.moe_group, cfg.moe_group, d)
+    B, S, _ = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    logits = x @ lp["router"]  # [B, S, E]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # [B, S, k]
+    gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    cap = max(int(cfg.capacity_factor * S * k / E), 4)
+    # position of each (token, slot) within its expert's per-group buffer
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)  # [B, S, k, E]
+    flat = onehot.reshape(B, S * k, E)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(B, S, k, E)
+    pos = jnp.sum(pos_in_expert * onehot, -1)  # [B, S, k]
+    keep = pos < cap
+    gate_vals = jnp.where(keep, gate_vals, 0.0)
+
+    # dispatch [B, S, k, E, C] one-hot -> combine via einsums
+    disp = (
+        jax.nn.one_hot(gate_idx, E, dtype=x.dtype)[..., None]
+        * jax.nn.one_hot(
+            jnp.where(keep, pos, cap), cap + 1, dtype=x.dtype
+        )[..., None, :]
+    )[..., :cap]  # [B, S, k, E, C]
+    disp_comb = disp * gate_vals[..., None, None].astype(x.dtype)
+    expert_in = jnp.einsum("bsd,bskec->becd", x, disp)  # [B, E, C, d]
+    gate = jnp.einsum("becd,edf->becf", expert_in, lp["w_gate"])
+    up = jnp.einsum("becd,edf->becf", expert_in, lp["w_up"])
+    expert_out = jnp.einsum("becf,efd->becd", jax.nn.silu(gate) * up, lp["w_down"])
+    out = jnp.einsum("becd,bskec->bsd", expert_out, disp_comb)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(
+        jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32), axis=(0, 1)
+    )
+    aux = E * jnp.sum(me * ce)
+    return out.reshape(B0, S0, d), aux
+
+
+def _layer(lp, x, positions, cfg: TransformerConfig, kv_cache=None,
+           constrain=None):
+    h, new_cache = _attention(
+        lp, rms_norm(x, lp["attn_norm"]), positions, cfg, kv_cache=kv_cache
+    )
+    x = x + h
+    if constrain is not None:
+        # Megatron-SP: pin the residual stream to its sequence-sharded
+        # layout right after each residual add — GSPMD then emits
+        # reduce-scatter(+fused all-gather) pairs instead of round-trip
+        # reshards of the full activation.
+        x = constrain(x)
+    if cfg.is_moe:
+        h, aux = _moe_ffn(lp, rms_norm(x, lp["ffn_norm"]), cfg)
+    else:
+        h, aux = _dense_ffn(lp, rms_norm(x, lp["ffn_norm"])), 0.0
+    x = x + h
+    if constrain is not None:
+        x = constrain(x)
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Forward passes.
+# ---------------------------------------------------------------------------
+
+
+def backbone(params: Params, tokens: jax.Array, cfg: TransformerConfig,
+             constrain=None) -> Tuple[jax.Array, jax.Array]:
+    """Scan-over-layers trunk: tokens [B, S] -> (hidden [B, S, d], aux)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    positions = jnp.arange(S)[None, :].astype(jnp.int32)
+
+    def body(carry, lp):
+        x, aux = carry
+        inner = constrain if cfg.activation_sharding == "seq_residual" else None
+        if constrain is not None and inner is None:
+            x = constrain(x)
+        y, a, _ = _layer(lp, x, positions, cfg, constrain=inner)
+        return (y, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    return rms_norm(x, params["final_norm"]), aux / cfg.n_layers
+
+
+def forward(params: Params, tokens: jax.Array, cfg: TransformerConfig,
+            constrain=None) -> Tuple[jax.Array, jax.Array]:
+    """Training forward: tokens [B, S] -> (logits [B, S, V], aux loss)."""
+    x, aux = backbone(params, tokens, cfg, constrain=constrain)
+    logits = x @ params["embed"].T.astype(cfg.dtype)
+    return logits, aux
+
+
+def lm_loss(params: Params, tokens: jax.Array, labels: jax.Array,
+            cfg: TransformerConfig, constrain=None) -> jax.Array:
+    logits, aux = forward(params, tokens, cfg, constrain=constrain)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll) + 0.01 * aux
+
+
+def init_kv_cache(cfg: TransformerConfig, batch: int, max_len: int,
+                  dtype=None) -> Dict[str, jax.Array]:
+    """Stacked cache for scan: k/v [L, B, KV, T, hd]. int8 dtype adds
+    per-token scale planes (BEBR-style quantised serving memory)."""
+    dtype = cfg.kv_cache_dtype if dtype is None else dtype
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+    cache = {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+    if dtype == jnp.int8:
+        sshape = shape[:-1] + (1,)
+        cache["k_scale"] = jnp.zeros(sshape, jnp.float32)
+        cache["v_scale"] = jnp.zeros(sshape, jnp.float32)
+    return cache
+
+
+def decode_step(params: Params, token: jax.Array, cache: Dict[str, jax.Array],
+                cfg: TransformerConfig) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step. token: [B] int32. Returns (logits [B, V], cache)."""
+    B = token.shape[0]
+    x = params["embed"][token][:, None, :].astype(cfg.dtype)  # [B, 1, d]
+    pos = jnp.full((1, 1), cache["length"], jnp.int32)
+    quantized = "k_scale" in cache
+
+    def body(carry, layer_in):
+        x = carry
+        if quantized:
+            lp, ck, cv, cks, cvs = layer_in
+            lc = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
+                  "length": cache["length"]}
+        else:
+            lp, ck, cv = layer_in
+            lc = {"k": ck, "v": cv, "length": cache["length"]}
+        y, _, new_cache = _layer(lp, x, pos, cfg, kv_cache=lc)
+        if quantized:
+            return y, (new_cache["k"], new_cache["v"], new_cache["k_scale"],
+                       new_cache["v_scale"])
+        return y, (new_cache["k"], new_cache["v"])
+
+    if quantized:
+        xs = (params["layers"], cache["k"], cache["v"], cache["k_scale"],
+              cache["v_scale"])
+        x, (nk, nv, nks, nvs) = jax.lax.scan(body, x, xs)
+        new_cache = {"k": nk, "v": nv, "k_scale": nks, "v_scale": nvs,
+                     "length": cache["length"] + 1}
+    else:
+        x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                             cache["v"]))
+        new_cache = {"k": nk, "v": nv, "length": cache["length"] + 1}
+    x = rms_norm(x, params["final_norm"])
+    logits = (x @ params["embed"].T.astype(cfg.dtype))[:, 0, :]
+    return logits, new_cache
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: TransformerConfig) -> jax.Array:
+    """Prefill forward: last-position logits [B, V]. The unembed runs on
+    the final position only — never materialises [B, S, V]."""
+    x, _ = backbone(params, tokens, cfg)
+    return x[:, -1, :] @ params["embed"].T.astype(cfg.dtype)

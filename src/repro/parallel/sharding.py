@@ -1,0 +1,160 @@
+"""Sharding rules: logical parameter/activation layouts per model family.
+
+Conventions (DESIGN.md §5):
+  * mesh axes: ("data", "model") single-pod, ("pod", "data", "model")
+    multi-pod; ``pod`` composes with ``data`` for data parallelism.
+  * LM params: FSDP over ``data`` x TP over ``model`` (MaxText-style 2D),
+    optimizer state inherits => fully sharded (ZeRO-3-equivalent).
+  * MoE experts: EP over ``model`` when divisible, else TP inside experts.
+  * recsys embedding tables: row-sharded over (data, model) — the
+    embedding analogue of EP, the paper's scale axis.
+  * GNN: edge-sharded over dp, node states replicated.
+  * activations: batch over dp; optional Megatron-SP (sequence over
+    ``model``) for the scan carry between layers.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.transformer import TransformerConfig
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def ns(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# LM transformer.
+# ---------------------------------------------------------------------------
+
+
+def lm_param_sharding(mesh: Mesh, cfg: TransformerConfig) -> Dict[str, Any]:
+    dp = dp_axes(mesh)
+    fsdp = dp  # parameters shard their "reduction" dim over dp (FSDP)
+    layer = {
+        "attn_norm": ns(mesh, None, None),
+        "wq": ns(mesh, None, fsdp, "model"),
+        "wk": ns(mesh, None, fsdp, "model"),
+        "wv": ns(mesh, None, fsdp, "model"),
+        "wo": ns(mesh, None, "model", fsdp),
+        "ffn_norm": ns(mesh, None, None),
+    }
+    if cfg.is_moe:
+        ep_ok = cfg.n_experts % mesh.shape["model"] == 0
+        if ep_ok:
+            layer.update(
+                router=ns(mesh, None, fsdp, None),
+                w_gate=ns(mesh, None, "model", fsdp, None),
+                w_up=ns(mesh, None, "model", fsdp, None),
+                w_down=ns(mesh, None, "model", None, fsdp),
+            )
+        else:
+            layer.update(
+                router=ns(mesh, None, fsdp, None),
+                w_gate=ns(mesh, None, None, fsdp, "model"),
+                w_up=ns(mesh, None, None, fsdp, "model"),
+                w_down=ns(mesh, None, None, "model", fsdp),
+            )
+    else:
+        layer.update(
+            w_gate=ns(mesh, None, fsdp, "model"),
+            w_up=ns(mesh, None, fsdp, "model"),
+            w_down=ns(mesh, None, "model", fsdp),
+        )
+    return {
+        "embed": ns(mesh, "model", fsdp),
+        "final_norm": ns(mesh, None),
+        "layers": layer,
+    }
+
+
+def lm_batch_sharding(mesh: Mesh) -> NamedSharding:
+    return ns(mesh, dp_axes(mesh), None)  # tokens [B, S]
+
+
+def lm_activation_constraint(mesh: Mesh, cfg: TransformerConfig):
+    """Constraint applied to the residual stream between layers."""
+    dp = dp_axes(mesh)
+    if cfg.activation_sharding == "seq":
+        spec = P(dp, "model", None)  # Megatron-SP: sequence over model
+    else:
+        spec = P(dp, None, None)
+
+    def constrain(x):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+def lm_cache_sharding(mesh: Mesh, cfg: TransformerConfig, *, context_parallel: bool):
+    """KV cache [L, B, KV, T, hd]."""
+    dp = dp_axes(mesh)
+    if context_parallel:
+        kv = ns(mesh, None, None, None, dp, None)  # shard the time axis
+    else:
+        kv = ns(mesh, None, dp, None, None, None)  # shard the batch axis
+    return {"k": kv, "v": kv, "length": ns(mesh)}
+
+
+# ---------------------------------------------------------------------------
+# RecSys.
+# ---------------------------------------------------------------------------
+
+
+def replicate_like(mesh: Mesh, tree: Any) -> Any:
+    return jax.tree_util.tree_map(lambda _: ns(mesh), tree)
+
+
+def recsys_table_sharding(mesh: Mesh) -> NamedSharding:
+    return ns(mesh, dp_axes(mesh) + ("model",), None)  # [V, D] row-sharded
+
+
+def recsys_batch_sharding(mesh: Mesh) -> NamedSharding:
+    return ns(mesh, dp_axes(mesh))
+
+
+def fill_param_sharding(mesh: Mesh, params_shape: Any, table_keys: Tuple[str, ...],
+                        stacked_table_keys: Tuple[str, ...] = ()) -> Any:
+    """Build a sharding pytree for a recsys model: named embedding tables
+    row-sharded, everything else replicated."""
+
+    def rule(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        if any(n in table_keys for n in names):
+            return recsys_table_sharding(mesh)
+        if any(n in stacked_table_keys for n in names):
+            return ns(mesh, None, dp_axes(mesh) + ("model",), None)
+        return ns(mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# GNN.
+# ---------------------------------------------------------------------------
+
+
+def gnn_param_sharding(mesh: Mesh, params_shape: Any) -> Any:
+    return replicate_like(mesh, params_shape)  # tiny params, replicate
+
+
+def gnn_edge_sharding(mesh: Mesh) -> NamedSharding:
+    # edges shard over the full mesh (they dominate memory at 61M edges)
+    return ns(mesh, dp_axes(mesh) + ("model",))
+
+
+def gnn_edge_feat_sharding(mesh: Mesh) -> NamedSharding:
+    return ns(mesh, dp_axes(mesh) + ("model",), None)
+
+
+def gnn_node_sharding(mesh: Mesh) -> NamedSharding:
+    # node states shard over `model` (edges over dp): 2D graph parallelism.
+    return ns(mesh, "model", None)

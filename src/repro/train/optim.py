@@ -1,0 +1,107 @@
+"""Pure-JAX optimizers (no optax dependency).
+
+Adam / AdamW with global-norm gradient clipping (the paper clips at 5.0)
+and learning-rate schedules. API mirrors optax's (init, update) pair so it
+drops into pjit'd train steps; all state is an explicit pytree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 0.02  # paper's initial LR for binarizer training
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0  # >0 => AdamW (decoupled)
+    clip_norm: float = 5.0  # paper: clip when grad norm exceeds 5
+    schedule: Optional[Callable[[jax.Array], jax.Array]] = None
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), tree)
+
+
+def adam_init(params: PyTree) -> AdamState:
+    # f32 accumulators regardless of param dtype (bf16 moments diverge).
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree_util.tree_map(zeros, params),
+        nu=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def adam_update(
+    grads: PyTree, state: AdamState, params: PyTree, cfg: AdamConfig
+) -> tuple[PyTree, AdamState]:
+    """Returns (new_params, new_state)."""
+    if cfg.clip_norm and cfg.clip_norm > 0:
+        grads = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = cfg.lr if cfg.schedule is None else cfg.lr * cfg.schedule(step)
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay > 0:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamState(step=step, mu=new_m, nu=new_v)
+
+
+# ---------------------------------------------------------------------------
+# Schedules.
+# ---------------------------------------------------------------------------
+
+
+def cosine_schedule(total_steps: int, warmup: int = 0, floor: float = 0.0):
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total_steps - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+
+    return sched
+
+
+def constant_schedule():
+    return lambda step: jnp.ones((), jnp.float32)

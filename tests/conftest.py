@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Tests run on the single host CPU device (the dry-run forces 512 devices
+# in its own process only — never here).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,115 @@
+"""Unit + property tests for the recurrent binarization core."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BinarizerConfig,
+    binarize,
+    code_affine_constants,
+    codes_to_values,
+    init_binarizer,
+    pack_bitplanes,
+    pack_codes,
+    ste_sign,
+    unpack_bitplanes,
+    unpack_codes,
+    values_to_codes,
+)
+
+
+def test_ste_sign_forward():
+    x = jnp.array([-2.0, -0.1, 0.0, 0.1, 2.0])
+    out = ste_sign(x)
+    assert jnp.all(jnp.abs(out) == 1.0)
+    np.testing.assert_array_equal(np.asarray(out), [-1, -1, -1, 1, 1])
+
+
+def test_ste_sign_gradient_window():
+    g = jax.grad(lambda x: jnp.sum(ste_sign(x)))(
+        jnp.array([-2.0, -0.5, 0.5, 2.0])
+    )
+    np.testing.assert_array_equal(np.asarray(g), [0.0, 1.0, 1.0, 0.0])
+
+
+@pytest.mark.parametrize("n_levels", [1, 2, 3, 4])
+@pytest.mark.parametrize("hidden", [0, 32])
+def test_binarize_shapes_and_grid(n_levels, hidden):
+    cfg = BinarizerConfig(input_dim=48, code_dim=32, n_levels=n_levels,
+                          hidden_dim=hidden)
+    p, s = init_binarizer(jax.random.PRNGKey(0), cfg)
+    f = jax.random.normal(jax.random.PRNGKey(1), (6, 48))
+    bits, b_u, _ = binarize(p, s, f, cfg)
+    assert bits.shape == (6, n_levels, 32)
+    assert b_u.shape == (6, 32)
+    assert bool(jnp.all(jnp.abs(bits) == 1.0))
+    # b_u values lie on the 2^{-u} grid
+    a, beta = code_affine_constants(n_levels)
+    codes = (b_u - beta) / a
+    np.testing.assert_allclose(np.asarray(codes), np.round(np.asarray(codes)),
+                               atol=1e-5)
+
+
+def test_affine_identity_exact_all_codes():
+    """v = a*c + beta must hold exactly for every code at every level."""
+    for n_levels in range(1, 7):
+        codes = jnp.arange(2**n_levels, dtype=jnp.int8)[None, :]
+        bits = unpack_codes(codes, n_levels)
+        w = 2.0 ** -jnp.arange(n_levels)
+        direct = jnp.einsum("qnm,n->qm", bits, w)
+        via_affine = codes_to_values(codes, n_levels)
+        np.testing.assert_allclose(np.asarray(direct), np.asarray(via_affine),
+                                   atol=0)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n_levels=st.integers(1, 6),
+    batch=st.integers(1, 8),
+    m=st.sampled_from([32, 64, 96]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pack_roundtrips(n_levels, batch, m, seed):
+    key = jax.random.PRNGKey(seed)
+    bits = (jax.random.bernoulli(key, 0.5, (batch, n_levels, m)) * 2 - 1
+            ).astype(jnp.float32)
+    codes = pack_codes(bits)
+    assert codes.dtype == jnp.int8
+    assert bool(jnp.all(unpack_codes(codes, n_levels) == bits))
+    packed = pack_bitplanes(bits)
+    assert bool(jnp.all(unpack_bitplanes(packed, m) == bits))
+    vals = codes_to_values(codes, n_levels)
+    assert bool(jnp.all(values_to_codes(vals, n_levels) == codes))
+
+
+def test_gradients_flow_through_all_levels():
+    cfg = BinarizerConfig(input_dim=16, code_dim=8, n_levels=3, hidden_dim=12)
+    p, s = init_binarizer(jax.random.PRNGKey(0), cfg)
+    f = jax.random.normal(jax.random.PRNGKey(1), (4, 16))
+
+    def loss(params):
+        _, b_u, _ = binarize(params, s, f, cfg, train=True)
+        return jnp.sum(b_u**2)
+
+    g = jax.grad(loss)(p)
+    for t in range(cfg.n_levels):
+        wnorm = sum(
+            float(jnp.abs(v).sum())
+            for v in jax.tree_util.tree_leaves(g["W"][t])
+        )
+        assert wnorm > 0, f"no gradient into W_{t}"
+
+
+def test_bn_state_updates_in_train_mode():
+    cfg = BinarizerConfig(input_dim=16, code_dim=8, n_levels=2, hidden_dim=12)
+    p, s = init_binarizer(jax.random.PRNGKey(0), cfg)
+    f = jax.random.normal(jax.random.PRNGKey(1), (32, 16)) * 3.0
+    _, _, s_train = binarize(p, s, f, cfg, train=True)
+    assert not np.allclose(np.asarray(s_train["W"][0]["bn_mean"]),
+                           np.asarray(s["W"][0]["bn_mean"]))
+    _, _, s_eval = binarize(p, s, f, cfg, train=False)
+    assert np.allclose(np.asarray(s_eval["W"][0]["bn_mean"]),
+                       np.asarray(s["W"][0]["bn_mean"]))

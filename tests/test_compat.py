@@ -1,0 +1,125 @@
+"""Backward-compatible binarizer training (paper §3.2.3, Table 4).
+
+Scenario: a backbone upgrade drifts the float embedding space (v2 encoder
+correlated-but-not-identical to v1). The old binary index stays frozen;
+phi_new must encode NEW-backbone queries to search it (Eq. 6-8).
+
+Verified ordering (the paper's Table 4 narrative):
+  free-trained new model (no constraint)  ~ 0    — incompatible
+  warm-start only (no BC training)        < ours — drift uncorrected
+  ours (L + L_BC + influence, Eq. 9-10)   ~ baseline(old, old)
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.losses as L
+from repro.core import (
+    BinarizerConfig,
+    TrainConfig,
+    bc_train_step,
+    binarize_eval,
+    init_train_state,
+    train_step,
+)
+from repro.data.synthetic import backbone_upgrade, clustered_corpus, pair_batches
+from repro.train import optim
+
+DIM, CODE, LEVELS = 64, 32, 3
+
+
+def _cfg():
+    return TrainConfig(
+        binarizer=BinarizerConfig(input_dim=DIM, code_dim=CODE,
+                                  n_levels=LEVELS, hidden_dim=48),
+        queue=L.QueueConfig(length=512, dim=CODE, top_k=16),
+        adam=optim.AdamConfig(lr=1e-3, clip_norm=5.0),
+        temperature=0.2, bc_weight=1.0, bc_influence_weight=4.0,
+    )
+
+
+def _train(cfg, docs, steps=150, seed=0):
+    state = init_train_state(jax.random.PRNGKey(seed), cfg)
+    step = jax.jit(functools.partial(train_step, cfg=cfg))
+    gen = pair_batches(docs, seed + 1, 64)
+    for _ in range(steps):
+        a, p = next(gen)
+        state, _ = step(state, a, p)
+    return state
+
+
+def _warm_copy(cfg, old, seed):
+    st = init_train_state(jax.random.PRNGKey(seed), cfg)
+    return st._replace(
+        params=jax.tree_util.tree_map(jnp.copy, old.params),
+        m_params=jax.tree_util.tree_map(jnp.copy, old.params),
+        bn_state=jax.tree_util.tree_map(jnp.copy, old.bn_state),
+        m_bn_state=jax.tree_util.tree_map(jnp.copy, old.bn_state),
+    )
+
+
+def _train_bc(cfg, old, old_docs, new_docs, steps=300, seed=7):
+    state = _warm_copy(cfg, old, seed)
+    step = jax.jit(functools.partial(bc_train_step, cfg=cfg))
+    rng = np.random.default_rng(seed + 1)
+    for _ in range(steps):
+        idx = rng.integers(0, old_docs.shape[0], 128)
+        noise = rng.normal(size=(128, DIM)).astype(np.float32) * 0.02
+        a = new_docs[idx] + noise
+        a /= np.linalg.norm(a, axis=-1, keepdims=True) + 1e-12
+        state, _ = step(state, old.params, old.bn_state, jnp.asarray(a),
+                        jnp.asarray(old_docs[idx]))
+    return state
+
+
+def _recall_cross(cfg, q_state, d_state, q_emb, d_emb, gt, k=10):
+    bq = binarize_eval(q_state.params, q_state.bn_state, jnp.asarray(q_emb),
+                       cfg.binarizer)
+    bd = binarize_eval(d_state.params, d_state.bn_state, jnp.asarray(d_emb),
+                       cfg.binarizer)
+    _, idx = jax.lax.top_k(L.cosine(bq, bd), k)
+    return float(jnp.mean(jnp.any(idx == jnp.asarray(gt)[:, None], -1)))
+
+
+def test_backward_compatible_upgrade():
+    docs, queries, gt = clustered_corpus(0, 3000, 64, DIM, n_clusters=128)
+    new_docs = backbone_upgrade(docs, 5)
+    new_queries = backbone_upgrade(queries, 5)
+    cfg = _cfg()
+
+    old = _train(cfg, docs, seed=0)
+    baseline = _recall_cross(cfg, old, old, queries, docs, gt)
+
+    # new model trained freely on the new space: incompatible with old index
+    free = _train(cfg, new_docs, seed=99)
+    incompatible = _recall_cross(cfg, free, old, new_queries, docs, gt)
+
+    # warm start only (deploy phi_old against the new backbone, no training)
+    warm_only = _recall_cross(cfg, old, old, new_queries, docs, gt)
+
+    # ours: BC training (Eq. 9-10 + influence)
+    bc = _train_bc(cfg, old, docs, new_docs)
+    compatible = _recall_cross(cfg, bc, old, new_queries, docs, gt)
+
+    assert baseline > 0.8, baseline
+    assert incompatible < 0.2, incompatible
+    assert compatible > warm_only + 0.05, (warm_only, compatible)
+    assert compatible > incompatible + 0.3, (incompatible, compatible)
+    assert compatible >= baseline - 0.2, (baseline, compatible)
+
+
+def test_bc_loss_terms_finite():
+    docs, _, _ = clustered_corpus(1, 500, 8, DIM)
+    cfg = _cfg()
+    old = _train(cfg, docs, steps=5)
+    state = init_train_state(jax.random.PRNGKey(3), cfg)
+    gen = pair_batches(docs, 5, 32)
+    a, p = next(gen)
+    state, metrics = jax.jit(functools.partial(bc_train_step, cfg=cfg))(
+        state, old.params, old.bn_state, a, p
+    )
+    assert np.isfinite(float(metrics["loss_self"]))
+    assert np.isfinite(float(metrics["loss_bc"]))

@@ -1,0 +1,68 @@
+"""Queue mechanics, hard-negative mining, EMA updates."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.losses as L
+
+
+def test_queue_fifo_and_fill():
+    q = L.init_queue(L.QueueConfig(length=8, dim=4, top_k=2))
+    b1 = jnp.ones((3, 4)) * 1
+    b2 = jnp.ones((3, 4)) * 2
+    b3 = jnp.ones((3, 4)) * 3
+    q = L.queue_push(q, b1)
+    q = L.queue_push(q, b2)
+    assert int(q["filled"]) == 6 and int(q["ptr"]) == 6
+    q = L.queue_push(q, b3)  # wraps: slots 6,7,0
+    assert int(q["filled"]) == 8
+    assert float(q["buf"][0, 0]) == 3.0  # oldest overwritten
+    assert float(q["buf"][5, 0]) == 2.0
+
+
+def test_mine_hard_negatives_masks_unfilled():
+    q = L.init_queue(L.QueueConfig(length=16, dim=4, top_k=4))
+    q = L.queue_push(q, jnp.eye(4))
+    anchors = jnp.eye(4)
+    negs = L.mine_hard_negatives(q, anchors, 4)
+    # only 4 valid rows exist; all returned rows must be from them
+    assert negs.shape == (4, 4, 4)
+    assert float(jnp.max(jnp.abs(negs))) <= 1.0
+
+
+def test_mine_hard_negatives_picks_highest_similarity():
+    q = L.init_queue(L.QueueConfig(length=8, dim=3, top_k=1))
+    entries = jnp.array([[1, 0, 0], [0.9, 0.1, 0], [0, 1, 0], [0, 0, 1.0]],
+                        jnp.float32)
+    q = L.queue_push(q, entries)
+    anchor = jnp.array([[1.0, 0, 0]])
+    negs = L.mine_hard_negatives(q, anchor, 1)
+    np.testing.assert_allclose(np.asarray(negs[0, 0]), [1, 0, 0], atol=1e-6)
+
+
+def test_positive_exclusion():
+    q = L.init_queue(L.QueueConfig(length=8, dim=3, top_k=1))
+    entries = jnp.array([[1, 0, 0], [0.6, 0.8, 0]], jnp.float32)
+    q = L.queue_push(q, entries)
+    anchor = jnp.array([[1.0, 0, 0]])
+    pos = jnp.array([[1.0, 0, 0]])  # identical to queue row 0
+    negs = L.mine_hard_negatives(q, anchor, 1, positives=pos)
+    np.testing.assert_allclose(np.asarray(negs[0, 0]), [0.6, 0.8, 0], atol=1e-6)
+
+
+def test_info_nce_prefers_aligned_positive():
+    a = jnp.array([[1.0, 0, 0]])
+    pos = jnp.array([[1.0, 0, 0]])
+    neg = jnp.array([[[0, 1.0, 0], [0, 0, 1.0]]])
+    low = L.info_nce(a, pos, neg)
+    hard_pos = jnp.array([[0, 1.0, 0]])
+    high = L.info_nce(a, hard_pos, neg)
+    assert float(low) < float(high)
+
+
+def test_ema_update_moves_toward_online():
+    online = {"w": jnp.ones((3,))}
+    momentum = {"w": jnp.zeros((3,))}
+    out = L.ema_update(online, momentum, decay=0.9)
+    np.testing.assert_allclose(np.asarray(out["w"]), 0.1, rtol=1e-6)

@@ -1,0 +1,184 @@
+"""Optimizer, checkpoint (fault tolerance), gradient compression."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as ck
+from repro.train import compression as comp
+from repro.train import optim
+
+
+# ---------------------------------------------------------------------------
+# Adam.
+# ---------------------------------------------------------------------------
+
+
+def test_adam_matches_reference_numpy():
+    cfg = optim.AdamConfig(lr=0.1, b1=0.9, b2=0.999, eps=1e-8, clip_norm=0.0)
+    p = {"w": jnp.array([1.0, -2.0, 3.0])}
+    st = optim.adam_init(p)
+    g = {"w": jnp.array([0.5, -0.5, 1.0])}
+
+    # two steps in jax
+    p1, st1 = optim.adam_update(g, st, p, cfg)
+    p2, _ = optim.adam_update(g, st1, p1, cfg)
+
+    # reference numpy implementation
+    w = np.array([1.0, -2.0, 3.0])
+    m = np.zeros(3)
+    v = np.zeros(3)
+    gn = np.array([0.5, -0.5, 1.0])
+    for t in (1, 2):
+        m = 0.9 * m + 0.1 * gn
+        v = 0.999 * v + 0.001 * gn**2
+        mh = m / (1 - 0.9**t)
+        vh = v / (1 - 0.999**t)
+        w = w - 0.1 * mh / (np.sqrt(vh) + 1e-8)
+    np.testing.assert_allclose(np.asarray(p2["w"]), w, rtol=1e-5)
+
+
+def test_adam_converges_on_quadratic():
+    cfg = optim.AdamConfig(lr=0.1, clip_norm=5.0)
+    p = {"x": jnp.array([5.0, -3.0])}
+    st = optim.adam_init(p)
+    loss = lambda p: jnp.sum((p["x"] - jnp.array([1.0, 2.0])) ** 2)
+    for _ in range(300):
+        g = jax.grad(loss)(p)
+        p, st = optim.adam_update(g, st, p, cfg)
+    np.testing.assert_allclose(np.asarray(p["x"]), [1.0, 2.0], atol=1e-2)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((10,)) * 10.0}
+    clipped = optim.clip_by_global_norm(g, 1.0)
+    assert float(optim.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    small = {"a": jnp.ones((4,)) * 0.01}
+    same = optim.clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(same["a"]), 0.01, rtol=1e-5)
+
+
+def test_schedules():
+    s = optim.cosine_schedule(100, warmup=10)
+    assert float(s(jnp.array(0))) == 0.0
+    assert float(s(jnp.array(10))) == pytest.approx(1.0)
+    assert float(s(jnp.array(100))) == pytest.approx(0.0, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint / fault tolerance.
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "nested": {"b": jnp.ones((5,), jnp.bfloat16),
+                   "c": jnp.array(7, jnp.int32)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 3, t)
+    restored, step = ck.restore(str(tmp_path), t)
+    assert step == 3
+    for a, b in zip(jax.tree_util.tree_leaves(t),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_latest_and_keep_last(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ck.save(str(tmp_path), s, t, keep_last=2)
+    assert ck.latest_step(str(tmp_path)) == 5
+    dirs = [d for d in os.listdir(tmp_path) if d.startswith("step_")]
+    assert len(dirs) == 2
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    t = _tree()
+    path = ck.save(str(tmp_path), 1, t)
+    # corrupt one array file
+    target = os.path.join(path, "arr_00000.npy")
+    arr = np.load(target)
+    arr.flat[0] += 1
+    np.save(target, arr)
+    with pytest.raises(IOError, match="CRC"):
+        ck.restore(str(tmp_path), t)
+
+
+def test_checkpoint_skips_torn_write(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 1, t)
+    # simulate a preempted writer: later step dir without manifest
+    os.makedirs(tmp_path / "step_0000000009")
+    assert ck.latest_step(str(tmp_path)) == 1
+    _, step = ck.restore(str(tmp_path), t)
+    assert step == 1
+
+
+def test_checkpoint_restart_determinism(tmp_path):
+    """Kill-and-resume yields the same params as an uninterrupted run."""
+    from repro.data.synthetic import lm_batch
+
+    cfg = optim.AdamConfig(lr=0.05)
+    p0 = {"w": jnp.ones((4, 4))}
+
+    def run(steps, resume_from=None, start=0):
+        p = {"w": jnp.ones((4, 4))}
+        st = optim.adam_init(p)
+        if resume_from is not None:
+            (p, st), start = ck.restore(resume_from, (p, st))
+        for i in range(start, steps):
+            b = lm_batch(i, 2, 4, 8)["tokens"].astype(jnp.float32)
+            g = jax.grad(lambda p: jnp.sum((b[:, :4] @ p["w"]) ** 2))(p)
+            p, st = optim.adam_update(g, st, p, cfg)
+        return p
+
+    full = run(10)
+    # interrupted run: 5 steps, checkpoint, resume to 10
+    p = {"w": jnp.ones((4, 4))}
+    st = optim.adam_init(p)
+    for i in range(5):
+        b = lm_batch(i, 2, 4, 8)["tokens"].astype(jnp.float32)
+        g = jax.grad(lambda p: jnp.sum((b[:, :4] @ p["w"]) ** 2))(p)
+        p, st = optim.adam_update(g, st, p, cfg)
+    ck.save(str(tmp_path), 5, (p, st))
+    resumed = run(10, resume_from=str(tmp_path))
+    np.testing.assert_allclose(np.asarray(full["w"]), np.asarray(resumed["w"]),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression.
+# ---------------------------------------------------------------------------
+
+
+def test_int8_quantize_roundtrip_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,))
+    q, s = comp.quantize_int8(x)
+    err = jnp.max(jnp.abs(comp.dequantize_int8(q, s) - x))
+    assert float(err) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_unbiased_over_time():
+    """With error feedback, the accumulated compressed signal converges to
+    the accumulated true signal (residual stays bounded)."""
+    g_true = jax.random.normal(jax.random.PRNGKey(1), (256,)) * 0.1
+    e = jnp.zeros((256,))
+    total = jnp.zeros((256,))
+    for _ in range(50):
+        corrected = g_true + e
+        q, s = comp.quantize_int8(corrected)
+        deq = comp.dequantize_int8(q, s)
+        e = corrected - deq
+        total = total + deq
+    drift = jnp.max(jnp.abs(total - 50 * g_true))
+    # residual never exceeds one quantisation bucket
+    assert float(drift) <= float(jnp.max(jnp.abs(g_true + e)) / 127.0 * 2 + 1e-4)
