@@ -37,6 +37,9 @@ def main() -> None:
         "table3": lambda: table3_training_pipelines.run(steps=max(steps // 3, 60)),
         "table4": lambda: table4_backward_compat.run(steps=max(steps // 2, 100)),
         "table5": table5_search_latency.run,
+        # machine-readable scan perf (BENCH_sdc_scan.json) without the
+        # rest of table5 — cheap enough for every CI run.
+        "bench_sdc_scan": table5_search_latency.emit_sdc_scan_json,
         "fig6": lambda: fig6_ann_integration.run(steps=max(steps // 2, 100)),
         "table67": lambda: table67_system_ab.run(steps=max(steps // 2, 100)),
         "bits_sweep": lambda: bits_sweep.run(steps=max(steps // 2, 100)),

@@ -14,6 +14,8 @@ Key claims to reproduce: bitwise cost grows with levels^2, SDC cost is
 from __future__ import annotations
 
 import functools
+import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -21,14 +23,21 @@ import numpy as np
 
 from benchmarks.common import timeit
 from repro.core.binarize_lib import (
-    code_affine_constants,
     pack_bitplanes,
+    pack_codes_nibbles,
+    sdc_affine_epilogue,
     unpack_codes,
 )
+from repro.index import ivf as ivf_lib
 from repro.kernels.sdc import ref as R
+from repro.kernels.sdc.ops import sdc_search_xla
 
 
 N, Q, M = 100_000, 16, 64  # corpus, queries, code dim (256 bits at u=4)
+
+# Machine-readable scan benchmark (consumed by later PRs to track the perf
+# trajectory): engine variant x packed/unpacked -> ms + bytes scanned.
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_sdc_scan.json")
 
 
 @functools.partial(jax.jit, static_argnames=("n_levels", "m"))
@@ -49,19 +58,88 @@ def bitwise_scores(q_packed, d_packed, n_levels: int, m: int):
 @functools.partial(jax.jit, static_argnames=("n_levels",))
 def sdc_scores_xla(q_codes, d_codes, d_inv, n_levels: int):
     """The SDC affine-identity int8 matmul (what the Pallas kernel does)."""
-    a, beta = code_affine_constants(n_levels)
     D = q_codes.shape[-1]
     dot = q_codes.astype(jnp.int32) @ d_codes.astype(jnp.int32).T
     sq = jnp.sum(q_codes.astype(jnp.int32), -1, keepdims=True)
     sd = jnp.sum(d_codes.astype(jnp.int32), -1)[None, :]
-    return ((a * a) * dot.astype(jnp.float32)
-            + (a * beta) * (sq + sd).astype(jnp.float32)
-            + D * beta * beta) * d_inv[None, :]
+    return sdc_affine_epilogue(dot, sq + sd, dim=D, n_levels=n_levels,
+                               inv_norm=d_inv[None, :])
 
 
 @jax.jit
 def float_scores(q, d):
     return q @ d.T
+
+
+def _scan_bytes(n_docs: int, code_dim: int, packed: bool,
+                per_doc_extra: int) -> int:
+    """HBM bytes read per scan of n_docs: codes + per-doc metadata."""
+    code_bytes = code_dim // 2 if packed else code_dim
+    return n_docs * (code_bytes + per_doc_extra)
+
+
+def emit_sdc_scan_json(path: str = BENCH_JSON, n_docs: int = 50_000,
+                       queries: int = 16, levels: int = 4, m: int = 128,
+                       nlist: int = 64, nprobe: int = 8) -> dict:
+    """Benchmark the unified scan substrate, packed vs unpacked, and write
+    BENCH_sdc_scan.json so subsequent PRs have a perf trajectory.
+
+    Rows: engine variant (flat exhaustive scan, IVF fine layer) x
+    packed/unpacked. Cols: wall ms (this host, jit'd XLA math — kernel rows
+    on real TPU come from §Roofline) and GB scanned (the HBM-traffic model
+    the int4 packing halves: codes + 4B inv-norm [+4B ids for IVF lists]).
+    """
+    key = jax.random.PRNGKey(42)
+    cd = jax.random.randint(key, (n_docs, m), 0, 2**levels).astype(jnp.int8)
+    cq = jax.random.randint(jax.random.fold_in(key, 1), (queries, m), 0,
+                            2**levels).astype(jnp.int8)
+    inv = R.doc_inv_norms(cd, levels)
+    cd_packed = pack_codes_nibbles(cd)
+
+    rows = []
+
+    def flat_row(packed):
+        d = cd_packed if packed else cd
+        t, _ = timeit(lambda: sdc_search_xla(cq, d, inv, n_levels=levels,
+                                             k=10, packed=packed))
+        rows.append({
+            "variant": "flat", "packed": packed, "ms": 1e3 * t,
+            "bytes_scanned": _scan_bytes(n_docs, m, packed, per_doc_extra=4),
+        })
+
+    flat_row(False)
+    flat_row(True)
+
+    for packed in (False, True):
+        index = ivf_lib.build_ivf(jax.random.PRNGKey(7), cd, n_levels=levels,
+                                  nlist=nlist, kmeans_iters=5, packed=packed)
+        L = index.lists_ids.shape[1]
+        t, _ = timeit(lambda: ivf_lib.search(index, cq, nprobe=nprobe, k=10,
+                                             backend="xla"))
+        rows.append({
+            "variant": "ivf", "packed": packed, "ms": 1e3 * t,
+            "bytes_scanned": queries * nprobe
+            * _scan_bytes(L, m, packed, per_doc_extra=8),
+        })
+
+    for r in rows:
+        r["gb_scanned"] = r["bytes_scanned"] / 1e9
+
+    out = {
+        "bench": "sdc_scan",
+        "host_backend": jax.default_backend(),
+        "n_docs": n_docs, "queries": queries, "levels": levels, "code_dim": m,
+        "nlist": nlist, "nprobe": nprobe,
+        "rows": rows,
+    }
+    path = os.path.abspath(path)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"\n# BENCH_sdc_scan -> {path}")
+    print("variant,packed,ms,gb_scanned")
+    for r in rows:
+        print(f"{r['variant']},{r['packed']},{r['ms']:.2f},{r['gb_scanned']:.6f}")
+    return out
 
 
 def run():
@@ -96,3 +174,4 @@ def run():
 
 if __name__ == "__main__":
     run()
+    emit_sdc_scan_json()

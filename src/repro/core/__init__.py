@@ -1,6 +1,7 @@
 """BEBR core: recurrent binarization, contrastive training, compatibility."""
 
 from repro.core.binarize_lib import (
+    SDC_NEG_INF,
     BinarizerConfig,
     binarize,
     binarize_eval,
@@ -9,9 +10,13 @@ from repro.core.binarize_lib import (
     init_binarizer,
     pack_bitplanes,
     pack_codes,
+    pack_codes_nibbles,
+    sdc_affine_epilogue,
     ste_sign,
     unpack_bitplanes,
     unpack_codes,
+    unpack_codes_nibbles,
+    unpack_nibble_planes,
     values_to_codes,
 )
 from repro.core.trainer import (

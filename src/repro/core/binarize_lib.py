@@ -241,6 +241,46 @@ def code_affine_constants(n_levels: int) -> Tuple[float, float]:
     return a, beta
 
 
+# Sentinel for "excluded from ranking" — shared by every SDC scoring path
+# (kernel tiles, jnp fallbacks, the distributed engine's failover mask).
+SDC_NEG_INF = -1e30
+
+
+def sdc_affine_epilogue(dot, code_sums, *, dim: int, n_levels: int, inv_norm=None):
+    """The SDC affine epilogue: integer-code partial sums -> scores.
+
+        <v(q), v(d)> = a^2 (c_q . c_d) + a*beta*(sum c_q + sum c_d) + D*beta^2
+
+    This is the single implementation of the identity used by the Pallas
+    kernels, the jnp fallbacks, the IVF fine layer, the distributed engine
+    and the HNSW graph walker. Keeping one copy guarantees every path is
+    bit-identical (same float op order) — the packed-int4 and int8 scans
+    produce the same dot/code_sums integers, hence the same scores.
+
+    Args:
+      dot: int32 code dot products, any shape.
+      code_sums: sum(c_q) + sum(c_d), already broadcast against ``dot``.
+      dim: D, the (unpacked) code dimension.
+      n_levels: grid levels (u + 1).
+      inv_norm: optional reciprocal document norms broadcast against ``dot``;
+        when given, scores are scaled by it. Entries with inv_norm == 0 are
+        conventionally "excluded" — callers mask them to SDC_NEG_INF.
+
+    Pure arithmetic (no jnp.* calls), so it works on numpy arrays just as
+    well as on traced jax values — including inside a Pallas kernel body.
+    (``dot`` and ``code_sums`` must be arrays: ``.astype`` is required.)
+    """
+    a, beta = code_affine_constants(n_levels)
+    scores = (
+        (a * a) * dot.astype(jnp.float32)
+        + (a * beta) * code_sums.astype(jnp.float32)
+        + dim * (beta * beta)
+    )
+    if inv_norm is not None:
+        scores = scores * inv_norm
+    return scores
+
+
 def pack_codes(bits: jax.Array) -> jax.Array:
     """[-1,+1] bits [..., n_levels, m] -> integer codes [..., m] (int8).
 
@@ -292,3 +332,46 @@ def unpack_bitplanes(packed: jax.Array, m: int) -> jax.Array:
     zo = (packed[..., None] >> shifts) & jnp.uint32(1)
     *lead, n, words, _ = zo.shape
     return (zo.reshape(*lead, n, words * 32)[..., :m].astype(jnp.float32) * 2 - 1)
+
+
+# ---------------------------------------------------------------------------
+# int4 nibble packing: 2 code dims per byte.
+#
+# For n_levels <= 4 every integer code fits in 4 bits, so the serving-time
+# storage halves: byte j of the packed row holds dim 2j in its low nibble
+# and dim 2j + 1 in its high nibble. The SDC kernels consume this layout
+# directly (shift+mask unpack on the VPU, two half-width int8 MXU matmuls),
+# halving HBM traffic per scanned document.
+# ---------------------------------------------------------------------------
+
+
+def pack_codes_nibbles(codes: jax.Array) -> jax.Array:
+    """Integer codes [..., D] (values < 16, D even) -> packed uint8 [..., D//2].
+
+    Requires n_levels <= 4 (codes in [0, 16)); values are not range-checked
+    here (that would force a host sync) — index builders validate n_levels.
+    """
+    D = codes.shape[-1]
+    if D % 2 != 0:
+        raise ValueError(f"code dim {D} must be even to nibble-pack")
+    c = codes.astype(jnp.uint8)
+    return (c[..., 0::2] | (c[..., 1::2] << 4)).astype(jnp.uint8)
+
+
+def unpack_nibble_planes(packed: jax.Array):
+    """Packed uint8 [..., D//2] -> (lo, hi) uint8 planes in [0, 16).
+
+    ``lo`` holds the even dims (0, 2, ...), ``hi`` the odd dims — the
+    layout-critical inverse of ``pack_codes_nibbles``. Every packed scoring
+    path (Pallas tiles, jnp fallbacks, IVF gather) unpacks through this one
+    helper so the nibble layout cannot silently diverge between backends.
+    """
+    p = packed.astype(jnp.uint8)
+    return p & 0xF, (p >> 4) & 0xF
+
+
+def unpack_codes_nibbles(packed: jax.Array) -> jax.Array:
+    """Packed uint8 [..., D//2] -> integer codes [..., D] (int8)."""
+    lo, hi = unpack_nibble_planes(packed)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2).astype(jnp.int8)

@@ -9,11 +9,18 @@ Communication = Q * k * 8 bytes * n_leaves — independent of corpus size,
 which is what lets one engine span tens of billions of documents. Built on
 shard_map so the same code drives the 256-chip pod and the 512-chip
 multi-pod mesh in launch/dryrun.py.
+
+Leaves score through ``kernels.sdc.ops`` — the same substrate as FlatSDC
+and IVF. ``backend="pallas"`` runs the fused scan+top-k Pallas kernel on
+each leaf (no [Q, shard_N] score matrix in HBM); ``backend="xla"`` is the
+jnp fallback for CPU meshes (identical scores, shared epilogue);
+``backend="interpret"`` exercises the kernel under the Pallas interpreter
+in tests. ``packed=True`` shards a nibble-packed uint8 [N, D//2] corpus,
+halving per-leaf scan bandwidth.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax
@@ -21,7 +28,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.binarize_lib import code_affine_constants
+from repro.kernels.sdc.ops import resolve_backend, sdc_search, sdc_search_xla
 
 
 def _leaf_scan(
@@ -32,23 +39,91 @@ def _leaf_scan(
     *,
     n_levels: int,
     k: int,
+    backend: str = "xla",
+    packed: bool = False,
+    block_q: int = 128,
+    block_n: int = 512,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Local exhaustive SDC scan on one leaf (affine-identity math,
-    jnp form — XLA fuses this into one int32 matmul + epilogue; the Pallas
-    kernel is used on real TPU via ops.sdc_search inside the leaf)."""
-    a, beta = code_affine_constants(n_levels)
-    D = q_codes.shape[-1]
-    dot = q_codes.astype(jnp.int32) @ shard_codes.astype(jnp.int32).T
-    sq = jnp.sum(q_codes.astype(jnp.int32), -1, keepdims=True)
-    sd = jnp.sum(shard_codes.astype(jnp.int32), -1)[None, :]
-    scores = (
-        (a * a) * dot.astype(jnp.float32)
-        + (a * beta) * (sq + sd).astype(jnp.float32)
-        + D * beta * beta
-    ) * shard_inv[None, :]
-    scores = jnp.where(shard_inv[None, :] > 0, scores, -jnp.inf)
-    vals, idx = jax.lax.top_k(scores, k)
-    return vals, idx + shard_base
+    """Local exhaustive SDC scan + top-k on one leaf.
+
+    Dispatches to the fused Pallas kernel (no [Q, shard_N] score matrix
+    materialised) or the jnp fallback; both treat shard_inv == 0 entries
+    as excluded (drained docs) and surface empty slots as -inf.
+    """
+    if backend in ("pallas", "interpret"):
+        vals, idx = sdc_search(
+            q_codes,
+            shard_codes,
+            shard_inv,
+            n_levels=n_levels,
+            k=k,
+            block_q=block_q,
+            block_n=block_n,
+            interpret=(backend == "interpret"),
+            fused=True,
+            packed=packed,
+        )
+    else:
+        vals, idx = sdc_search_xla(
+            q_codes, shard_codes, shard_inv, n_levels=n_levels, k=k,
+            packed=packed,
+        )
+    # Downstream merges expect strict -inf for empty slots, and global ids;
+    # the -1 empty-slot sentinel must not be shifted into a neighbour
+    # shard's id range.
+    vals = jnp.where(idx >= 0, vals, -jnp.inf)
+    return vals, jnp.where(idx >= 0, idx + shard_base, -1)
+
+
+def _make_search(
+    mesh: Mesh,
+    *,
+    n_levels: int,
+    k: int,
+    shard_axes: Tuple[str, ...],
+    backend: str,
+    packed: bool,
+    block_q: int,
+    block_n: int,
+    failover: bool,
+):
+    """Common builder for the plain and failover engines."""
+    axes = shard_axes
+    backend = resolve_backend(backend)
+
+    def search(q_codes, d_codes, d_inv, *rest):
+        shard_n = d_codes.shape[0]  # per-leaf rows under shard_map
+        # Leaf rank: linearised index over the sharded axes.
+        rank = jnp.zeros((), jnp.int32)
+        for ax in axes:
+            rank = rank * mesh.shape[ax] + jax.lax.axis_index(ax)
+        base = rank * shard_n
+        vals, ids = _leaf_scan(
+            q_codes, d_codes, d_inv, shard_base=base,
+            n_levels=n_levels, k=k, backend=backend, packed=packed,
+            block_q=block_q, block_n=block_n,
+        )
+        if failover:
+            (leaf_alive,) = rest
+            # A dead/drained leaf contributes -inf scores; the merge
+            # proceeds from the survivors (paper §3.3.3 proxy timeout).
+            vals = jnp.where(leaf_alive[rank], vals, -jnp.inf)
+
+        # selection merge: gather every leaf's top-k, re-rank locally.
+        all_vals, all_ids = vals, ids
+        for ax in axes:
+            all_vals = jax.lax.all_gather(all_vals, ax, axis=1, tiled=True)
+            all_ids = jax.lax.all_gather(all_ids, ax, axis=1, tiled=True)
+        merged_vals, pos = jax.lax.top_k(all_vals, k)
+        merged_ids = jnp.take_along_axis(all_ids, pos, axis=-1)
+        return merged_vals, merged_ids
+
+    in_specs = (P(), P(axes), P(axes)) + ((P(),) if failover else ())
+    fn = shard_map(
+        search, mesh=mesh, in_specs=in_specs, out_specs=(P(), P()),
+        check_rep=False,
+    )
+    return jax.jit(fn)
 
 
 def make_distributed_search(
@@ -57,52 +132,24 @@ def make_distributed_search(
     n_levels: int,
     k: int,
     shard_axes: Tuple[str, ...] = ("data", "model"),
+    backend: str = "auto",
+    packed: bool = False,
+    block_q: int = 128,
+    block_n: int = 512,
 ):
     """Build a pjit-able global search fn over a mesh.
 
     Inputs (global shapes):
-      q_codes [Q, D] int8 (replicated), d_codes [N, D] int8 (sharded on
-      axis 0 across shard_axes), d_inv [N] f32 (same sharding).
+      q_codes [Q, D] int8 (replicated), d_codes [N, D] int8 — or
+      nibble-packed uint8 [N, D//2] with ``packed=True`` — sharded on
+      axis 0 across shard_axes, d_inv [N] f32 (same sharding).
     Output: (scores [Q, k], global ids [Q, k]) replicated.
     """
-    axes = shard_axes
-
-    def search(q_codes, d_codes, d_inv):
-        n_shards = 1
-        for ax in axes:
-            n_shards *= mesh.shape[ax]
-        shard_n = d_codes.shape[0]  # per-leaf rows under shard_map
-        # Leaf rank: linearised index over the sharded axes.
-        rank = jnp.zeros((), jnp.int32)
-        for ax in axes:
-            rank = rank * mesh.shape[ax] + jax.lax.axis_index(ax)
-        base = rank * shard_n
-        vals, ids = _leaf_scan(
-            q_codes, d_codes, d_inv, shard_base=base, n_levels=n_levels, k=k
-        )
-        #
-
-        # selection merge: gather every leaf's top-k, re-rank locally.
-        all_vals = vals
-        all_ids = ids
-        for ax in axes:
-            all_vals = jax.lax.all_gather(all_vals, ax, axis=1, tiled=True)
-            all_ids = jax.lax.all_gather(all_ids, ax, axis=1, tiled=True)
-        merged_vals, pos = jax.lax.top_k(all_vals, k)
-        merged_ids = jnp.take_along_axis(all_ids, pos, axis=-1)
-        return merged_vals, merged_ids
-
-    in_specs = (
-        P(),  # queries replicated
-        P(axes),  # codes sharded along N over (data, model)
-        P(axes),
+    return _make_search(
+        mesh, n_levels=n_levels, k=k, shard_axes=shard_axes,
+        backend=backend, packed=packed, block_q=block_q, block_n=block_n,
+        failover=False,
     )
-    out_specs = (P(), P())
-    fn = shard_map(
-        search, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_rep=False,
-    )
-    return jax.jit(fn)
 
 
 def engine_input_shardings(mesh: Mesh, shard_axes=("data", "model")):
@@ -120,6 +167,10 @@ def make_failover_search(
     n_levels: int,
     k: int,
     shard_axes: Tuple[str, ...] = ("data", "model"),
+    backend: str = "auto",
+    packed: bool = False,
+    block_q: int = 128,
+    block_n: int = 512,
 ):
     """Distributed search with leaf failover (straggler/failure tolerance).
 
@@ -131,33 +182,8 @@ def make_failover_search(
     is a runtime input), giving graceful degradation instead of a stalled
     query: recall drops by ~|dead|/|leaves| of the corpus, latency does not.
     """
-    axes = shard_axes
-
-    def search(q_codes, d_codes, d_inv, leaf_alive):
-        n_shards = 1
-        for ax in axes:
-            n_shards *= mesh.shape[ax]
-        shard_n = d_codes.shape[0]
-        rank = jnp.zeros((), jnp.int32)
-        for ax in axes:
-            rank = rank * mesh.shape[ax] + jax.lax.axis_index(ax)
-        base = rank * shard_n
-        vals, ids = _leaf_scan(
-            q_codes, d_codes, d_inv, shard_base=base, n_levels=n_levels, k=k
-        )
-        alive = leaf_alive[rank]  # [n_shards] bool, replicated input
-        vals = jnp.where(alive, vals, -jnp.inf)
-        all_vals, all_ids = vals, ids
-        for ax in axes:
-            all_vals = jax.lax.all_gather(all_vals, ax, axis=1, tiled=True)
-            all_ids = jax.lax.all_gather(all_ids, ax, axis=1, tiled=True)
-        merged_vals, pos = jax.lax.top_k(all_vals, k)
-        merged_ids = jnp.take_along_axis(all_ids, pos, axis=-1)
-        return merged_vals, merged_ids
-
-    fn = shard_map(
-        search, mesh=mesh,
-        in_specs=(P(), P(axes), P(axes), P()),
-        out_specs=(P(), P()), check_rep=False,
+    return _make_search(
+        mesh, n_levels=n_levels, k=k, shard_axes=shard_axes,
+        backend=backend, packed=packed, block_q=block_q, block_n=block_n,
+        failover=True,
     )
-    return jax.jit(fn)

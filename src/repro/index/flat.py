@@ -14,10 +14,14 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.binarize_lib import pack_bitplanes, unpack_codes
+from repro.core.binarize_lib import (
+    pack_bitplanes,
+    pack_codes_nibbles,
+    unpack_codes,
+)
 from repro.kernels.binary_dot.ops import binary_dot_search
 from repro.kernels.sdc import ref as sdc_ref
-from repro.kernels.sdc.ops import sdc_search
+from repro.kernels.sdc.ops import resolve_backend, sdc_search_backend
 
 
 @dataclasses.dataclass
@@ -40,31 +44,50 @@ class FlatFloat:
 
 @dataclasses.dataclass
 class FlatSDC:
-    codes: jax.Array  # [N, m] int8
+    codes: jax.Array  # [N, m] int8; nibble-packed uint8 [N, m//2] if packed
     inv_norm: jax.Array  # [N] f32
     n_levels: int
-    interpret: bool = True  # CPU container; False on real TPU
+    interpret: bool = True  # legacy flag: Pallas interpreter on CPU
+    packed: bool = False  # int4 code streaming (2 dims/byte in HBM)
+    backend: str | None = None  # overrides `interpret` when set
 
     @staticmethod
-    def build(codes: jax.Array, n_levels: int, interpret: bool = True) -> "FlatSDC":
+    def build(
+        codes: jax.Array, n_levels: int, interpret: bool = True,
+        packed: bool = False, backend: str | None = None,
+    ) -> "FlatSDC":
         inv = sdc_ref.doc_inv_norms(codes, n_levels)
-        return FlatSDC(codes=codes, inv_norm=inv, n_levels=n_levels, interpret=interpret)
+        if packed:
+            if n_levels > 4:
+                raise ValueError(
+                    f"packed codes need n_levels <= 4, got {n_levels}"
+                )
+            codes = pack_codes_nibbles(codes)
+        return FlatSDC(codes=codes, inv_norm=inv, n_levels=n_levels,
+                       interpret=interpret, packed=packed, backend=backend)
+
+    @property
+    def code_dim(self) -> int:
+        m = self.codes.shape[1]
+        return m * 2 if self.packed else m
 
     def search(self, q_codes: jax.Array, k: int, block_n: int = 512):
-        return sdc_search(
+        backend = self.backend or ("interpret" if self.interpret else "pallas")
+        return sdc_search_backend(
             q_codes,
             self.codes,
             self.inv_norm,
             n_levels=self.n_levels,
             k=k,
+            backend=resolve_backend(backend),
             block_q=8,
             block_n=block_n,
-            interpret=self.interpret,
+            packed=self.packed,
         )
 
     def nbytes(self) -> int:
         # 4-bit codes pack two dims per byte on disk; +4B quantised norm.
-        packed_codes = (self.codes.shape[1] * self.n_levels + 7) // 8
+        packed_codes = (self.code_dim * self.n_levels + 7) // 8
         return self.codes.shape[0] * (packed_codes + 4)
 
 

@@ -17,7 +17,7 @@ from typing import List, Tuple
 
 import numpy as np
 
-from repro.core.binarize_lib import code_affine_constants
+from repro.core.binarize_lib import sdc_affine_epilogue
 
 
 @dataclasses.dataclass
@@ -34,12 +34,13 @@ class HNSWLite:
 
 
 def _sdc_scores_np(q_code: np.ndarray, codes: np.ndarray, inv_norm: np.ndarray, n_levels: int):
-    a, beta = code_affine_constants(n_levels)
     D = codes.shape[-1]
     dot = codes.astype(np.int32) @ q_code.astype(np.int32)
     sq = int(q_code.astype(np.int32).sum())
     sd = codes.astype(np.int32).sum(-1)
-    return ((a * a) * dot + (a * beta) * (sq + sd) + D * beta * beta) * inv_norm
+    # shared epilogue is pure arithmetic — stays in numpy on this hot path
+    return sdc_affine_epilogue(dot, sq + sd, dim=D, n_levels=n_levels,
+                               inv_norm=inv_norm)
 
 
 def build_hnsw(

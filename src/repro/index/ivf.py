@@ -6,43 +6,59 @@ friendly: no ragged shapes at search time).
 
 Both layers use SDC-compatible arithmetic: the coarse layer can score
 centroids either in float or through their grid-quantised codes; the fine
-layer scores codes with the affine-identity integer math (identical to the
-Pallas kernel, evaluated over the gathered lists).
+layer scores through the shared affine epilogue — either the
+gather-then-scan Pallas kernel (``backend="pallas"/"interpret"``), which
+streams each probed list through VMEM with a running top-k, or a jnp
+fallback (``backend="xla"``) for CPU meshes. Lists can be stored
+nibble-packed (``packed=True``, n_levels <= 4) at 2 dims/byte, halving
+scan bandwidth with bit-identical scores.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.binarize_lib import (
-    code_affine_constants,
+    SDC_NEG_INF,
     codes_to_values,
+    pack_codes_nibbles,
+    sdc_affine_epilogue,
+    unpack_nibble_planes,
     values_to_codes,
 )
 from repro.index.kmeans import kmeans
 from repro.kernels.sdc import ref as sdc_ref
+from repro.kernels.sdc.gather import sdc_gather_topk
+from repro.kernels.sdc.ops import resolve_backend
 
 
 @dataclasses.dataclass
 class IVFIndex:
     centroids: jax.Array  # [nlist, D] float grid-space centroids
     centroid_codes: jax.Array  # [nlist, D] int8 grid-quantised centroids
-    lists_codes: jax.Array  # [nlist, max_len, D] int8
+    lists_codes: jax.Array  # [nlist, max_len, D] int8 (uint8 [.., D//2] packed)
     lists_inv_norm: jax.Array  # [nlist, max_len] f32 (0 for padding)
     lists_ids: jax.Array  # [nlist, max_len] int32 (-1 for padding)
     n_levels: int
+    packed: bool = False  # nibble-packed list storage (2 dims/byte)
 
     @property
     def nlist(self) -> int:
         return self.centroids.shape[0]
 
+    @property
+    def code_dim(self) -> int:
+        D = self.lists_codes.shape[-1]
+        return D * 2 if self.packed else D
+
     def nbytes(self) -> int:
-        packed = (self.lists_codes.shape[-1] * self.n_levels + 7) // 8
+        packed = (self.code_dim * self.n_levels + 7) // 8
         n_eff = int(jnp.sum(self.lists_ids >= 0))
         return n_eff * (packed + 4 + 4) + self.centroids.size * 4
 
@@ -55,9 +71,29 @@ def build_ivf(
     nlist: int,
     kmeans_iters: int = 20,
     max_len: int | None = None,
+    headroom: float = 1.0,
+    packed: bool = False,
 ) -> IVFIndex:
-    """Cluster grid values, bucket codes into padded inverted lists."""
+    """Cluster grid values, bucket codes into padded inverted lists.
+
+    Args:
+      max_len: fixed inverted-list capacity. Default (None) is the largest
+        cluster size, which never drops an entry.
+      headroom: multiplier applied to max_len (use > 1 with an explicit
+        max_len — e.g. one sized for the *average* list — so balanced
+        corpora keep every entry while bounding worst-case padding).
+      packed: store lists nibble-packed (requires n_levels <= 4).
+
+    Entries beyond a full list are dropped (they simply lose recall);
+    any drop is counted and reported through ``warnings.warn`` with the
+    dropped fraction, since a silent drop is invisible at search time.
+    """
     import numpy as np
+
+    if packed and n_levels > 4:
+        raise ValueError(
+            f"packed IVF lists need codes < 16 (n_levels <= 4), got {n_levels}"
+        )
 
     values = codes_to_values(codes, n_levels)
     cents, assign = kmeans(key, values, k=nlist, iters=kmeans_iters)
@@ -66,7 +102,17 @@ def build_ivf(
     counts = np.bincount(assign, minlength=nlist)
     if max_len is None:
         max_len = int(counts.max())
+    max_len = max(1, int(np.ceil(max_len * headroom)))
     D = codes.shape[1]
+
+    dropped = int(np.maximum(counts - max_len, 0).sum())
+    if dropped:
+        warnings.warn(
+            f"build_ivf: {dropped}/{n} entries ({dropped / n:.2%}) dropped by "
+            f"list overflow (max_len={max_len}, largest list={counts.max()}); "
+            "raise max_len or headroom to keep them",
+            stacklevel=2,
+        )
 
     lc = np.zeros((nlist, max_len, D), np.int8)
     ln = np.zeros((nlist, max_len), np.float32)
@@ -77,23 +123,31 @@ def build_ivf(
     for i in range(n):
         c = assign[i]
         p = fill[c]
-        if p < max_len:  # overflow entries dropped (cap rare with balanced k-means)
+        if p < max_len:
             lc[c, p] = codes_np[i]
             ln[c, p] = inv[i]
             li[c, p] = i
             fill[c] += 1
 
+    lists_codes = jnp.asarray(lc)
+    if packed:
+        lists_codes = pack_codes_nibbles(lists_codes)
+
     return IVFIndex(
         centroids=cents,
         centroid_codes=values_to_codes(jnp.clip(cents, -2.0, 2.0), n_levels),
-        lists_codes=jnp.asarray(lc),
+        lists_codes=lists_codes,
         lists_inv_norm=jnp.asarray(ln),
         lists_ids=jnp.asarray(li),
         n_levels=n_levels,
+        packed=packed,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("nprobe", "k", "n_levels", "coarse_sdc"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("nprobe", "k", "n_levels", "coarse_sdc", "backend", "packed"),
+)
 def ivf_search(
     index_centroids: jax.Array,
     index_centroid_codes: jax.Array,
@@ -106,9 +160,10 @@ def ivf_search(
     k: int,
     n_levels: int,
     coarse_sdc: bool = False,
+    backend: str = "xla",
+    packed: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
     """Search [Q] queries; returns (scores [Q, k], doc ids [Q, k])."""
-    a, beta = code_affine_constants(n_levels)
     D = q_codes.shape[-1]
     vq = codes_to_values(q_codes, n_levels)  # [Q, D]
 
@@ -120,31 +175,62 @@ def ivf_search(
     coarse = vq @ cv.T  # [Q, nlist]
     _, probes = jax.lax.top_k(coarse, nprobe)  # [Q, nprobe]
 
-    # --- fine layer: gather candidate lists, SDC affine scoring ---
-    cand_codes = lists_codes[probes]  # [Q, nprobe, L, D]
+    # --- fine layer ---
+    if backend in ("pallas", "interpret"):
+        # Gather-then-scan kernel: probed lists stream HBM -> VMEM one at a
+        # time with a running top-k; nothing [Q, nprobe, L, D]-sized exists.
+        return sdc_gather_topk(
+            q_codes,
+            lists_codes,
+            lists_inv_norm,
+            lists_ids,
+            probes,
+            n_levels=n_levels,
+            k=k,
+            interpret=(backend == "interpret"),
+            packed=packed,
+        )
+
+    # jnp fallback: gather candidate lists, score via the shared epilogue.
+    cand_codes = lists_codes[probes]  # [Q, nprobe, L, D(/2)]
     cand_inv = lists_inv_norm[probes]  # [Q, nprobe, L]
     cand_ids = lists_ids[probes]  # [Q, nprobe, L]
 
     cq = q_codes.astype(jnp.int32)
-    cd = cand_codes.astype(jnp.int32)
-    dot = jnp.einsum("qd,qpld->qpl", cq, cd)
+    if packed:
+        lo, hi = unpack_nibble_planes(cand_codes)
+        lo, hi = lo.astype(jnp.int32), hi.astype(jnp.int32)
+        dot = jnp.einsum("qd,qpld->qpl", cq[:, 0::2], lo) + jnp.einsum(
+            "qd,qpld->qpl", cq[:, 1::2], hi
+        )
+        sd = jnp.sum(lo, -1) + jnp.sum(hi, -1)
+    else:
+        cd = cand_codes.astype(jnp.int32)
+        dot = jnp.einsum("qd,qpld->qpl", cq, cd)
+        sd = jnp.sum(cd, -1)
     sq = jnp.sum(cq, -1)[:, None, None]
-    sd = jnp.sum(cd, -1)
-    scores = (
-        (a * a) * dot.astype(jnp.float32)
-        + (a * beta) * (sq + sd).astype(jnp.float32)
-        + D * beta * beta
-    ) * cand_inv
-    scores = jnp.where(cand_ids >= 0, scores, -jnp.inf)
+    scores = sdc_affine_epilogue(
+        dot, sq + sd, dim=D, n_levels=n_levels, inv_norm=cand_inv
+    )
+    scores = jnp.where(cand_ids >= 0, scores, SDC_NEG_INF)
 
     Q = q_codes.shape[0]
     flat_scores = scores.reshape(Q, -1)
     flat_ids = cand_ids.reshape(Q, -1)
     vals, pos = jax.lax.top_k(flat_scores, k)
-    return vals, jnp.take_along_axis(flat_ids, pos, axis=-1)
+    ids = jnp.take_along_axis(flat_ids, pos, axis=-1)
+    return vals, jnp.where(vals > SDC_NEG_INF / 2, ids, -1)
 
 
-def search(index: IVFIndex, q_codes: jax.Array, *, nprobe: int, k: int, coarse_sdc=False):
+def search(
+    index: IVFIndex,
+    q_codes: jax.Array,
+    *,
+    nprobe: int,
+    k: int,
+    coarse_sdc=False,
+    backend: str = "auto",
+):
     return ivf_search(
         index.centroids,
         index.centroid_codes,
@@ -156,4 +242,6 @@ def search(index: IVFIndex, q_codes: jax.Array, *, nprobe: int, k: int, coarse_s
         k=k,
         n_levels=index.n_levels,
         coarse_sdc=coarse_sdc,
+        backend=resolve_backend(backend),
+        packed=index.packed,
     )

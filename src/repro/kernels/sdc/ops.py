@@ -1,4 +1,16 @@
-"""jit'd public wrappers around the SDC kernel: padding, top-k search."""
+"""jit'd public wrappers around the SDC kernels: padding, top-k search,
+backend selection.
+
+Every index type (FlatSDC, IVFIndex, the distributed engine) scores
+through this module, so the affine epilogue and its exclusion semantics
+live in exactly one place. Backends:
+
+  * "pallas"    — compiled Pallas kernel (real TPU).
+  * "interpret" — the same kernel under the Pallas interpreter (tests).
+  * "xla"       — pure-jnp fallback for CPU meshes; same shared epilogue,
+                  so scores are bit-identical to the kernel path.
+  * "auto"      — "pallas" on TPU, "xla" otherwise.
+"""
 
 from __future__ import annotations
 
@@ -7,10 +19,24 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.binarize_lib import (
+    SDC_NEG_INF,
+    sdc_affine_epilogue,
+    unpack_nibble_planes,
+)
 from repro.kernels.sdc import ref as sdc_ref_mod
 from repro.kernels.sdc.sdc import sdc_scores, sdc_topk
 
-NEG_INF = -1e30
+NEG_INF = SDC_NEG_INF
+
+
+def resolve_backend(backend: str = "auto") -> str:
+    """Resolve the scoring backend flag to a concrete implementation."""
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend not in ("pallas", "interpret", "xla"):
+        raise ValueError(f"unknown SDC backend {backend!r}")
+    return backend
 
 
 def _pad_to(x: jax.Array, axis: int, multiple: int, value=0):
@@ -23,9 +49,15 @@ def _pad_to(x: jax.Array, axis: int, multiple: int, value=0):
     return jnp.pad(x, widths, constant_values=value), n
 
 
+def _ceil_mult(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("n_levels", "k", "block_q", "block_n", "interpret", "fused"),
+    static_argnames=(
+        "n_levels", "k", "block_q", "block_n", "interpret", "fused", "packed",
+    ),
 )
 def sdc_search(
     q_codes: jax.Array,
@@ -38,24 +70,31 @@ def sdc_search(
     block_n: int = 512,
     interpret: bool = False,
     fused: bool = True,
+    packed: bool = False,
 ):
     """Top-k SDC search of queries against a code corpus.
 
     Args:
       q_codes: [Q, D] int8 recurrent-binary codes of queries.
-      d_codes: [N, D] int8 codes of documents.
-      d_inv_norm: [N] f32 reciprocal doc-value norms.
+      d_codes: [N, D] int8 codes of documents, or nibble-packed uint8
+        [N, D//2] when ``packed=True``.
+      d_inv_norm: [N] f32 reciprocal doc-value norms (0 => excluded).
       fused: use the fused scan+top-k kernel (no [Q, N] materialisation).
 
     Returns:
-      (scores [Q, k], indices [Q, k]); padded docs never appear (their
-      inv-norm is forced to 0 and score to -inf).
+      (scores [Q, k], indices [Q, k]); slots with no valid candidate
+      (padding, excluded docs, k > N) come back as (SDC_NEG_INF, -1).
     """
     Q0 = q_codes.shape[0]
+    # The fused kernel tiles the running top-k against its N block, so the
+    # effective block must hold k entries; keep it a multiple of block_n so
+    # lane alignment survives. N is padded against the same effective block
+    # (this also guarantees padded N >= k for the final top_k).
+    eff_bn = _ceil_mult(max(k, block_n), block_n)
     q_codes, _ = _pad_to(q_codes, 0, block_q)
-    d_codes, N0 = _pad_to(d_codes, 0, block_n)
-    d_inv_norm, _ = _pad_to(d_inv_norm, 0, block_n)
-    # Force padded docs out of the ranking.
+    d_codes, N0 = _pad_to(d_codes, 0, eff_bn)
+    d_inv_norm, _ = _pad_to(d_inv_norm, 0, eff_bn)
+    # Force padded docs out of the ranking (kernels treat inv 0 as excluded).
     valid = jnp.arange(d_codes.shape[0]) < N0
     d_inv_norm = jnp.where(valid, d_inv_norm, 0.0)
 
@@ -67,27 +106,86 @@ def sdc_search(
             n_levels=n_levels,
             k=k,
             block_q=block_q,
-            block_n=max(block_n, k),
+            block_n=eff_bn,
             interpret=interpret,
+            packed=packed,
         )
-        pad_score = jnp.where(idx < N0, vals, NEG_INF)
-        # Re-sort in case padded entries (score D*beta^2*0 = 0) leaked in.
-        vals2, order = jax.lax.top_k(pad_score, k)
-        idx2 = jnp.take_along_axis(idx, order, axis=-1)
-        return vals2[:Q0], idx2[:Q0]
-
-    scores = sdc_scores(
-        q_codes,
-        d_codes,
-        d_inv_norm,
-        n_levels=n_levels,
-        block_q=block_q,
-        block_n=block_n,
-        interpret=interpret,
-    )
-    scores = jnp.where(valid[None, :], scores, NEG_INF)
-    vals, idx = jax.lax.top_k(scores, k)
+    else:
+        scores = sdc_scores(
+            q_codes,
+            d_codes,
+            d_inv_norm,
+            n_levels=n_levels,
+            block_q=block_q,
+            block_n=block_n,
+            interpret=interpret,
+            packed=packed,
+        )
+        vals, idx = jax.lax.top_k(scores, k)
+    # Normalise empty slots: excluded/padded docs surface as NEG_INF values
+    # whose indices are meaningless — report them as -1.
+    idx = jnp.where(vals > NEG_INF / 2, idx, -1)
     return vals[:Q0], idx[:Q0]
+
+
+@functools.partial(jax.jit, static_argnames=("n_levels", "k", "packed"))
+def sdc_search_xla(
+    q_codes: jax.Array,
+    d_codes: jax.Array,
+    d_inv_norm: jax.Array,
+    *,
+    n_levels: int,
+    k: int,
+    packed: bool = False,
+):
+    """Pure-jnp top-k SDC search (the "xla" backend).
+
+    Same contract as ``sdc_search``; XLA fuses the affine epilogue into the
+    int32 matmul so CPU meshes get one matmul + top-k without the Pallas
+    interpreter's Python overhead. Packed corpora are scored through the
+    same even/odd half-matmul decomposition as the kernel, so scores stay
+    bit-identical to the unpacked path.
+    """
+    D = q_codes.shape[-1]
+    cq = q_codes.astype(jnp.int32)
+    if packed:
+        lo, hi = unpack_nibble_planes(d_codes)
+        lo, hi = lo.astype(jnp.int32), hi.astype(jnp.int32)
+        dot = cq[:, 0::2] @ lo.T + cq[:, 1::2] @ hi.T
+        sd = (jnp.sum(lo, -1) + jnp.sum(hi, -1))[None, :]
+    else:
+        cd = d_codes.astype(jnp.int32)
+        dot = cq @ cd.T
+        sd = jnp.sum(cd, -1)[None, :]
+    sq = jnp.sum(cq, -1, keepdims=True)
+    scores = sdc_affine_epilogue(
+        dot, sq + sd, dim=D, n_levels=n_levels, inv_norm=d_inv_norm[None, :]
+    )
+    scores = jnp.where(d_inv_norm[None, :] > 0, scores, NEG_INF)
+    if k > scores.shape[1]:
+        pad = jnp.full((scores.shape[0], k - scores.shape[1]), NEG_INF,
+                       scores.dtype)
+        scores = jnp.concatenate([scores, pad], axis=1)
+    vals, idx = jax.lax.top_k(scores, k)
+    idx = jnp.where(vals > NEG_INF / 2, idx, -1)
+    return vals, idx
+
+
+def sdc_search_backend(
+    q_codes, d_codes, d_inv_norm, *, n_levels, k, backend="auto",
+    block_q=128, block_n=512, packed=False,
+):
+    """Dispatch a top-k SDC search to the resolved backend."""
+    backend = resolve_backend(backend)
+    if backend == "xla":
+        return sdc_search_xla(
+            q_codes, d_codes, d_inv_norm, n_levels=n_levels, k=k, packed=packed
+        )
+    return sdc_search(
+        q_codes, d_codes, d_inv_norm, n_levels=n_levels, k=k,
+        block_q=block_q, block_n=block_n,
+        interpret=(backend == "interpret"), fused=True, packed=packed,
+    )
 
 
 def sdc_search_ref(q_codes, d_codes, n_levels: int, k: int):

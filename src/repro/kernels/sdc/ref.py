@@ -18,7 +18,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.binarize_lib import code_affine_constants, codes_to_values
+from repro.core.binarize_lib import (
+    code_affine_constants,
+    codes_to_values,
+    sdc_affine_epilogue,
+)
 
 
 def doc_inv_norms(d_codes: jax.Array, n_levels: int) -> jax.Array:
@@ -56,19 +60,17 @@ def sdc_ref_affine(
 
       <v(q), v(d)> = a^2 (c_q . c_d) + a*beta*(sum c_q + sum c_d) + D*beta^2
     """
-    a, beta = code_affine_constants(n_levels)
     D = q_codes.shape[-1]
     cq = q_codes.astype(jnp.int32)
     cd = d_codes.astype(jnp.int32)
     dot = cq @ cd.T  # exact in int32
     sq = jnp.sum(cq, axis=-1, keepdims=True)  # [Q, 1]
     sd = jnp.sum(cd, axis=-1, keepdims=True).T  # [1, N]
-    scores = (a * a) * dot.astype(jnp.float32) + (a * beta) * (
-        sq + sd
-    ).astype(jnp.float32) + D * beta * beta
     if d_inv_norm is None:
         d_inv_norm = doc_inv_norms(d_codes, n_levels)
-    return scores * d_inv_norm[None, :]
+    return sdc_affine_epilogue(
+        dot, sq + sd, dim=D, n_levels=n_levels, inv_norm=d_inv_norm[None, :]
+    )
 
 
 def sdc_ref_lut(

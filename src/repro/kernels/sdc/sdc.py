@@ -4,7 +4,9 @@ TPU-native adaptation of the paper's SIMD-LUT scan (DESIGN.md §2): the
 recurrent-binary grid value is affine in the packed integer code
 (v = a*c + beta), so the whole scan becomes an int8 x int8 -> int32 MXU
 matmul over the code matrices plus rank-1 affine corrections and a
-reciprocal-norm epilogue on the VPU.
+reciprocal-norm epilogue on the VPU. The epilogue itself lives in
+``repro.core.binarize_lib.sdc_affine_epilogue`` — the single copy shared
+with every jnp fallback, so all scoring paths are bit-identical.
 
 Layout/tiling:
   * codes stream HBM -> VMEM at 8 bits/dim (4 meaningful), documents tiled
@@ -13,6 +15,24 @@ Layout/tiling:
   * MXU tiles want multiples of (128, 128); defaults TQ=128, TN=512.
   * int32 accumulation is exact — unlike the paper's saturating int8/16
     adds, the TPU path introduces zero quantisation error.
+  * documents with a zero reciprocal norm are "excluded" (padding, drained
+    shards): every kernel masks them to SDC_NEG_INF before any top-k.
+
+int4 packed code streaming (``packed=True``):
+  * for n_levels <= 4 each code is 4 bits, so document codes are stored
+    nibble-packed (2 dims/byte; byte j = dim 2j | dim 2j+1 << 4, see
+    ``binarize_lib.pack_codes_nibbles``), halving HBM traffic per scanned
+    document — the scan is memory-bound, so this is ~2x effective speedup.
+  * in-kernel unpack is shift+mask on the VPU; queries (tiny) stay
+    unpacked and are pre-split into even/odd dim halves so the scan is two
+    half-width int8 MXU matmuls (same MAC count as one full-width one):
+        c_q . c_d = q_even . lo(d_packed) + q_odd . hi(d_packed).
+  * integer partial sums are identical to the int8 path, so packed scores
+    are bit-identical to unpacked scores.
+
+Backend selection lives one level up (``ops.resolve_backend``): "pallas"
+(compiled kernel, real TPU), "interpret" (this kernel under the Pallas
+interpreter — tests), "xla" (pure-jnp fallback for CPU meshes).
 """
 
 from __future__ import annotations
@@ -23,38 +43,90 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.binarize_lib import code_affine_constants
+from repro.core.binarize_lib import (
+    SDC_NEG_INF,
+    sdc_affine_epilogue,
+    unpack_nibble_planes,
+)
 
 
-def _sdc_kernel(q_ref, d_ref, dnorm_ref, out_ref, *, a: float, beta: float, dim: int):
-    """One (TQ, TN) output tile.
+def _unpack_nibbles_tile(p: jax.Array):
+    """uint8 tile [TN, D//2] -> (lo, hi) int8 tiles holding even/odd dims."""
+    lo, hi = unpack_nibble_planes(p)
+    return lo.astype(jnp.int8), hi.astype(jnp.int8)
 
-    q_ref:    [TQ, D] int8 query codes
-    d_ref:    [TN, D] int8 document codes
-    dnorm_ref:[TN]    f32 reciprocal document norms
-    out_ref:  [TQ, TN] f32 scores
-    """
-    q = q_ref[...]
-    d = d_ref[...]
-    # MXU int8 path: accumulate in int32 (exact).
-    dot = jax.lax.dot_general(
-        q,
-        d,
+
+def _int8_dot(x: jax.Array, y: jax.Array) -> jax.Array:
+    """[TQ, D] x [TN, D] -> [TQ, TN] int32 (MXU int8 path, exact)."""
+    return jax.lax.dot_general(
+        x,
+        y,
         dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.int32,
-    )  # [TQ, TN]
+    )
+
+
+def _tile_scores(q, d, inv, *, n_levels: int, dim: int) -> jax.Array:
+    """SDC scores for one (TQ, TN) tile of unpacked int8 codes.
+
+    Excluded documents (inv == 0) come out as SDC_NEG_INF.
+    """
+    dot = _int8_dot(q, d)
     sq = jnp.sum(q.astype(jnp.int32), axis=-1, keepdims=True)  # [TQ, 1]
     sd = jnp.sum(d.astype(jnp.int32), axis=-1, keepdims=True).T  # [1, TN]
-    scores = (
-        (a * a) * dot.astype(jnp.float32)
-        + (a * beta) * (sq + sd).astype(jnp.float32)
-        + (dim * beta * beta)
+    scores = sdc_affine_epilogue(
+        dot, sq + sd, dim=dim, n_levels=n_levels, inv_norm=inv[None, :]
     )
-    out_ref[...] = scores * dnorm_ref[...][None, :]
+    return jnp.where(inv[None, :] > 0, scores, SDC_NEG_INF)
+
+
+def _tile_scores_packed(qe, qo, p, inv, *, n_levels: int, dim: int) -> jax.Array:
+    """Same as _tile_scores but for nibble-packed document codes.
+
+    qe/qo: [TQ, D//2] int8 query codes at even/odd dims.
+    p:     [TN, D//2] uint8 packed document codes.
+    The integer partial sums equal the unpacked ones exactly, so scores are
+    bit-identical to the int8 path.
+    """
+    lo, hi = _unpack_nibbles_tile(p)
+    dot = _int8_dot(qe, lo) + _int8_dot(qo, hi)
+    sq = jnp.sum(qe.astype(jnp.int32), -1, keepdims=True) + jnp.sum(
+        qo.astype(jnp.int32), -1, keepdims=True
+    )
+    sd = (
+        jnp.sum(lo.astype(jnp.int32), -1, keepdims=True)
+        + jnp.sum(hi.astype(jnp.int32), -1, keepdims=True)
+    ).T
+    scores = sdc_affine_epilogue(
+        dot, sq + sd, dim=dim, n_levels=n_levels, inv_norm=inv[None, :]
+    )
+    return jnp.where(inv[None, :] > 0, scores, SDC_NEG_INF)
+
+
+def _sdc_kernel(q_ref, d_ref, dnorm_ref, out_ref, *, n_levels: int, dim: int):
+    """One (TQ, TN) score tile (unpacked int8 codes)."""
+    out_ref[...] = _tile_scores(
+        q_ref[...], d_ref[...], dnorm_ref[...], n_levels=n_levels, dim=dim
+    )
+
+
+def _sdc_kernel_packed(
+    qe_ref, qo_ref, d_ref, dnorm_ref, out_ref, *, n_levels: int, dim: int
+):
+    """One (TQ, TN) score tile (nibble-packed document codes)."""
+    out_ref[...] = _tile_scores_packed(
+        qe_ref[...], qo_ref[...], d_ref[...], dnorm_ref[...],
+        n_levels=n_levels, dim=dim,
+    )
+
+
+def _split_queries(q_codes: jax.Array):
+    """[Q, D] int8 -> even/odd dim halves matching the nibble layout."""
+    return q_codes[:, 0::2], q_codes[:, 1::2]
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n_levels", "block_q", "block_n", "interpret")
+    jax.jit, static_argnames=("n_levels", "block_q", "block_n", "interpret", "packed")
 )
 def sdc_scores(
     q_codes: jax.Array,
@@ -65,60 +137,60 @@ def sdc_scores(
     block_q: int = 128,
     block_n: int = 512,
     interpret: bool = False,
+    packed: bool = False,
 ) -> jax.Array:
     """SDC score matrix [Q, N] = <v(q), v(d)> / ||v(d)||.
 
     Q and N must be multiples of block_q / block_n (callers pad; see
-    ops.sdc_search which handles padding + top-k).
+    ops.sdc_search which handles padding + top-k). With ``packed=True``,
+    d_codes is the nibble-packed uint8 [N, D//2] corpus. Documents with
+    d_inv_norm == 0 score SDC_NEG_INF (excluded).
     """
     Q, D = q_codes.shape
-    N, D2 = d_codes.shape
-    assert D == D2, (D, D2)
+    N = d_codes.shape[0]
+    assert d_codes.shape[1] == (D // 2 if packed else D), (d_codes.shape, D, packed)
     assert Q % block_q == 0 and N % block_n == 0, (Q, N, block_q, block_n)
-    a, beta = code_affine_constants(n_levels)
 
     grid = (Q // block_q, N // block_n)
+    Dc = d_codes.shape[1]
+    out_spec = pl.BlockSpec((block_q, block_n), lambda i, j: (i, j))
+    out_shape = jax.ShapeDtypeStruct((Q, N), jnp.float32)
+    d_specs = [
+        pl.BlockSpec((block_n, Dc), lambda i, j: (j, 0)),
+        pl.BlockSpec((block_n,), lambda i, j: (j,)),
+    ]
+    if packed:
+        qe, qo = _split_queries(q_codes)
+        return pl.pallas_call(
+            functools.partial(_sdc_kernel_packed, n_levels=n_levels, dim=D),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_q, D // 2), lambda i, j: (i, 0)),
+                pl.BlockSpec((block_q, D // 2), lambda i, j: (i, 0)),
+                *d_specs,
+            ],
+            out_specs=out_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(qe, qo, d_codes, d_inv_norm)
     return pl.pallas_call(
-        functools.partial(_sdc_kernel, a=a, beta=beta, dim=D),
+        functools.partial(_sdc_kernel, n_levels=n_levels, dim=D),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_q, D), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_n, D), lambda i, j: (j, 0)),
-            pl.BlockSpec((block_n,), lambda i, j: (j,)),
-        ],
-        out_specs=pl.BlockSpec((block_q, block_n), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((Q, N), jnp.float32),
+        in_specs=[pl.BlockSpec((block_q, D), lambda i, j: (i, 0)), *d_specs],
+        out_specs=out_spec,
+        out_shape=out_shape,
         interpret=interpret,
     )(q_codes, d_codes, d_inv_norm)
 
 
-def _sdc_topk_kernel(
-    q_ref, d_ref, dnorm_ref, vals_ref, idx_ref, *, a, beta, dim, k, block_n
-):
-    """Fused scan + per-tile top-k (streaming reduction over the N grid).
+def _merge_running_topk(vals_ref, idx_ref, tile_vals, tile_idx, *, j, k):
+    """Streaming top-k accumulator shared by the fused scan kernels.
 
-    Grid is (Q_tiles, N_tiles) with N innermost; for each query tile we keep
-    a running top-k merged across N tiles in the output refs (VMEM-resident
-    accumulator pattern — out blocks map to the same (i, 0) slot for all j,
-    so they persist across the inner grid dimension).
+    Out blocks map to the same (i, 0) slot for every inner grid step, so
+    they persist in VMEM across the reduction. The running entries are
+    concatenated first so ties keep the earliest (lowest-index) document,
+    matching a stable top-k over the full score row.
     """
-    j = pl.program_id(1)
-    q = q_ref[...]
-    d = d_ref[...]
-    dot = jax.lax.dot_general(
-        q, d, dimension_numbers=(((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.int32,
-    )
-    sq = jnp.sum(q.astype(jnp.int32), axis=-1, keepdims=True)
-    sd = jnp.sum(d.astype(jnp.int32), axis=-1, keepdims=True).T
-    scores = (
-        (a * a) * dot.astype(jnp.float32)
-        + (a * beta) * (sq + sd).astype(jnp.float32)
-        + (dim * beta * beta)
-    ) * dnorm_ref[...][None, :]
-
-    tile_vals, tile_arg = jax.lax.top_k(scores, k)  # [TQ, k]
-    tile_idx = (j * block_n + tile_arg).astype(jnp.int32)
 
     @pl.when(j == 0)
     def _init():
@@ -134,8 +206,37 @@ def _sdc_topk_kernel(
         idx_ref[...] = jnp.take_along_axis(cat_i, best_a, axis=-1)
 
 
+def _sdc_topk_kernel(
+    q_ref, d_ref, dnorm_ref, vals_ref, idx_ref, *, n_levels, dim, k, block_n
+):
+    """Fused scan + per-tile top-k (streaming reduction over the N grid)."""
+    j = pl.program_id(1)
+    scores = _tile_scores(
+        q_ref[...], d_ref[...], dnorm_ref[...], n_levels=n_levels, dim=dim
+    )
+    tile_vals, tile_arg = jax.lax.top_k(scores, k)  # [TQ, k]
+    tile_idx = (j * block_n + tile_arg).astype(jnp.int32)
+    _merge_running_topk(vals_ref, idx_ref, tile_vals, tile_idx, j=j, k=k)
+
+
+def _sdc_topk_kernel_packed(
+    qe_ref, qo_ref, d_ref, dnorm_ref, vals_ref, idx_ref,
+    *, n_levels, dim, k, block_n,
+):
+    """Packed-int4 variant of the fused scan+top-k kernel."""
+    j = pl.program_id(1)
+    scores = _tile_scores_packed(
+        qe_ref[...], qo_ref[...], d_ref[...], dnorm_ref[...],
+        n_levels=n_levels, dim=dim,
+    )
+    tile_vals, tile_arg = jax.lax.top_k(scores, k)
+    tile_idx = (j * block_n + tile_arg).astype(jnp.int32)
+    _merge_running_topk(vals_ref, idx_ref, tile_vals, tile_idx, j=j, k=k)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("n_levels", "k", "block_q", "block_n", "interpret")
+    jax.jit,
+    static_argnames=("n_levels", "k", "block_q", "block_n", "interpret", "packed"),
 )
 def sdc_topk(
     q_codes: jax.Array,
@@ -147,34 +248,56 @@ def sdc_topk(
     block_q: int = 128,
     block_n: int = 1024,
     interpret: bool = False,
+    packed: bool = False,
 ):
     """Fused SDC scan + top-k: returns (values [Q, k], indices [Q, k]).
 
     Avoids materialising the [Q, N] score matrix in HBM — the dominant
     memory term of the naive pipeline (hillclimbed in EXPERIMENTS.md §Perf).
+    Excluded documents (inv norm 0) surface as SDC_NEG_INF values.
     """
     Q, D = q_codes.shape
-    N, _ = d_codes.shape
+    N = d_codes.shape[0]
     assert Q % block_q == 0 and N % block_n == 0 and k <= block_n
-    a, beta = code_affine_constants(n_levels)
     grid = (Q // block_q, N // block_n)
+    Dc = d_codes.shape[1]
+    assert Dc == (D // 2 if packed else D), (d_codes.shape, D, packed)
+    d_specs = [
+        pl.BlockSpec((block_n, Dc), lambda i, j: (j, 0)),
+        pl.BlockSpec((block_n,), lambda i, j: (j,)),
+    ]
+    out_specs = [
+        pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+        pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((Q, k), jnp.float32),
+        jax.ShapeDtypeStruct((Q, k), jnp.int32),
+    ]
+    if packed:
+        qe, qo = _split_queries(q_codes)
+        return pl.pallas_call(
+            functools.partial(
+                _sdc_topk_kernel_packed, n_levels=n_levels, dim=D, k=k,
+                block_n=block_n,
+            ),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_q, D // 2), lambda i, j: (i, 0)),
+                pl.BlockSpec((block_q, D // 2), lambda i, j: (i, 0)),
+                *d_specs,
+            ],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(qe, qo, d_codes, d_inv_norm)
     return pl.pallas_call(
         functools.partial(
-            _sdc_topk_kernel, a=a, beta=beta, dim=D, k=k, block_n=block_n
+            _sdc_topk_kernel, n_levels=n_levels, dim=D, k=k, block_n=block_n
         ),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_q, D), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_n, D), lambda i, j: (j, 0)),
-            pl.BlockSpec((block_n,), lambda i, j: (j,)),
-        ],
-        out_specs=[
-            pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((Q, k), jnp.float32),
-            jax.ShapeDtypeStruct((Q, k), jnp.int32),
-        ],
+        in_specs=[pl.BlockSpec((block_q, D), lambda i, j: (i, 0)), *d_specs],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(q_codes, d_codes, d_inv_norm)

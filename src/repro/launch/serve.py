@@ -66,6 +66,13 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--index", choices=["flat", "ivf"], default="flat")
     ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--packed", action="store_true",
+                    help="int4 nibble-packed code storage (2 dims/byte; "
+                         "halves scan bandwidth, bit-identical scores)")
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "pallas", "interpret", "xla"],
+                    help="SDC scoring backend (auto: Pallas kernel on TPU, "
+                         "jnp fallback elsewhere)")
     args = ap.parse_args()
 
     print(f"[data] {args.docs} docs, {args.queries} queries, dim={args.dim}")
@@ -97,14 +104,19 @@ def main():
 
     flat_float = FlatFloat.build(jnp.asarray(docs))
     if args.index == "flat":
-        index = FlatSDC.build(d_codes, bcfg.n_levels)
+        index = FlatSDC.build(
+            d_codes, bcfg.n_levels, packed=args.packed, backend=args.backend
+        )
         search = lambda q: index.search(q, args.k)
         nbytes = index.nbytes()
     else:
         index = ivf_lib.build_ivf(
-            jax.random.PRNGKey(1), d_codes, n_levels=bcfg.n_levels, nlist=64
+            jax.random.PRNGKey(1), d_codes, n_levels=bcfg.n_levels, nlist=64,
+            packed=args.packed,
         )
-        search = lambda q: ivf_lib.search(index, q, nprobe=32, k=args.k)
+        search = lambda q: ivf_lib.search(
+            index, q, nprobe=32, k=args.k, backend=args.backend
+        )
         nbytes = index.nbytes()
 
     float_bytes = flat_float.nbytes()

@@ -1,0 +1,75 @@
+"""Minimal deterministic stand-in for `hypothesis` (not installed in the
+container). Installed into sys.modules by conftest.py only when the real
+package is missing, so the property tests still run as seeded multi-example
+sweeps instead of erroring at collection.
+
+Supported surface (everything the test suite uses):
+  given(**strategies), settings(max_examples=, deadline=),
+  strategies.integers(lo, hi), strategies.sampled_from(seq).
+
+Examples are drawn from a PRNG seeded by the test's qualified name, so runs
+are reproducible. Example counts are capped (the stub has no shrinking or
+coverage guidance, so large example counts buy nothing).
+"""
+
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+_MAX_EXAMPLES_CAP = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def sampled_from(elements):
+    elems = list(elements)
+    return _Strategy(lambda rnd: rnd.choice(elems))
+
+
+def settings(max_examples: int = 10, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategy_kw):
+    def deco(fn):
+        # NB: no functools.wraps — pytest must not see the wrapped
+        # signature (it would resolve the drawn arguments as fixtures).
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples", 10))
+            n = min(n, _MAX_EXAMPLES_CAP)
+            rnd = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n):
+                drawn = {k: s.draw(rnd) for k, s in strategy_kw.items()}
+                fn(*args, **kwargs, **drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco
+
+
+def install():
+    hyp = types.ModuleType("hypothesis")
+    strat = types.ModuleType("hypothesis.strategies")
+    strat.integers = integers
+    strat.sampled_from = sampled_from
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = strat
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat

@@ -1,0 +1,95 @@
+"""Distributed engine on the unified kernel substrate, run on a CPU mesh in
+a subprocess with 8 forced host devices (same pattern as
+test_engine_distributed.py): the fused Pallas leaf path must match the jnp
+leaf path bit-for-bit, packed streaming must not change results, and the
+failover mask must still exclude dead leaves under the kernel path."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=500,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_fused_leaf_matches_xla_leaf_and_exact():
+    stdout = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.binarize_lib import pack_codes_nibbles
+        from repro.index.engine import make_distributed_search, engine_input_shardings
+        from repro.kernels.sdc import ref as R
+        key = jax.random.PRNGKey(0)
+        codes = jax.random.randint(key, (4096, 64), 0, 16).astype(jnp.int8)
+        q = jax.random.randint(jax.random.fold_in(key,1), (8, 64), 0, 16).astype(jnp.int8)
+        inv = R.doc_inv_norms(codes, 4)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        qs, ds, vs = engine_input_shardings(mesh)
+        outs = {}
+        with mesh:
+            qd = jax.device_put(q, qs); ivd = jax.device_put(inv, vs)
+            dd = jax.device_put(codes, ds)
+            pd = jax.device_put(pack_codes_nibbles(codes), ds)
+            for name, backend, d, packed in [
+                ("xla", "xla", dd, False),
+                ("fused", "interpret", dd, False),       # Pallas kernel leaf
+                ("fused_packed", "interpret", pd, True), # int4 streaming leaf
+                ("xla_packed", "xla", pd, True),
+            ]:
+                search = make_distributed_search(
+                    mesh, n_levels=4, k=10, backend=backend, packed=packed,
+                    block_q=8)
+                outs[name] = search(qd, d, ivd)
+        base_v, base_i = map(np.asarray, outs["xla"])
+        for name in ("fused", "fused_packed", "xla_packed"):
+            v, i = map(np.asarray, outs[name])
+            np.testing.assert_array_equal(base_v, v)
+            np.testing.assert_array_equal(base_i, i)
+        ev, ei = jax.lax.top_k(R.sdc_ref(q, codes, 4), 10)
+        agree = np.mean([len(set(base_i[i]) & set(np.asarray(ei[i])))/10
+                         for i in range(8)])
+        print("AGREE", agree)
+    """)
+    assert "AGREE 1.0" in stdout
+
+
+def test_failover_excludes_dead_leaf_under_kernel_path():
+    stdout = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.index.engine import make_failover_search, engine_input_shardings
+        from repro.kernels.sdc import ref as R
+        key = jax.random.PRNGKey(0)
+        codes = jax.random.randint(key, (4096, 64), 0, 16).astype(jnp.int8)
+        q = jax.random.randint(jax.random.fold_in(key,1), (8, 64), 0, 16).astype(jnp.int8)
+        inv = R.doc_inv_norms(codes, 4)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        search = make_failover_search(mesh, n_levels=4, k=10,
+                                      backend="interpret", block_q=8)
+        qs, ds, vs = engine_input_shardings(mesh)
+        with mesh:
+            qd = jax.device_put(q, qs); dd = jax.device_put(codes, ds)
+            ivd = jax.device_put(inv, vs)
+            alive = jnp.ones((8,), bool)
+            v_all, i_all = search(qd, dd, ivd, alive)
+            alive = alive.at[3].set(False)
+            v_deg, i_deg = search(qd, dd, ivd, alive)
+        ev, ei = jax.lax.top_k(R.sdc_ref(q, codes, 4), 10)
+        full = np.mean([len(set(np.asarray(i_all[i]))&set(np.asarray(ei[i])))/10 for i in range(8)])
+        dead_lo, dead_hi = 3*512, 4*512
+        leaked = int(((np.asarray(i_deg) >= dead_lo) & (np.asarray(i_deg) < dead_hi)).sum())
+        deg = np.mean([len(set(np.asarray(i_deg[i]))&set(np.asarray(ei[i])))/10 for i in range(8)])
+        print("FULL", full, "DEG", deg, "LEAKED", leaked)
+        assert full == 1.0 and leaked == 0 and deg >= 0.8
+    """)
+    assert "FULL 1.0" in stdout
