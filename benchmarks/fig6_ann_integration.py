@@ -1,12 +1,21 @@
 """Paper Figure 6: ANN algorithms + BEBR — retrieval efficiency before/after.
 
 QPS-vs-recall for: float flat, SDC flat, IVF+SDC (several nprobe), and
-HNSW-lite+SDC (several ef). The paper's claim: plugging BEBR (binary codes
-+ SDC distance) into ANN indexes gives large QPS gains at matched recall.
+HNSW-lite+SDC (several ef) — the latter both as the per-query numpy beam
+search and as the batched-frontier search on the fused SDC substrate.
+The paper's claim: plugging BEBR (binary codes + SDC distance) into ANN
+indexes gives large QPS gains at matched recall.
+
+Also emits ``BENCH_hnsw_scan.json`` (``emit_hnsw_scan_json``): the
+machine-readable graph-search trajectory CI uploads as an artifact —
+hops, candidates scored, wall ms and recall@k vs the exhaustive flat
+scan, packed vs unpacked.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -16,9 +25,19 @@ import numpy as np
 from benchmarks.common import encode, make_corpus, recall_at, timeit, train_binarizer
 from repro.index import ivf as ivf_lib
 from repro.index.flat import FlatFloat
-from repro.index.hnsw_lite import build_hnsw, search_hnsw
+from repro.index.hnsw_lite import (
+    build_hnsw,
+    prepare_batched,
+    search_hnsw,
+    search_hnsw_batched,
+)
 from repro.kernels.sdc import ref as R
+from repro.kernels.sdc.ops import sdc_search_xla
 from benchmarks.table5_search_latency import sdc_scores_xla
+
+BENCH_HNSW_JSON = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_hnsw_scan.json"
+)
 
 
 def run(steps: int = 300):
@@ -68,6 +87,19 @@ def run(steps: int = 300):
         rows.append((f"BEBR-HNSW(ef={ef})", recall_at(idx, gt, 20),
                      queries.shape[0] / dt))
 
+    # HNSW batched-frontier on the fused SDC substrate (whole query batch
+    # per hop, same graph and entry points as the numpy rows)
+    tables = prepare_batched(hn)
+    for ef in (32, 64):
+        t, (_, idx) = timeit(
+            lambda ef_=ef: search_hnsw_batched(
+                tables, q_codes, k=20, ef=ef_, beam=max(8, ef_ // 4),
+                backend="xla",
+            )
+        )
+        rows.append((f"BEBR-HNSW-batched(ef={ef})", recall_at(idx, gt, 20),
+                     queries.shape[0] / t))
+
     print("\n# Figure 6 — ANN + BEBR efficiency (video corpus)")
     print("engine,recall@20,qps")
     for name, rec, qps in rows:
@@ -75,5 +107,78 @@ def run(steps: int = 300):
     return rows
 
 
+def emit_hnsw_scan_json(path: str = BENCH_HNSW_JSON, n_docs: int = 8000,
+                        queries: int = 32, levels: int = 4, m: int = 128,
+                        M: int = 16, ef: int = 64, beam: int = 16,
+                        k: int = 10) -> dict:
+    """Benchmark the batched-frontier HNSW search and write
+    BENCH_hnsw_scan.json so subsequent PRs have a graph-search trajectory.
+
+    Rows: packed/unpacked neighbor tables. Cols: mean/max hops, mean
+    candidates scored per query, wall ms per query batch (this host, jnp
+    twin of the gather kernel) and recall@k vs the exhaustive flat SDC
+    scan over the same codes. ``table_bytes`` (device footprint of the
+    neighbor-block tables) is held to the same <= 0.55x packed/unpacked
+    invariant as the scan benches by scripts/check_bench_gate.py — at the
+    canonical m=128 the per-neighbor inv/id metadata stays small enough.
+    """
+    key = jax.random.PRNGKey(11)
+    cd = jax.random.randint(key, (n_docs, m), 0, 2**levels).astype(jnp.int8)
+    cq = jax.random.randint(jax.random.fold_in(key, 1), (queries, m), 0,
+                            2**levels).astype(jnp.int8)
+    inv = R.doc_inv_norms(cd, levels)
+    ev, ei = sdc_search_xla(cq, cd, inv, n_levels=levels, k=k)
+    ei = np.asarray(ei)
+
+    t0 = time.time()
+    hn = build_hnsw(np.asarray(cd), np.asarray(inv), n_levels=levels, M=M,
+                    ef_construction=64)
+    build_s = time.time() - t0
+
+    rows = []
+    for packed in (False, True):
+        tables = prepare_batched(hn, packed=packed)
+        t, (_, idx, stats) = timeit(
+            lambda: search_hnsw_batched(
+                tables, cq, k=k, ef=ef, beam=beam, backend="xla",
+                with_stats=True,
+            )
+        )
+        idx = np.asarray(idx)
+        recall = float(np.mean([
+            len(set(idx[i]) & set(ei[i])) / k for i in range(queries)
+        ]))
+        hops = np.asarray(stats["hops"])
+        scored = np.asarray(stats["scored"])
+        rows.append({
+            "packed": packed,
+            "ms": 1e3 * t,
+            "hops_mean": float(hops.mean()),
+            "hops_max": int(hops.max()),
+            "candidates_mean": float(scored.mean()),
+            "recall_at_k": recall,
+            "table_bytes": tables.nbytes(),
+        })
+
+    out = {
+        "bench": "hnsw_scan",
+        "host_backend": jax.default_backend(),
+        "n_docs": n_docs, "queries": queries, "levels": levels,
+        "code_dim": m, "M": M, "ef": ef, "beam": beam, "k": k,
+        "build_s": build_s,
+        "rows": rows,
+    }
+    path = os.path.abspath(path)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"\n# BENCH_hnsw_scan -> {path}")
+    print("packed,ms,hops_mean,candidates_mean,recall@k")
+    for r in rows:
+        print(f"{r['packed']},{r['ms']:.2f},{r['hops_mean']:.1f},"
+              f"{r['candidates_mean']:.0f},{r['recall_at_k']:.3f}")
+    return out
+
+
 if __name__ == "__main__":
     run()
+    emit_hnsw_scan_json()

@@ -38,8 +38,17 @@ def main() -> None:
         "table4": lambda: table4_backward_compat.run(steps=max(steps // 2, 100)),
         "table5": table5_search_latency.run,
         # machine-readable scan perf (BENCH_sdc_scan.json) without the
-        # rest of table5 — cheap enough for every CI run.
-        "bench_sdc_scan": table5_search_latency.emit_sdc_scan_json,
+        # rest of table5 — cheap enough for every CI run. --fast shrinks
+        # the corpus to CI-smoke size (the byte-ratio gate that
+        # scripts/check_bench_gate.py enforces is size-independent).
+        "bench_sdc_scan": lambda: table5_search_latency.emit_sdc_scan_json(
+            **(dict(n_docs=4096, queries=8) if args.fast else {})
+        ),
+        # graph-search trajectory (BENCH_hnsw_scan.json): hops, candidates
+        # scored, ms, recall vs the flat scan.
+        "bench_hnsw_scan": lambda: fig6_ann_integration.emit_hnsw_scan_json(
+            **(dict(n_docs=1500, queries=8) if args.fast else {})
+        ),
         "fig6": lambda: fig6_ann_integration.run(steps=max(steps // 2, 100)),
         "table67": lambda: table67_system_ab.run(steps=max(steps // 2, 100)),
         "bits_sweep": lambda: bits_sweep.run(steps=max(steps // 2, 100)),

@@ -175,3 +175,9 @@ def run():
 if __name__ == "__main__":
     run()
     emit_sdc_scan_json()
+    # The graph-search counterpart of the scan trajectory (~30s: the NSW
+    # build is host-side O(N^2) at the default 8k docs). Lazy import:
+    # fig6 imports this module for sdc_scores_xla.
+    from benchmarks.fig6_ann_integration import emit_hnsw_scan_json
+
+    emit_hnsw_scan_json()

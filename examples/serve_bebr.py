@@ -1,11 +1,17 @@
 """Distributed BEBR serving demo (paper Figure 5: proxy -> leaf -> merge).
 
-    PYTHONPATH=src python examples/serve_bebr.py
+    PYTHONPATH=src python examples/serve_bebr.py [--index flat|hnsw]
 
 Forces 8 host devices, shards a binary index across them as "leaves",
 broadcasts query batches, and merges per-leaf top-k — the same shard_map
 program the 512-chip dry-run compiles, at laptop scale. Compares against
 the exact single-host search and reports agreement + index bytes.
+
+``--index hnsw`` swaps the exhaustive leaf scan for the batched-frontier
+graph search: one NSW graph per leaf (host-side build), each leaf walking
+its graph through the gather-then-scan kernel substrate, merged by the
+identical proxy. The corpus shrinks to 16k docs because the NSW build is
+host-side O(N^2) — the *search* program is the production one.
 """
 
 import os
@@ -16,6 +22,7 @@ os.environ["XLA_FLAGS"] = (
 )
 
 # ruff: noqa: E402
+import argparse
 import time
 
 import jax
@@ -24,13 +31,25 @@ import numpy as np
 
 from repro.core import BinarizerConfig, binarize_lib, init_binarizer, pack_codes
 from repro.data.synthetic import clustered_corpus
-from repro.index.engine import engine_input_shardings, make_distributed_search
+from repro.index.engine import (
+    engine_input_shardings,
+    hnsw_engine_inputs,
+    hnsw_engine_shardings,
+    make_distributed_search,
+    make_hnsw_search,
+)
+from repro.index.hnsw_lite import build_hnsw_sharded
 from repro.kernels.sdc import ref as R
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--index", choices=["flat", "hnsw"], default="flat")
+    args = ap.parse_args()
+
     dim, code, levels = 128, 64, 4
-    docs, queries, gt = clustered_corpus(0, 100_000, 64, dim, n_clusters=256)
+    n_docs = 100_000 if args.index == "flat" else 16_000
+    docs, queries, gt = clustered_corpus(0, n_docs, 64, dim, n_clusters=256)
 
     # binarize (random-projection binarizer is enough for the demo)
     bcfg = BinarizerConfig(input_dim=dim, code_dim=code, n_levels=levels,
@@ -42,19 +61,30 @@ def main():
     inv = R.doc_inv_norms(d_codes, levels)
 
     mesh = jax.make_mesh((4, 2), ("data", "model"))
-    print(f"mesh: {mesh.shape} — index of {d_codes.shape[0]} codes sharded "
-          f"over {mesh.devices.size} leaves")
-    search = make_distributed_search(mesh, n_levels=levels, k=10)
+    print(f"mesh: {mesh.shape} — {args.index} index of {d_codes.shape[0]} "
+          f"codes sharded over {mesh.devices.size} leaves")
+
+    if args.index == "hnsw":
+        # one NSW graph per leaf; the proxy merge is unchanged
+        sharded = build_hnsw_sharded(
+            np.asarray(d_codes), np.asarray(inv), n_leaves=8,
+            n_levels=levels, M=16, ef_construction=48,
+        )
+        search = make_hnsw_search(mesh, n_levels=levels, k=10, ef=64, beam=16)
+        qspec, *in_specs = hnsw_engine_shardings(mesh)
+        inputs = hnsw_engine_inputs(sharded)
+    else:
+        search = make_distributed_search(mesh, n_levels=levels, k=10)
+        qspec, *in_specs = engine_input_shardings(mesh)
+        inputs = (d_codes, inv)
 
     with mesh:
-        qs, ds, vs = engine_input_shardings(mesh)
-        qd = jax.device_put(q_codes, qs)
-        dd = jax.device_put(d_codes, ds)
-        vd = jax.device_put(inv, vs)
+        qd = jax.device_put(q_codes, qspec)
+        ins = [jax.device_put(a, s) for a, s in zip(inputs, in_specs)]
         # warm up + time
-        jax.block_until_ready(search(qd, dd, vd))
+        jax.block_until_ready(search(qd, *ins))
         t0 = time.time()
-        vals, ids = search(qd, dd, vd)
+        vals, ids = search(qd, *ins)
         jax.block_until_ready(vals)
         dt = time.time() - t0
 

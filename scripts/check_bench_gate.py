@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""CI bench gate: fail when the packed-scan byte invariant regresses.
+
+ROADMAP invariant: int4 nibble-packed code streaming must keep scan bytes
+at <= 0.55x the unpacked scan for every engine variant (0.5x codes + small
+per-doc metadata that packing cannot shrink). A PR that silently widens
+the packed layout, forgets to pack a new scan path, or inflates per-doc
+metadata shows up here as a ratio creep past the threshold.
+
+    python scripts/check_bench_gate.py BENCH_sdc_scan.json \
+        [--max-packed-ratio 0.55]
+
+Reads the ``rows`` emitted by ``benchmarks/run.py --only bench_sdc_scan``
+(each row: variant, packed, bytes_scanned), pairs packed/unpacked rows per
+variant, and exits non-zero if any ratio exceeds the threshold — or if a
+variant is missing one side of the pair (a gate that can't see the packed
+row must not pass green).
+
+Also understands ``BENCH_hnsw_scan.json`` (rows keyed by ``packed`` only,
+bytes in ``table_bytes`` — the device footprint of the neighbor-block
+tables), so the graph-search tables are held to the same invariant.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _row_bytes(row: dict):
+    return row.get("bytes_scanned", row.get("table_bytes"))
+
+
+def check(bench: dict, max_ratio: float) -> int:
+    rows = bench.get("rows", [])
+    by_variant: dict = {}
+    for r in rows:
+        variant = r.get("variant", bench.get("bench", "default"))
+        by_variant.setdefault(variant, {})[bool(r["packed"])] = r
+
+    if not by_variant:
+        print("bench gate: no rows found in benchmark JSON", file=sys.stderr)
+        return 1
+
+    failures = 0
+    print("variant,packed_bytes,unpacked_bytes,ratio,limit,status")
+    for variant, pair in sorted(by_variant.items()):
+        if True not in pair or False not in pair:
+            print(f"{variant},?,?,?,{max_ratio},MISSING-PAIR")
+            failures += 1
+            continue
+        p, u = _row_bytes(pair[True]), _row_bytes(pair[False])
+        if p is None or u is None or u <= 0:
+            print(f"{variant},{p},{u},?,{max_ratio},BAD-BYTES")
+            failures += 1
+            continue
+        ratio = p / u
+        ok = ratio <= max_ratio
+        print(f"{variant},{p},{u},{ratio:.4f},{max_ratio},"
+              f"{'ok' if ok else 'FAIL'}")
+        if not ok:
+            failures += 1
+    if failures:
+        print(f"bench gate: {failures} variant(s) violate the packed-byte "
+              f"invariant (ratio <= {max_ratio})", file=sys.stderr)
+    return 1 if failures else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("bench_json", help="path to BENCH_sdc_scan.json")
+    ap.add_argument("--max-packed-ratio", type=float, default=0.55,
+                    help="max allowed packed/unpacked bytes_scanned ratio")
+    args = ap.parse_args()
+    with open(args.bench_json) as f:
+        bench = json.load(f)
+    return check(bench, args.max_packed_ratio)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,47 @@
+#!/usr/bin/env bash
+# Local mirror of .github/workflows/ci.yml (for machines without `act`):
+# runs the same three jobs — lint, tier-1 tests, bench-smoke + gate — in
+# order and reports a summary. Run from the repo root:
+#
+#     bash scripts/ci_dryrun.sh [--skip-tests]
+#
+# --skip-tests runs only lint + bench-smoke (the tier-1 suite takes
+# ~8 min on a laptop CPU).
+set -u
+cd "$(dirname "$0")/.."
+
+SKIP_TESTS=0
+[ "${1:-}" = "--skip-tests" ] && SKIP_TESTS=1
+
+fail=0
+note() { printf '\n=== %s ===\n' "$*"; }
+
+note "job: lint (ruff check src tests benchmarks)"
+if command -v ruff >/dev/null 2>&1; then
+    ruff check src tests benchmarks || fail=1
+elif python -m ruff --version >/dev/null 2>&1; then
+    python -m ruff check src tests benchmarks || fail=1
+else
+    echo "ruff not installed locally -- SKIPPED (CI installs it)"
+fi
+
+if [ "$SKIP_TESTS" = 0 ]; then
+    note "job: tier1 (PYTHONPATH=src python -m pytest -x -q)"
+    PYTHONPATH=src python -m pytest -x -q || fail=1
+else
+    note "job: tier1 -- SKIPPED (--skip-tests)"
+fi
+
+note "job: bench-smoke (tiny corpus + packed-byte gate)"
+PYTHONPATH=src python -m benchmarks.run --fast --only bench_sdc_scan || fail=1
+PYTHONPATH=src python -m benchmarks.run --fast --only bench_hnsw_scan || fail=1
+python scripts/check_bench_gate.py BENCH_sdc_scan.json --max-packed-ratio 0.55 || fail=1
+python scripts/check_bench_gate.py BENCH_hnsw_scan.json --max-packed-ratio 0.55 || fail=1
+
+note "summary"
+if [ "$fail" = 0 ]; then
+    echo "ci dry-run: all jobs green"
+else
+    echo "ci dry-run: FAILURES (see above)"
+fi
+exit "$fail"

@@ -17,6 +17,15 @@ jnp fallback for CPU meshes (identical scores, shared epilogue);
 ``backend="interpret"`` exercises the kernel under the Pallas interpreter
 in tests. ``packed=True`` shards a nibble-packed uint8 [N, D//2] corpus,
 halving per-leaf scan bandwidth.
+
+Three first-class leaf index types share the proxy/merge skeleton:
+  * flat  — exhaustive leaf scan (``make_distributed_search``);
+  * flat + failover mask (``make_failover_search``);
+  * hnsw  — batched-frontier graph search per leaf
+    (``make_hnsw_search``), one NSW graph per shard built host-side by
+    ``hnsw_lite.build_hnsw_sharded``; each leaf walks its local graph
+    with the same gather-kernel scoring, so sublinear leaf scans ride
+    the identical selection-merge.
 """
 
 from __future__ import annotations
@@ -28,6 +37,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.index.hnsw_lite import ShardedHNSW, hnsw_frontier_search
 from repro.kernels.sdc.ops import resolve_backend, sdc_search, sdc_search_xla
 
 
@@ -186,4 +196,91 @@ def make_failover_search(
         mesh, n_levels=n_levels, k=k, shard_axes=shard_axes,
         backend=backend, packed=packed, block_q=block_q, block_n=block_n,
         failover=True,
+    )
+
+
+def make_hnsw_search(
+    mesh: Mesh,
+    *,
+    n_levels: int,
+    k: int,
+    ef: int = 64,
+    beam: int = 8,
+    max_hops: int = 64,
+    shard_axes: Tuple[str, ...] = ("data", "model"),
+    backend: str = "auto",
+    packed: bool = False,
+):
+    """Distributed HNSW engine: batched-frontier graph search per leaf.
+
+    Same proxy/leaf/merge skeleton as ``make_distributed_search``, but each
+    leaf walks its local NSW graph (built by ``build_hnsw_sharded``)
+    instead of scanning its whole shard — the leaf cost is
+    O(hops * beam * M) candidates instead of O(shard_n), scored through
+    the identical gather-kernel substrate.
+
+    Inputs (global shapes, see ``hnsw_engine_shardings``):
+      q_codes [Q, D] replicated; codes [N, D(/2)], inv_norm [N],
+      nbr_codes [N, M, D(/2)], nbr_inv [N, M], nbr_ids [N, M] (leaf-local
+      ids) and entries [n_leaves, E] (leaf-local ids) sharded on axis 0.
+    Output: (scores [Q, k], global ids [Q, k]) replicated.
+    """
+    axes = shard_axes
+    backend = resolve_backend(backend)
+    ef_eff = max(ef, k)
+    beam_eff = max(1, min(beam, ef_eff))
+
+    def search(q_codes, codes, inv, nbr_codes, nbr_inv, nbr_ids, entries):
+        shard_n = codes.shape[0]
+        # One graph per leaf: a build_hnsw_sharded(n_leaves=...) that
+        # doesn't match the mesh would alias leaf-local neighbor ids
+        # across sub-graphs and silently corrupt global ids — fail loudly
+        # at trace time instead.
+        if entries.shape[0] != 1:
+            raise ValueError(
+                f"build_hnsw_sharded n_leaves must equal the mesh's "
+                f"sharded device count (each leaf got {entries.shape[0]} "
+                "entry rows, expected 1)"
+            )
+        rank = jnp.zeros((), jnp.int32)
+        for ax in axes:
+            rank = rank * mesh.shape[ax] + jax.lax.axis_index(ax)
+        base = rank * shard_n
+        vals, ids, _ = hnsw_frontier_search(
+            q_codes, codes, inv, nbr_codes, nbr_inv, nbr_ids,
+            entries.reshape(-1),
+            n_levels=n_levels, k=k, ef=ef_eff, beam=beam_eff,
+            max_hops=max_hops, backend=backend, packed=packed,
+        )
+        vals = jnp.where(ids >= 0, vals, -jnp.inf)
+        all_vals = vals
+        all_ids = jnp.where(ids >= 0, ids + base, -1)
+        for ax in axes:
+            all_vals = jax.lax.all_gather(all_vals, ax, axis=1, tiled=True)
+            all_ids = jax.lax.all_gather(all_ids, ax, axis=1, tiled=True)
+        merged_vals, pos = jax.lax.top_k(all_vals, k)
+        merged_ids = jnp.take_along_axis(all_ids, pos, axis=-1)
+        return merged_vals, merged_ids
+
+    in_specs = (P(),) + (P(axes),) * 6
+    fn = shard_map(
+        search, mesh=mesh, in_specs=in_specs, out_specs=(P(), P()),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+def hnsw_engine_shardings(mesh: Mesh, shard_axes=("data", "model")):
+    """NamedShardings for ``make_hnsw_search``'s seven inputs (queries
+    replicated, every table sharded on axis 0)."""
+    rep = NamedSharding(mesh, P())
+    sh = NamedSharding(mesh, P(shard_axes))
+    return (rep,) + (sh,) * 6
+
+
+def hnsw_engine_inputs(index: ShardedHNSW):
+    """The sharded input arrays of ``make_hnsw_search``, in order."""
+    return (
+        index.codes, index.inv_norm, index.nbr_codes, index.nbr_inv,
+        index.nbr_ids, index.entries,
     )

@@ -25,16 +25,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.binarize_lib import (
-    SDC_NEG_INF,
     codes_to_values,
     pack_codes_nibbles,
-    sdc_affine_epilogue,
-    unpack_nibble_planes,
     values_to_codes,
 )
 from repro.index.kmeans import kmeans
 from repro.kernels.sdc import ref as sdc_ref
-from repro.kernels.sdc.gather import sdc_gather_topk
+from repro.kernels.sdc.gather import sdc_gather_topk, sdc_gather_topk_xla
 from repro.kernels.sdc.ops import resolve_backend
 
 
@@ -164,7 +161,6 @@ def ivf_search(
     packed: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
     """Search [Q] queries; returns (scores [Q, k], doc ids [Q, k])."""
-    D = q_codes.shape[-1]
     vq = codes_to_values(q_codes, n_levels)  # [Q, D]
 
     # --- coarse layer ---
@@ -191,35 +187,18 @@ def ivf_search(
             packed=packed,
         )
 
-    # jnp fallback: gather candidate lists, score via the shared epilogue.
-    cand_codes = lists_codes[probes]  # [Q, nprobe, L, D(/2)]
-    cand_inv = lists_inv_norm[probes]  # [Q, nprobe, L]
-    cand_ids = lists_ids[probes]  # [Q, nprobe, L]
-
-    cq = q_codes.astype(jnp.int32)
-    if packed:
-        lo, hi = unpack_nibble_planes(cand_codes)
-        lo, hi = lo.astype(jnp.int32), hi.astype(jnp.int32)
-        dot = jnp.einsum("qd,qpld->qpl", cq[:, 0::2], lo) + jnp.einsum(
-            "qd,qpld->qpl", cq[:, 1::2], hi
-        )
-        sd = jnp.sum(lo, -1) + jnp.sum(hi, -1)
-    else:
-        cd = cand_codes.astype(jnp.int32)
-        dot = jnp.einsum("qd,qpld->qpl", cq, cd)
-        sd = jnp.sum(cd, -1)
-    sq = jnp.sum(cq, -1)[:, None, None]
-    scores = sdc_affine_epilogue(
-        dot, sq + sd, dim=D, n_levels=n_levels, inv_norm=cand_inv
+    # jnp fallback: gather candidate lists, score via the shared epilogue
+    # (one implementation shared with HNSW's batched-frontier hop scoring).
+    return sdc_gather_topk_xla(
+        q_codes,
+        lists_codes,
+        lists_inv_norm,
+        lists_ids,
+        probes,
+        n_levels=n_levels,
+        k=k,
+        packed=packed,
     )
-    scores = jnp.where(cand_ids >= 0, scores, SDC_NEG_INF)
-
-    Q = q_codes.shape[0]
-    flat_scores = scores.reshape(Q, -1)
-    flat_ids = cand_ids.reshape(Q, -1)
-    vals, pos = jax.lax.top_k(flat_scores, k)
-    ids = jnp.take_along_axis(flat_ids, pos, axis=-1)
-    return vals, jnp.where(vals > SDC_NEG_INF / 2, ids, -1)
 
 
 def search(

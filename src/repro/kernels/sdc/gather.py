@@ -17,6 +17,15 @@ giving the same VMEM-resident running-top-k pattern as ``sdc_topk``.
 Supports the nibble-packed int4 list layout (``packed=True``) with the
 same bit-identical guarantee as the flat kernels: scores come from the
 shared ``sdc_affine_epilogue`` over exact integer partial sums.
+
+Beyond IVF, the same kernel scores HNSW neighbor blocks (index/hnsw_lite):
+there "lists" are per-node fixed-width neighbor tables [N, M, ...] and
+"probes" are the search beam. Graph search needs one extra ingredient the
+IVF path does not: a per-(query, probe, slot) candidate mask
+(``cand_mask``) so already-visited nodes can be excluded from the running
+top-k without touching the streamed tables. The mask is a small [Q,
+nprobe, L] input streamed alongside each block; masked slots score
+SDC_NEG_INF exactly like list padding.
 """
 
 from __future__ import annotations
@@ -28,7 +37,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.binarize_lib import SDC_NEG_INF
+from repro.core.binarize_lib import (
+    SDC_NEG_INF,
+    sdc_affine_epilogue,
+    unpack_nibble_planes,
+)
 from repro.kernels.sdc.sdc import (
     _merge_running_topk,
     _split_queries,
@@ -48,11 +61,14 @@ def _pad_cols(x: jax.Array, k: int, fill):
 
 
 def _gather_topk_step(
-    scores, ids, vals_ref, out_ids_ref, *, p, k: int
+    scores, ids, vals_ref, out_ids_ref, *, p, k: int, mask=None
 ):
     """Common tail of a (query, probe) step: mask pads, fold into top-k."""
     # List padding carries ids == -1 (and inv == 0, already NEG_INF).
     scores = jnp.where(ids[None, :] >= 0, scores, SDC_NEG_INF)
+    if mask is not None:
+        # Caller-supplied per-slot exclusion (e.g. HNSW visited bitmap).
+        scores = jnp.where(mask[None, :] > 0, scores, SDC_NEG_INF)
     scores = _pad_cols(scores, k, SDC_NEG_INF)
     tile_vals, tile_arg = jax.lax.top_k(scores, k)  # [1, k]
     padded_ids = _pad_cols(ids[None, :], k, -1)
@@ -74,15 +90,20 @@ def sdc_gather_topk(
     k: int,
     interpret: bool = False,
     packed: bool = False,
+    cand_mask: jax.Array | None = None,
 ):
-    """Fine-layer IVF search: stream probed lists, running top-k per query.
+    """Block-gather search: stream probed blocks, running top-k per query.
 
     Args:
       q_codes: [Q, D] int8 query codes (unpacked, even with packed lists).
       lists_codes: [nlist, L, D] int8, or [nlist, L, D//2] uint8 if packed.
       lists_inv_norm: [nlist, L] f32 reciprocal doc norms (0 for padding).
       lists_ids: [nlist, L] int32 global doc ids (-1 for padding).
-      probes: [Q, nprobe] int32 list ids to scan per query.
+      probes: [Q, nprobe] int32 list ids to scan per query (clamped into
+        range, so callers with invalid slots must also zero ``cand_mask``).
+      cand_mask: optional [Q, nprobe, L] per-slot inclusion mask (> 0 keeps
+        the slot). Used by HNSW's batched-frontier search to drop visited
+        nodes without touching the streamed tables; IVF leaves it None.
 
     Returns:
       (scores [Q, k], doc ids [Q, k]); empty slots are (SDC_NEG_INF, -1).
@@ -92,6 +113,8 @@ def sdc_gather_topk(
     nprobe = probes.shape[1]
     Dc = lists_codes.shape[-1]
     assert Dc == (D // 2 if packed else D), (lists_codes.shape, D, packed)
+    probes = jnp.clip(probes.astype(jnp.int32), 0, nlist - 1)
+    has_mask = cand_mask is not None
 
     if packed:
         qe, qo = _split_queries(q_codes)
@@ -104,21 +127,35 @@ def sdc_gather_topk(
         q_args = (q_codes,)
         q_specs = [pl.BlockSpec((1, D), lambda q, p, pr: (q, 0))]
 
+    mask_args = ()
+    mask_specs = []
+    if has_mask:
+        mask_args = (cand_mask.astype(jnp.float32),)
+        mask_specs = [pl.BlockSpec((1, 1, L), lambda q, p, pr: (q, p, 0))]
+
     def kernel(probes_ref, *refs):
         del probes_ref  # consumed by the BlockSpec index maps
         p = pl.program_id(1)
         if packed:
-            qe_ref, qo_ref, codes_ref, inv_ref, ids_ref, vals_ref, ids_out = refs
+            qe_ref, qo_ref, codes_ref, inv_ref, ids_ref, *rest = refs
             scores = _tile_scores_packed(
                 qe_ref[...], qo_ref[...], codes_ref[0], inv_ref[0],
                 n_levels=n_levels, dim=D,
             )  # [1, L]
         else:
-            q_ref, codes_ref, inv_ref, ids_ref, vals_ref, ids_out = refs
+            q_ref, codes_ref, inv_ref, ids_ref, *rest = refs
             scores = _tile_scores(
                 q_ref[...], codes_ref[0], inv_ref[0], n_levels=n_levels, dim=D
             )
-        _gather_topk_step(scores, ids_ref[0], vals_ref, ids_out, p=p, k=k)
+        if has_mask:
+            mask_ref, vals_ref, ids_out = rest
+            mask = mask_ref[0, 0]
+        else:
+            vals_ref, ids_out = rest
+            mask = None
+        _gather_topk_step(
+            scores, ids_ref[0], vals_ref, ids_out, p=p, k=k, mask=mask
+        )
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -128,6 +165,7 @@ def sdc_gather_topk(
             pl.BlockSpec((1, L, Dc), lambda q, p, pr: (pr[q, p], 0, 0)),
             pl.BlockSpec((1, L), lambda q, p, pr: (pr[q, p], 0)),
             pl.BlockSpec((1, L), lambda q, p, pr: (pr[q, p], 0)),
+            *mask_specs,
         ],
         out_specs=[
             pl.BlockSpec((1, k), lambda q, p, pr: (q, 0)),
@@ -142,4 +180,71 @@ def sdc_gather_topk(
             jax.ShapeDtypeStruct((Q, k), jnp.int32),
         ],
         interpret=interpret,
-    )(probes.astype(jnp.int32), *q_args, lists_codes, lists_inv_norm, lists_ids)
+    )(
+        probes, *q_args, lists_codes, lists_inv_norm, lists_ids, *mask_args
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_levels", "k", "packed"))
+def sdc_gather_topk_xla(
+    q_codes: jax.Array,
+    lists_codes: jax.Array,
+    lists_inv_norm: jax.Array,
+    lists_ids: jax.Array,
+    probes: jax.Array,
+    *,
+    n_levels: int,
+    k: int,
+    packed: bool = False,
+    cand_mask: jax.Array | None = None,
+):
+    """jnp twin of ``sdc_gather_topk`` (the "xla" backend).
+
+    Gathers every probed block into one [Q, nprobe, L, D] tensor and scores
+    it through the shared epilogue — fine on CPU meshes, where the kernel's
+    HBM-streaming argument does not apply. Same contract, same scores
+    (bit-identical: identical integer partial sums and float op order).
+    Shared by the IVF fine layer and HNSW's batched-frontier hop scoring.
+    """
+    D = q_codes.shape[-1]
+    nlist = lists_ids.shape[0]
+    probes = jnp.clip(probes.astype(jnp.int32), 0, nlist - 1)
+    cand_codes = lists_codes[probes]  # [Q, nprobe, L, D(/2)]
+    cand_inv = lists_inv_norm[probes]  # [Q, nprobe, L]
+    cand_ids = lists_ids[probes]  # [Q, nprobe, L]
+
+    cq = q_codes.astype(jnp.int32)
+    if packed:
+        lo, hi = unpack_nibble_planes(cand_codes)
+        lo, hi = lo.astype(jnp.int32), hi.astype(jnp.int32)
+        dot = jnp.einsum("qd,qpld->qpl", cq[:, 0::2], lo) + jnp.einsum(
+            "qd,qpld->qpl", cq[:, 1::2], hi
+        )
+        sd = jnp.sum(lo, -1) + jnp.sum(hi, -1)
+    else:
+        cd = cand_codes.astype(jnp.int32)
+        dot = jnp.einsum("qd,qpld->qpl", cq, cd)
+        sd = jnp.sum(cd, -1)
+    sq = jnp.sum(cq, -1)[:, None, None]
+    scores = sdc_affine_epilogue(
+        dot, sq + sd, dim=D, n_levels=n_levels, inv_norm=cand_inv
+    )
+    scores = jnp.where(cand_ids >= 0, scores, SDC_NEG_INF)
+    if cand_mask is not None:
+        scores = jnp.where(cand_mask > 0, scores, SDC_NEG_INF)
+
+    Q = q_codes.shape[0]
+    flat_scores = scores.reshape(Q, -1)
+    flat_ids = cand_ids.reshape(Q, -1)
+    if k > flat_scores.shape[1]:
+        pad = jnp.full(
+            (Q, k - flat_scores.shape[1]), SDC_NEG_INF, flat_scores.dtype
+        )
+        flat_scores = jnp.concatenate([flat_scores, pad], axis=1)
+        flat_ids = jnp.concatenate(
+            [flat_ids, jnp.full((Q, k - flat_ids.shape[1]), -1, jnp.int32)],
+            axis=1,
+        )
+    vals, pos = jax.lax.top_k(flat_scores, k)
+    ids = jnp.take_along_axis(flat_ids, pos, axis=-1)
+    return vals, jnp.where(vals > SDC_NEG_INF / 2, ids, -1)

@@ -30,6 +30,7 @@ from repro.core import (
 from repro.core import binarize_lib
 import repro.core.losses as losses_lib
 from repro.data import synthetic
+from repro.index import hnsw_lite
 from repro.index import ivf as ivf_lib
 from repro.index.flat import FlatFloat, FlatSDC
 from repro.kernels.sdc import ref as sdc_ref
@@ -64,8 +65,12 @@ def main():
     ap.add_argument("--code-dim", type=int, default=128)
     ap.add_argument("--levels", type=int, default=4)
     ap.add_argument("--steps", type=int, default=300)
-    ap.add_argument("--index", choices=["flat", "ivf"], default="flat")
+    ap.add_argument("--index", choices=["flat", "ivf", "hnsw"], default="flat")
     ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--ef", type=int, default=64,
+                    help="hnsw: result-list width (and per-hop top-k)")
+    ap.add_argument("--beam", type=int, default=8,
+                    help="hnsw: frontier nodes expanded per hop")
     ap.add_argument("--packed", action="store_true",
                     help="int4 nibble-packed code storage (2 dims/byte; "
                          "halves scan bandwidth, bit-identical scores)")
@@ -109,13 +114,27 @@ def main():
         )
         search = lambda q: index.search(q, args.k)
         nbytes = index.nbytes()
-    else:
+    elif args.index == "ivf":
         index = ivf_lib.build_ivf(
             jax.random.PRNGKey(1), d_codes, n_levels=bcfg.n_levels, nlist=64,
             packed=args.packed,
         )
         search = lambda q: ivf_lib.search(
             index, q, nprobe=32, k=args.k, backend=args.backend
+        )
+        nbytes = index.nbytes()
+    else:  # hnsw: batched-frontier graph search on the gather kernel
+        inv = np.asarray(sdc_ref.doc_inv_norms(d_codes, bcfg.n_levels))
+        print("[index] building NSW graph (host-side, O(N^2) incremental "
+              "construction — use --docs <= 20000 for a quick demo)")
+        index = hnsw_lite.build_hnsw(
+            np.asarray(d_codes), inv, n_levels=bcfg.n_levels, M=16,
+            ef_construction=64, packed=args.packed,
+        )
+        tables = hnsw_lite.prepare_batched(index)
+        search = lambda q: hnsw_lite.search_hnsw_batched(
+            tables, q, k=args.k, ef=args.ef, beam=args.beam,
+            backend=args.backend,
         )
         nbytes = index.nbytes()
 

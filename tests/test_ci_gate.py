@@ -1,0 +1,93 @@
+"""The CI bench gate (scripts/check_bench_gate.py) must actually gate:
+green on a healthy packed/unpacked byte ratio, red on a regressed one, on
+a missing packed row, and on an empty report (deliberate-failure coverage
+demanded by the CI satellite — a gate that cannot fail is decoration)."""
+
+import json
+import os
+import subprocess
+import sys
+
+GATE = os.path.join(
+    os.path.dirname(__file__), "..", "scripts", "check_bench_gate.py"
+)
+
+
+def _rows(ratio: float):
+    return [
+        {"variant": "flat", "packed": False, "bytes_scanned": 100_000},
+        {"variant": "flat", "packed": True,
+         "bytes_scanned": int(100_000 * ratio)},
+        {"variant": "ivf", "packed": False, "bytes_scanned": 50_000},
+        {"variant": "ivf", "packed": True,
+         "bytes_scanned": int(50_000 * ratio)},
+    ]
+
+
+def _run_gate(tmp_path, bench: dict, *extra):
+    path = tmp_path / "bench.json"
+    path.write_text(json.dumps(bench))
+    return subprocess.run(
+        [sys.executable, GATE, str(path), *extra],
+        capture_output=True, text=True, timeout=60,
+    )
+
+
+def test_gate_passes_healthy_ratio(tmp_path):
+    out = _run_gate(tmp_path, {"rows": _rows(0.53)})
+    assert out.returncode == 0, out.stderr
+
+
+def test_gate_fails_regressed_ratio(tmp_path):
+    out = _run_gate(tmp_path, {"rows": _rows(0.60)})
+    assert out.returncode != 0
+    assert "FAIL" in out.stdout
+
+
+def test_gate_threshold_is_configurable(tmp_path):
+    out = _run_gate(tmp_path, {"rows": _rows(0.60)},
+                    "--max-packed-ratio", "0.65")
+    assert out.returncode == 0, out.stderr
+
+
+def test_gate_fails_on_missing_packed_row(tmp_path):
+    rows = [r for r in _rows(0.5) if not r["packed"]]
+    out = _run_gate(tmp_path, {"rows": rows})
+    assert out.returncode != 0
+    assert "MISSING-PAIR" in out.stdout
+
+
+def test_gate_fails_on_empty_report(tmp_path):
+    out = _run_gate(tmp_path, {"rows": []})
+    assert out.returncode != 0
+
+
+def test_gate_understands_hnsw_schema(tmp_path):
+    """BENCH_hnsw_scan rows carry table_bytes and no variant key; the
+    gate must pair them by the bench name and apply the same invariant."""
+    def bench(ratio):
+        return {"bench": "hnsw_scan", "rows": [
+            {"packed": False, "table_bytes": 200_000},
+            {"packed": True, "table_bytes": int(200_000 * ratio)},
+        ]}
+
+    assert _run_gate(tmp_path, bench(0.53)).returncode == 0
+    out = _run_gate(tmp_path, bench(0.60))
+    assert out.returncode != 0
+    assert "hnsw_scan" in out.stdout
+
+
+def test_gate_accepts_real_emitter_output(tmp_path):
+    """End-to-end: the actual tiny-corpus emitter satisfies the gate."""
+    repo_root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    if repo_root not in sys.path:  # bare `pytest` does not add the cwd
+        sys.path.insert(0, repo_root)
+    from benchmarks.table5_search_latency import emit_sdc_scan_json
+
+    path = tmp_path / "BENCH_sdc_scan.json"
+    emit_sdc_scan_json(path=str(path), n_docs=1024, queries=4)
+    out = subprocess.run(
+        [sys.executable, GATE, str(path)],
+        capture_output=True, text=True, timeout=120,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr

@@ -64,6 +64,52 @@ def test_fused_leaf_matches_xla_leaf_and_exact():
     assert "AGREE 1.0" in stdout
 
 
+def test_hnsw_engine_backends_agree_and_recall():
+    """HNSW as a first-class engine index: one NSW graph per leaf searched
+    by the batched-frontier walker; gather-kernel (interpret) and jnp
+    leaves must agree bit-for-bit, packed included, with global ids and
+    near-exact recall at generous ef."""
+    stdout = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.index.engine import (make_hnsw_search,
+            hnsw_engine_shardings, hnsw_engine_inputs)
+        from repro.index.hnsw_lite import build_hnsw_sharded
+        from repro.kernels.sdc import ref as R
+        key = jax.random.PRNGKey(0)
+        codes = np.asarray(jax.random.randint(key, (2048, 64), 0, 16), np.int8)
+        q = jax.random.randint(jax.random.fold_in(key,1), (8, 64), 0, 16).astype(jnp.int8)
+        inv = np.asarray(R.doc_inv_norms(jnp.asarray(codes), 4))
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        outs = {}
+        with mesh:
+            shards = hnsw_engine_shardings(mesh)
+            qd = jax.device_put(q, shards[0])
+            for packed in (False, True):
+                sh = build_hnsw_sharded(codes, inv, n_leaves=8, n_levels=4,
+                                        M=8, ef_construction=32, seed=0,
+                                        packed=packed)
+                ins = [jax.device_put(a, s)
+                       for a, s in zip(hnsw_engine_inputs(sh), shards[1:])]
+                for backend in ("xla", "interpret"):
+                    search = make_hnsw_search(mesh, n_levels=4, k=10, ef=64,
+                                              beam=16, backend=backend,
+                                              packed=packed)
+                    outs[(packed, backend)] = search(qd, *ins)
+        bv, bi = map(np.asarray, outs[(False, "xla")])
+        for key_ in outs:
+            v, i = map(np.asarray, outs[key_])
+            np.testing.assert_array_equal(bv, v)
+            np.testing.assert_array_equal(bi, i)
+        ev, ei = jax.lax.top_k(R.sdc_ref(q, jnp.asarray(codes), 4), 10)
+        agree = np.mean([len(set(bi[i]) & set(np.asarray(ei[i])))/10
+                         for i in range(8)])
+        assert (bi >= 0).all() and (bi < 2048).all()
+        print("AGREE", agree)
+    """)
+    agree = float(stdout.split("AGREE")[1].strip())
+    assert agree >= 0.9, stdout
+
+
 def test_failover_excludes_dead_leaf_under_kernel_path():
     stdout = _run("""
         import jax, jax.numpy as jnp, numpy as np
