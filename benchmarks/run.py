@@ -49,6 +49,16 @@ def main() -> None:
         "bench_hnsw_scan": lambda: fig6_ann_integration.emit_hnsw_scan_json(
             **(dict(n_docs=1500, queries=8) if args.fast else {})
         ),
+        # steady-state serving throughput (BENCH_serving.json): sequential
+        # encode+scan loop vs the double-buffered ServingPipeline. The CI
+        # gate holds overlapped QPS >= sequential on the smoke corpus;
+        # extra interleaved trials there keep the best-of ratio immune to
+        # shared-runner noise (each smoke trial is sub-second).
+        "bench_serving_pipeline": lambda:
+            table5_search_latency.emit_serving_json(
+                **(dict(n_docs=4096, batch=32, n_batches=40, trials=6)
+                   if args.fast else {})
+            ),
         "fig6": lambda: fig6_ann_integration.run(steps=max(steps // 2, 100)),
         "table67": lambda: table67_system_ab.run(steps=max(steps // 2, 100)),
         "bits_sweep": lambda: bits_sweep.run(steps=max(steps // 2, 100)),

@@ -19,6 +19,12 @@ row must not pass green).
 Also understands ``BENCH_hnsw_scan.json`` (rows keyed by ``packed`` only,
 bytes in ``table_bytes`` — the device footprint of the neighbor-block
 tables), so the graph-search tables are held to the same invariant.
+
+``BENCH_serving.json`` (rows keyed by ``mode``) is gated differently:
+the double-buffered pipeline must not lose throughput to the sequential
+encode+scan loop it replaced — overlapped QPS >= --min-serving-ratio x
+sequential QPS (default 1.0). Both rows must be present; the emitter
+reports best-of-N interleaved runs, so the ratio is not noise-driven.
 """
 
 from __future__ import annotations
@@ -30,6 +36,31 @@ import sys
 
 def _row_bytes(row: dict):
     return row.get("bytes_scanned", row.get("table_bytes"))
+
+
+def check_serving(bench: dict, min_ratio: float) -> int:
+    """Overlapped pipeline QPS must be >= min_ratio x sequential QPS."""
+    qps = {r.get("mode"): r.get("qps") for r in bench.get("rows", [])}
+    seq, ovl = qps.get("sequential"), qps.get("overlapped")
+    print("mode,qps")
+    for mode, q in sorted(qps.items(), key=lambda kv: str(kv[0])):
+        print(f"{mode},{q}")
+    if seq is None or ovl is None:
+        print("serving gate: need both a 'sequential' and an 'overlapped' "
+              "row with qps", file=sys.stderr)
+        return 1
+    if seq <= 0:
+        print(f"serving gate: bad sequential qps {seq}", file=sys.stderr)
+        return 1
+    ratio = ovl / seq
+    ok = ratio >= min_ratio
+    print(f"overlapped/sequential,{ratio:.4f},limit>={min_ratio},"
+          f"{'ok' if ok else 'FAIL'}")
+    if not ok:
+        print(f"serving gate: overlapped pipeline lost throughput "
+              f"(ratio {ratio:.4f} < {min_ratio})", file=sys.stderr)
+        return 1
+    return 0
 
 
 def check(bench: dict, max_ratio: float) -> int:
@@ -72,9 +103,14 @@ def main() -> int:
     ap.add_argument("bench_json", help="path to BENCH_sdc_scan.json")
     ap.add_argument("--max-packed-ratio", type=float, default=0.55,
                     help="max allowed packed/unpacked bytes_scanned ratio")
+    ap.add_argument("--min-serving-ratio", type=float, default=1.0,
+                    help="min allowed overlapped/sequential QPS ratio "
+                         "(BENCH_serving.json only)")
     args = ap.parse_args()
     with open(args.bench_json) as f:
         bench = json.load(f)
+    if bench.get("bench") == "serving":
+        return check_serving(bench, args.min_serving_ratio)
     return check(bench, args.max_packed_ratio)
 
 

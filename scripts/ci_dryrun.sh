@@ -32,11 +32,13 @@ else
     note "job: tier1 -- SKIPPED (--skip-tests)"
 fi
 
-note "job: bench-smoke (tiny corpus + packed-byte gate)"
+note "job: bench-smoke (tiny corpus + packed-byte gate + serving gate)"
 PYTHONPATH=src python -m benchmarks.run --fast --only bench_sdc_scan || fail=1
 PYTHONPATH=src python -m benchmarks.run --fast --only bench_hnsw_scan || fail=1
+PYTHONPATH=src python -m benchmarks.run --fast --only bench_serving_pipeline || fail=1
 python scripts/check_bench_gate.py BENCH_sdc_scan.json --max-packed-ratio 0.55 || fail=1
 python scripts/check_bench_gate.py BENCH_hnsw_scan.json --max-packed-ratio 0.55 || fail=1
+python scripts/check_bench_gate.py BENCH_serving.json --min-serving-ratio 1.0 || fail=1
 
 note "summary"
 if [ "$fail" = 0 ]; then

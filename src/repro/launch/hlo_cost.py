@@ -112,12 +112,28 @@ def _group_size(line: str, default: int) -> int:
 
 
 def _dot_flops(shapes: Dict[str, str], result_shape: str, rest: str) -> float:
-    """2 * result_elems * contracted_elems for a dot line."""
-    ops = re.findall(r"\((%[\w\.\-]+)(?:,\s*(%[\w\.\-]+))?\)", rest)
-    m = re.search(r"dot\((%[\w\.\-]+),\s*(%[\w\.\-]+)\)", rest)
+    """2 * result_elems * contracted_elems for a dot line.
+
+    Handles both operand spellings XLA emits: the bare ``dot(%a, %b)`` of
+    older dumps and the typed ``dot(f32[128,128]{1,0} %a, ...)`` of
+    current ones (each operand prefixed by its full shape).
+    """
+    m = re.search(r"\bdot\(([^)]*)\)", rest)
     if not m:
         return 0.0
-    lhs = shapes.get(m.group(1))
+    arglist = m.group(1)
+    names = re.findall(r"%[\w\.\-]+", arglist)
+    if not names:
+        return 0.0
+    # lhs shape: inline type annotation first (typed format), else the
+    # per-computation symbol table (bare format).
+    lhs = None
+    tm = re.search(r"([a-z0-9]+\[[0-9,]*\])(?:\{[^}]*\})?\s+"
+                   + re.escape(names[0]), arglist)
+    if tm:
+        lhs = tm.group(1)
+    if lhs is None:
+        lhs = shapes.get(names[0])
     if lhs is None:
         return 0.0
     lhs_dims = _first_shape_dims(lhs) or []

@@ -1,0 +1,431 @@
+"""Double-buffered async serving pipeline (paper Fig. 5's proxy stage).
+
+``launch/serve.py`` historically trained, encoded, and scored one batch
+at a time on one thread: the device scan sat idle while the host
+binarized the next query batch. This module closes that gap with a
+two-stage pipeline plus a bounded admission queue:
+
+  * **admission queue** — a bounded FIFO in front of the pipeline.
+    ``policy="block"`` back-pressures the caller when full (batch
+    clients); ``policy="shed"`` rejects instead (interactive traffic
+    keeps bounded latency under bursts — the paper's proxy sheds rather
+    than queueing unboundedly). Every admitted request carries its
+    enqueue timestamp, so the reported latency is enqueue→reply, not
+    just device time.
+  * **encode stage** — a background thread pulls admitted requests and
+    runs ``encode_fn`` (float embedding -> packed recurrent-binary
+    codes, a host/jit binarize). This is the same
+    thread-plus-bounded-queue machinery as ``data.pipeline
+    .PrefetchLoader``: the hand-off queue holds ``encode_ahead``
+    batches, so encode of batch t+1 overlaps the scan of batch t.
+  * **scan stage** — a second thread pulls encoded batches and calls
+    ``search_fn``. JAX dispatch is asynchronous, so the next scan is
+    dispatched as soon as the in-flight window (``dispatch_ahead``
+    scans at once) allows, and only then is the oldest awaited
+    (``block_until_ready``) and its ticket resolved — the device never
+    drains between batches.
+
+Single encode thread, single scan thread, FIFO queues throughout:
+results come back in submission order and are bit-identical to a
+sequential encode+search loop (no cross-batch state anywhere).
+
+``SearchFn`` is any ``codes -> (scores [Q, k], ids [Q, k])`` callable —
+``FlatSDC.search`` closures, ``ivf.search`` closures,
+``hnsw_lite.search_hnsw_batched`` closures, and the distributed
+``engine.make_*_search`` functions all qualify, so one pipeline fronts
+every index family.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, List, Optional, Protocol, Tuple
+
+import jax
+
+Array = Any
+
+
+class SearchFn(Protocol):
+    """codes [Q, D(/2)] -> (scores [Q, k], ids [Q, k])."""
+
+    def __call__(self, q_codes: Array) -> Tuple[Array, Array]: ...
+
+
+EncodeFn = Callable[[Any], Array]
+
+
+class RequestShed(RuntimeError):
+    """Raised by ``submit`` when the admission queue is full (shed policy)."""
+
+
+class PipelineClosed(RuntimeError):
+    """Raised by ``submit`` after ``close`` — and surfaced by tickets whose
+    request was still queued when a non-draining close tore the stage
+    threads down."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """Knobs for ``ServingPipeline`` (see module docstring).
+
+    queue_depth    — admission-queue capacity (requests, not batches).
+    policy         — "block": submit back-pressures when full;
+                     "shed": submit raises ``RequestShed`` instead.
+    encode_ahead   — encoded batches buffered between the stages (>= 1;
+                     1 is classic double buffering).
+    dispatch_ahead — scans in flight on the device at once (>= 1).
+                     1 keeps device work strictly serial (encode still
+                     overlaps); >1 dispatches ahead of the oldest await,
+                     which hides dispatch latency on devices with a
+                     command queue but can cache-thrash a shared-core
+                     CPU when the corpus is bigger than cache.
+    """
+
+    queue_depth: int = 8
+    policy: str = "block"
+    encode_ahead: int = 1
+    dispatch_ahead: int = 1
+
+    def __post_init__(self):
+        if self.policy not in ("block", "shed"):
+            raise ValueError(f"policy must be block|shed, got {self.policy!r}")
+        if self.queue_depth < 1 or self.encode_ahead < 1 or self.dispatch_ahead < 1:
+            raise ValueError("queue_depth/encode_ahead/dispatch_ahead must be >= 1")
+
+
+class Ticket:
+    """Handle for one submitted batch; resolves to (scores, ids)."""
+
+    def __init__(self, seq: int, n_queries: int):
+        self.seq = seq
+        self.n_queries = n_queries
+        self.t_enqueue = time.perf_counter()
+        self.t_reply: Optional[float] = None
+        self._done = threading.Event()
+        self._value: Any = None
+        self._error: Optional[BaseException] = None
+        self._resolve_lock = threading.Lock()
+
+    def _resolve(self, value=None, error: Optional[BaseException] = None):
+        # Atomic first-wins: the scan thread and a shutdown sweep may
+        # race to resolve the same ticket; it never resolves twice and
+        # a stored value is never clobbered.
+        with self._resolve_lock:
+            if self._done.is_set():
+                return
+            self.t_reply = time.perf_counter()
+            self._value, self._error = value, error
+            self._done.set()
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Tuple[Array, Array]:
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"ticket {self.seq} not ready after {timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+    @property
+    def latency_s(self) -> float:
+        """Enqueue -> reply wall time (admission wait included)."""
+        if self.t_reply is None:
+            raise RuntimeError("ticket not resolved yet")
+        return self.t_reply - self.t_enqueue
+
+
+_SENTINEL = object()
+
+
+class ServingPipeline:
+    """Bounded-admission, double-buffered encode->scan serving pipeline."""
+
+    def __init__(
+        self,
+        encode_fn: EncodeFn,
+        search_fn: SearchFn,
+        *,
+        config: ServingConfig = ServingConfig(),
+    ):
+        self.encode_fn = encode_fn
+        self.search_fn = search_fn
+        self.config = config
+        self._admission: "queue.Queue" = queue.Queue(maxsize=config.queue_depth)
+        self._encoded: "queue.Queue" = queue.Queue(maxsize=config.encode_ahead)
+        self._closed = False
+        self._lock = threading.Lock()
+        self._seq = 0
+        self.shed_count = 0
+        # Bounded completion accounting: running totals plus a latency
+        # window for percentiles. Retaining whole tickets (and their
+        # result arrays) would grow without bound on a long-running
+        # pipeline.
+        self._n_completed = 0
+        self._n_queries = 0
+        self._latencies: "collections.deque" = collections.deque(maxlen=4096)
+        self._stats_lock = threading.Lock()
+        # device-idle accounting (scan thread): time spent waiting for an
+        # encoded batch = the device had nothing to do.
+        self._scan_idle_s = 0.0
+        self._scan_busy_s = 0.0
+        self._encode_thread = threading.Thread(
+            target=self._encode_loop, name="serving-encode", daemon=True
+        )
+        self._scan_thread = threading.Thread(
+            target=self._scan_loop, name="serving-scan", daemon=True
+        )
+        self._encode_thread.start()
+        self._scan_thread.start()
+
+    # ------------------------------------------------------------------
+    # client side
+    # ------------------------------------------------------------------
+
+    def submit(self, queries: Any) -> Ticket:
+        """Admit one query batch; returns a ``Ticket``.
+
+        block policy: waits for queue space (back-pressure).
+        shed policy: raises ``RequestShed`` when the queue is full.
+        """
+        with self._lock:
+            if self._closed:
+                raise PipelineClosed("submit after close")
+            seq = self._seq
+            self._seq += 1
+        n = int(getattr(queries, "shape", (1,))[0])
+        ticket = Ticket(seq, n)
+        item = (ticket, queries)
+        if self.config.policy == "shed":
+            try:
+                self._admission.put_nowait(item)
+            except queue.Full:
+                with self._stats_lock:
+                    self.shed_count += 1
+                raise RequestShed(
+                    f"admission queue full (depth={self.config.queue_depth})"
+                ) from None
+        else:
+            self._admission.put(item)
+        # A close() racing this submit may have fully shut the stages
+        # down with this item still unconsumed (it landed after close()'s
+        # own post-join sweep). Sweep whatever remains: only unconsumed
+        # items are failed — an item the stages picked up resolves with
+        # its real result, and never from here. While any stage thread
+        # still lives, either the item precedes the shutdown sentinel
+        # (it will be served) or close()'s post-join sweep catches it.
+        if self._closed and not self._scan_thread.is_alive():
+            self._sweep_admission()
+        return ticket
+
+    def close(self, drain: bool = True):
+        """Shut the pipeline down; joins both stage threads.
+
+        drain=True finishes every admitted request first; drain=False
+        resolves still-queued tickets with ``PipelineClosed``.
+        """
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        if not drain:
+            # Pull whatever has not reached the encode stage yet and fail
+            # it; in-flight batches still complete (FIFO, bounded).
+            self._sweep_admission()
+        self._admission.put(_SENTINEL)
+        self._encode_thread.join()
+        self._scan_thread.join()
+        # Post-join sweep: a submit racing this close may have enqueued
+        # after the sentinel; its item sits in the dead queue. Fail those
+        # tickets (atomic first-wins _resolve keeps real results intact).
+        self._sweep_admission()
+
+    def _sweep_admission(self):
+        """Drain the admission queue, failing every unconsumed ticket."""
+        try:
+            while True:
+                item = self._admission.get_nowait()
+                if item is not _SENTINEL:
+                    item[0]._resolve(error=PipelineClosed("pipeline closed"))
+        except queue.Empty:
+            pass
+
+    def __enter__(self) -> "ServingPipeline":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # ------------------------------------------------------------------
+    # stage threads
+    # ------------------------------------------------------------------
+
+    def _encode_loop(self):
+        while True:
+            item = self._admission.get()
+            if item is _SENTINEL:
+                self._encoded.put(_SENTINEL)
+                return
+            ticket, queries = item
+            try:
+                codes = self.encode_fn(queries)
+            except BaseException as e:  # surfaced on the ticket
+                ticket._resolve(error=e)
+                continue
+            self._encoded.put((ticket, codes))
+
+    def _scan_loop(self):
+        inflight: "collections.deque" = collections.deque()
+
+        def await_oldest():
+            ticket, vals, ids = inflight.popleft()
+            t0 = time.perf_counter()
+            try:
+                vals, ids = jax.block_until_ready((vals, ids))
+            except BaseException as e:
+                ticket._resolve(error=e)
+                return
+            finally:
+                self._scan_busy_s += time.perf_counter() - t0
+            ticket._resolve(value=(vals, ids))
+            with self._stats_lock:
+                self._n_completed += 1
+                self._n_queries += ticket.n_queries
+                self._latencies.append(ticket.latency_s)
+
+        while True:
+            try:
+                item = self._encoded.get_nowait()
+            except queue.Empty:
+                # No encoded batch ready: drain an in-flight scan (the
+                # device is busy, not idle) before blocking for input —
+                # tail batches must resolve without waiting for close().
+                if inflight:
+                    await_oldest()
+                    continue
+                t0 = time.perf_counter()
+                item = self._encoded.get()
+                self._scan_idle_s += time.perf_counter() - t0
+            if item is _SENTINEL:
+                break
+            ticket, codes = item
+            # Bound device concurrency BEFORE dispatching: at most
+            # dispatch_ahead scans run at once (1 = strictly serial
+            # device — on shared-core CPU, concurrent full-corpus scans
+            # thrash the cache; on TPU the device queue serialises
+            # anyway and a deeper window just hides dispatch latency).
+            while len(inflight) >= self.config.dispatch_ahead:
+                await_oldest()
+            try:
+                t0 = time.perf_counter()
+                vals, ids = self.search_fn(codes)  # async dispatch
+                self._scan_busy_s += time.perf_counter() - t0
+            except BaseException as e:
+                ticket._resolve(error=e)
+                continue
+            inflight.append((ticket, vals, ids))
+        while inflight:
+            await_oldest()
+
+    # ------------------------------------------------------------------
+    # monitoring
+    # ------------------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Throughput/latency/idle summary over completed requests.
+
+        Percentiles come from a sliding window of the most recent
+        completions (the counters are exact totals) so a long-running
+        pipeline's accounting stays O(1) in memory.
+        """
+        with self._stats_lock:  # other threads append/increment live
+            lat = sorted(self._latencies)
+            n_req, n_q = self._n_completed, self._n_queries
+            shed = self.shed_count
+        wall = self._scan_idle_s + self._scan_busy_s
+        return {
+            "requests": n_req,
+            "queries": n_q,
+            "shed": shed,
+            "latency_p50_ms": 1e3 * _percentile(lat, 0.50),
+            "latency_p99_ms": 1e3 * _percentile(lat, 0.99),
+            "device_idle_frac": self._scan_idle_s / wall if wall > 0 else 0.0,
+        }
+
+
+def _percentile(sorted_vals: List[float], p: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    i = min(len(sorted_vals) - 1, int(round(p * (len(sorted_vals) - 1))))
+    return sorted_vals[i]
+
+
+def serve_batches(
+    encode_fn: EncodeFn,
+    search_fn: SearchFn,
+    batches: List[Any],
+    *,
+    config: ServingConfig = ServingConfig(),
+) -> Tuple[List[Tuple[Array, Array]], dict]:
+    """Run ``batches`` through a fresh pipeline; returns (results, stats).
+
+    Results are in submission order. The admission policy is forced to
+    "block" — an offline driver should back-pressure, not shed.
+    """
+    config = dataclasses.replace(config, policy="block")
+    pipe = ServingPipeline(encode_fn, search_fn, config=config)
+    try:
+        tickets = [pipe.submit(b) for b in batches]
+        results = [t.result() for t in tickets]
+    finally:
+        pipe.close()
+    return results, pipe.stats()
+
+
+def warmup(
+    encode_fn: EncodeFn,
+    search_fn: SearchFn,
+    batches: List[Any],
+) -> None:
+    """Compile the encode + search programs for BOTH drivers.
+
+    Runs the first batch (plus the last, when its shape differs — a
+    ragged tail batch is its own program shape) through the sequential
+    loop and through a throwaway pipeline. The pipeline pass matters
+    because jit caches are keyed on thread-local context: a program
+    compiled on the caller's thread (e.g. under a `with mesh:` scope)
+    recompiles on first use from the pipeline's worker threads. Call
+    this before timing anything.
+    """
+    warm = batches[:1]
+    if len(batches) > 1 and _batch_shape(batches[-1]) != _batch_shape(warm[0]):
+        warm = warm + batches[-1:]
+    serve_sequential(encode_fn, search_fn, warm)
+    serve_batches(encode_fn, search_fn, warm)
+
+
+def _batch_shape(b: Any):
+    return getattr(b, "shape", None)
+
+
+def serve_sequential(
+    encode_fn: EncodeFn,
+    search_fn: SearchFn,
+    batches: List[Any],
+) -> List[Tuple[Array, Array]]:
+    """The pre-pipeline serving loop: encode, scan, await, repeat.
+
+    The benchmark baseline the overlapped pipeline is gated against
+    (same math, no overlap).
+    """
+    out = []
+    for b in batches:
+        codes = encode_fn(b)
+        vals, ids = search_fn(codes)
+        out.append(jax.block_until_ready((vals, ids)))
+    return out

@@ -77,6 +77,37 @@ def test_gate_understands_hnsw_schema(tmp_path):
     assert "hnsw_scan" in out.stdout
 
 
+def _serving_bench(ratio: float):
+    return {"bench": "serving", "rows": [
+        {"mode": "sequential", "qps": 1000.0},
+        {"mode": "overlapped", "qps": 1000.0 * ratio},
+    ]}
+
+
+def test_serving_gate_passes_when_overlapped_wins(tmp_path):
+    out = _run_gate(tmp_path, _serving_bench(1.15))
+    assert out.returncode == 0, out.stderr
+
+
+def test_serving_gate_fails_when_pipeline_loses_throughput(tmp_path):
+    out = _run_gate(tmp_path, _serving_bench(0.9))
+    assert out.returncode != 0
+    assert "FAIL" in out.stdout
+
+
+def test_serving_gate_ratio_is_configurable(tmp_path):
+    out = _run_gate(tmp_path, _serving_bench(0.9),
+                    "--min-serving-ratio", "0.85")
+    assert out.returncode == 0, out.stderr
+
+
+def test_serving_gate_fails_on_missing_mode_row(tmp_path):
+    bench = _serving_bench(1.2)
+    bench["rows"] = bench["rows"][:1]  # no overlapped row
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+
+
 def test_gate_accepts_real_emitter_output(tmp_path):
     """End-to-end: the actual tiny-corpus emitter satisfies the gate."""
     repo_root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))

@@ -49,19 +49,6 @@ def test_prefetch_propagates_errors():
 # ---------------------------------------------------------------------------
 
 
-# Known seed failure (tracked): launch/hlo_cost.py's HLO-text parser finds
-# no dot ops in the scan bodies emitted by this container's CPU XLA (flops
-# come back 0.0) — the HLO dump format drifted from what the parser
-# expects. strict=False so a fixed parser turns these green without
-# churning CI; remove the marks when hlo_cost handles the new format.
-_HLO_COST_XFAIL = pytest.mark.xfail(
-    reason="seed: hlo_cost HLO-text parser sees 0 flops on this XLA "
-           "version's dump format (pre-existing, tracked in CHANGES.md)",
-    strict=False,
-)
-
-
-@_HLO_COST_XFAIL
 @pytest.mark.parametrize("length", [1, 5, 13])
 def test_hlo_cost_multiplies_scan_bodies(length):
     def f(x, w):
@@ -79,7 +66,6 @@ def test_hlo_cost_multiplies_scan_bodies(length):
     assert res["flops"] == pytest.approx(expected, rel=0.01)
 
 
-@_HLO_COST_XFAIL
 def test_hlo_cost_nested_scans_compose():
     def f(x, w):
         def inner(c, _):
@@ -100,7 +86,6 @@ def test_hlo_cost_nested_scans_compose():
     assert res["flops"] == pytest.approx(expected, rel=0.01)
 
 
-@_HLO_COST_XFAIL
 def test_hlo_cost_counts_more_than_xla_for_loops():
     """The whole point: XLA counts bodies once; we don't."""
 
@@ -114,6 +99,9 @@ def test_hlo_cost_counts_more_than_xla_for_loops():
     x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
     w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
     compiled = jax.jit(f).lower(x, w).compile()
-    xla_flops = compiled.cost_analysis().get("flops", 0)
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older JAX: one dict per device
+        ca = ca[0]
+    xla_flops = ca.get("flops", 0)
     ours = hlo_costs(compiled.as_text(), 1)["flops"]
     assert ours > 5 * xla_flops

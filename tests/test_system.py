@@ -8,7 +8,6 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 import repro.core.losses as L
 from repro.core import (
@@ -25,14 +24,23 @@ from repro.index.flat import FlatFloat, FlatSDC
 DIM, CODE, LEVELS = 64, 32, 4  # 2048-bit float -> 128-bit code (16x)
 
 
-def _train_binarizer(docs, steps=150, n_levels=LEVELS, seed=0):
+def _train_binarizer(docs, steps=300, n_levels=LEVELS, seed=0):
     from repro.train import optim
 
+    # Warmup-decay recipe: the linear warmup spans the queue burn-in (the
+    # momentum queue starts zero-filled, so early hard negatives are
+    # junk), and the cosine decay sharpens convergence; 300 steps instead
+    # of the seed's 150 lets the queue fully turn over. Lifts recall from
+    # ~0.84 (below the 0.85*float bar) to ~0.92 on this corpus.
     cfg = TrainConfig(
         binarizer=BinarizerConfig(input_dim=DIM, code_dim=CODE,
                                   n_levels=n_levels, hidden_dim=128),
         queue=L.QueueConfig(length=1024, dim=CODE, top_k=32),
-        adam=optim.AdamConfig(lr=2e-3, clip_norm=5.0),
+        adam=optim.AdamConfig(
+            lr=2e-3, clip_norm=5.0,
+            schedule=optim.cosine_schedule(steps, warmup=steps // 10,
+                                           floor=0.05),
+        ),
     )
     state = init_train_state(jax.random.PRNGKey(seed), cfg)
     step = jax.jit(functools.partial(train_step, cfg=cfg))
@@ -54,16 +62,6 @@ def _recall_at(idx, gt, k):
     return float(jnp.mean(jnp.any(idx[:, :k] == jnp.asarray(gt)[:, None], -1)))
 
 
-# Known seed failure (tracked): with this container's JAX/initializer the
-# trained binarizer lands at recall ~0.84 vs the 0.85 * float bar — a
-# training-quality shortfall, not a search bug (the SDC search itself is
-# covered by exact-parity tests). strict=False so a better recipe turns it
-# green without churning CI; revisit the margin or the training schedule.
-@pytest.mark.xfail(
-    reason="seed: trained recall ~0.84 vs 0.85*float threshold on this "
-           "container (pre-existing, tracked in CHANGES.md)",
-    strict=False,
-)
 def test_bebr_end_to_end_recall():
     docs, queries, gt = clustered_corpus(0, 4000, 64, DIM, n_clusters=128)
 
