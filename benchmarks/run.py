@@ -50,10 +50,16 @@ def main() -> None:
             **(dict(n_docs=1500, queries=8) if args.fast else {})
         ),
         # steady-state serving throughput (BENCH_serving.json): sequential
-        # encode+scan loop vs the double-buffered ServingPipeline. The CI
-        # gate holds overlapped QPS >= sequential on the smoke corpus;
-        # extra interleaved trials there keep the best-of ratio immune to
-        # shared-runner noise (each smoke trial is sub-second).
+        # encode+scan loop vs the double-buffered ServingPipeline vs the
+        # replicated router tier. The CI gate holds overlapped QPS >=
+        # sequential and replicated >= 0.9x overlapped on the smoke
+        # corpus; extra interleaved trials keep the best-of/median-paired
+        # ratios immune to shared-runner noise (each smoke trial is
+        # ~1s). The replica gate compares N>1 vs the replicas=1 tier run
+        # of the same trial — the identical code path, so the ratio
+        # survives this host's 2x noisy-neighbour swings (comparing
+        # against the plain overlapped pipeline does not: its different
+        # thread structure de-pairs the noise).
         "bench_serving_pipeline": lambda:
             table5_search_latency.emit_serving_json(
                 **(dict(n_docs=4096, batch=32, n_batches=40, trials=6)

@@ -40,3 +40,29 @@ def make_host_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
     if len(devices) < n:
         raise RuntimeError(f"need {n} devices, have {len(devices)}")
     return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_replica_meshes(
+    n_replicas: int, shape=(2, 2), axes=("data", "model")
+) -> list:
+    """Partition the host's devices into ``n_replicas`` disjoint submeshes.
+
+    Each submesh is a full serving replica: the corpus is sharded over
+    *its* devices ("leaves") by an ``engine.make_*_search`` program, and
+    the proxy tier (``launch/proxy.py``) routes query streams across the
+    replicas. Disjointness is the point — replicas share no devices, so
+    one replica's failure or saturation leaves the others' capacity
+    untouched.
+    """
+    per = int(np.prod(shape))
+    need = n_replicas * per
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"need {need} devices ({n_replicas} replicas x {per}), "
+            f"have {len(devices)}"
+        )
+    return [
+        Mesh(np.asarray(devices[i * per:(i + 1) * per]).reshape(shape), axes)
+        for i in range(n_replicas)
+    ]

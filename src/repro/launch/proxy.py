@@ -1,0 +1,476 @@
+"""Replicated serving tier: query router + proxy admission over N replicas.
+
+The paper's production engine (Fig. 5) does not serve from one pipeline:
+a proxy tier spreads high-concurrency query streams over *replicas* of
+the whole index and degrades gracefully when one goes down (cf. the
+proxy/replica designs in *Embedding-based Retrieval in Facebook Search*
+and *Recurrent Binary Embedding*). This module is that tier at library
+scale, built entirely from ``launch/serving.py``'s admission machinery:
+
+  * ``ReplicaSet`` — N ``ServingPipeline`` replicas. Each replica is a
+    full copy of the serving path (encode + ``SearchFn``): a single-host
+    flat/IVF/HNSW closure, or a distributed ``engine.make_*_search``
+    program over its own replica submesh (``mesh.make_replica_meshes``
+    partitions the host's devices into disjoint submeshes — each replica
+    shards the whole corpus over *its* leaves).
+  * ``QueryRouter`` — routes each submitted batch to one replica under a
+    pluggable policy (``round-robin`` | ``least-outstanding``), with
+
+      - **cross-replica shedding**: under a shed policy, a batch that
+        bounces off one replica's full admission queue is offered to the
+        others; the proxy sheds only when *every* healthy replica is
+        saturated (a single hot replica must not bounce traffic the
+        tier has capacity for);
+      - **failover**: a replica whose encode/scan raises is marked
+        unhealthy and every ticket in flight on it is re-dispatched to
+        the survivors — the proxy-level analogue of
+        ``engine.make_failover_search``'s ``leaf_alive`` mask, except a
+        replica holds the *whole* corpus, so failover costs a retry, not
+        recall. Re-dispatch back-pressures instead of shedding (an
+        admitted ticket is never dropped) and results stay bit-identical
+        to single-replica serving, so a client awaiting its tickets in
+        submission order sees an unchanged FIFO stream.
+
+Every replica scores through the same kernels and every replica returns
+bit-identical (scores, ids) for the same batch, which is what makes
+routing and failover invisible to correctness: only latency and
+throughput change.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.launch.serving import (
+    Array,
+    EncodeFn,
+    LatencyStats,
+    PipelineClosed,
+    RequestShed,
+    SearchFn,
+    ServingConfig,
+    ServingPipeline,
+    Ticket,
+    _percentile,
+)
+
+
+class AllReplicasDown(RuntimeError):
+    """Raised by ``QueryRouter.submit`` when no healthy replica remains."""
+
+
+# ---------------------------------------------------------------------------
+# routing policies
+# ---------------------------------------------------------------------------
+
+
+class RoundRobin:
+    """Cycle over healthy replicas; ties traffic evenly by arrival."""
+
+    name = "round-robin"
+
+    def __init__(self):
+        self._next = 0
+
+    def order(self, healthy: List[int], outstanding: Dict[int, int]) -> List[int]:
+        k = self._next % len(healthy)
+        self._next += 1
+        return healthy[k:] + healthy[:k]
+
+
+class LeastOutstanding:
+    """Prefer the replica with the fewest un-replied tickets — adapts to
+    replicas of unequal speed (a straggler accumulates outstanding work
+    and stops receiving new batches until it drains)."""
+
+    name = "least-outstanding"
+
+    def order(self, healthy: List[int], outstanding: Dict[int, int]) -> List[int]:
+        return sorted(healthy, key=lambda i: (outstanding.get(i, 0), i))
+
+
+ROUTING_POLICIES = {
+    RoundRobin.name: RoundRobin,
+    LeastOutstanding.name: LeastOutstanding,
+}
+
+
+# ---------------------------------------------------------------------------
+# replica set
+# ---------------------------------------------------------------------------
+
+
+class ReplicaSet:
+    """N serving replicas, each its own ``ServingPipeline``.
+
+    ``replicas`` is a sequence of (encode_fn, search_fn) pairs — one per
+    replica. Engine replicas close over their own submesh program (see
+    ``mesh.make_replica_meshes``); single-host replicas may simply share
+    one index closure N times (N pipelines over the same arrays).
+    """
+
+    def __init__(
+        self,
+        replicas: Sequence[Tuple[EncodeFn, SearchFn]],
+        *,
+        config: ServingConfig = ServingConfig(),
+        share_device: bool = False,
+    ):
+        """``share_device=True`` when the replicas are co-located on one
+        device (e.g. N admission fronts over one CPU/TPU): their scan
+        stages then share a lock and take turns dispatching, the way a
+        real device command queue serialises programs — without it,
+        concurrent XLA CPU scans oversubscribe the shared cores and
+        every replica gets slower. Replicas on disjoint submeshes
+        (``mesh.make_replica_meshes``) should keep the default False."""
+        if not replicas:
+            raise ValueError("ReplicaSet needs at least one replica")
+        self.config = config
+        gate = threading.Lock() if share_device else None
+        self.pipelines = [
+            ServingPipeline(enc, srch, config=config, scan_gate=gate)
+            for enc, srch in replicas
+        ]
+
+    @classmethod
+    def from_factory(
+        cls,
+        n_replicas: int,
+        factory: Callable[[int], Tuple[EncodeFn, SearchFn]],
+        *,
+        config: ServingConfig = ServingConfig(),
+        share_device: bool = False,
+    ) -> "ReplicaSet":
+        """Build N replicas from ``factory(i) -> (encode_fn, search_fn)``."""
+        return cls([factory(i) for i in range(n_replicas)], config=config,
+                   share_device=share_device)
+
+    def __len__(self) -> int:
+        return len(self.pipelines)
+
+    def close(self, drain: bool = True):
+        for p in self.pipelines:
+            p.close(drain=drain)
+
+    def stats(self) -> List[dict]:
+        return [p.stats() for p in self.pipelines]
+
+
+# ---------------------------------------------------------------------------
+# proxy tickets + router
+# ---------------------------------------------------------------------------
+
+
+class ProxyTicket(Ticket):
+    """Client handle for one routed batch; survives replica failover.
+
+    A ``Ticket`` with its own resolution event: the **router** resolves
+    it — with the replica's result, or with an error only once no
+    healthy replica could serve the batch. Clients never observe an
+    intermediate replica failure; ``result()`` simply waits across
+    re-dispatches. ``t_enqueue``→``t_reply`` therefore spans the whole
+    proxy path, failover retries included.
+    """
+
+    def __init__(self, seq: int, queries: Any):
+        super().__init__(seq, int(getattr(queries, "shape", (1,))[0]))
+        self.queries = queries  # retained for failover re-dispatch
+        self._route_lock = threading.Lock()
+        self._inner: Optional[Ticket] = None
+        self._replica: Optional[int] = None
+        self.redispatches = 0
+
+    def _resolve(self, value=None, error=None) -> bool:
+        won = super()._resolve(value=value, error=error)
+        # The batch was retained only so failover could re-submit it; a
+        # resolved ticket held by a long-running client must not pin its
+        # input alongside the result for the rest of the run.
+        self.queries = None
+        return won
+
+    def _point_at(self, replica: int, inner: Ticket):
+        with self._route_lock:
+            if self._inner is not None:
+                self.redispatches += 1
+            self._inner, self._replica = inner, replica
+
+    @property
+    def replica(self) -> Optional[int]:
+        """Index of the replica that last held the batch."""
+        return self._replica
+
+
+class QueryRouter:
+    """Route query batches across a ``ReplicaSet`` (see module docstring).
+
+    ``policy`` is ``"round-robin"``, ``"least-outstanding"``, or any
+    object with ``.name`` and ``.order(healthy, outstanding) -> [int]``
+    (the order in which replicas are offered a batch; under a shed
+    policy, later entries are fallbacks when earlier queues are full).
+    """
+
+    def __init__(
+        self,
+        replicas: ReplicaSet,
+        *,
+        policy: Union[str, Any] = "round-robin",
+    ):
+        self.replicas = replicas
+        if isinstance(policy, str):
+            try:
+                policy = ROUTING_POLICIES[policy]()
+            except KeyError:
+                raise ValueError(
+                    f"unknown routing policy {policy!r}; "
+                    f"known: {sorted(ROUTING_POLICIES)}"
+                ) from None
+        self.policy = policy
+        self._lock = threading.Lock()
+        self._seq = 0
+        self._closed = False
+        self._healthy = set(range(len(replicas)))
+        self._outstanding: Dict[int, set] = {
+            i: set() for i in range(len(replicas))
+        }
+        self.shed_count = 0  # proxy-level: every healthy replica was full
+        self.failover_count = 0  # tickets re-dispatched off a dead replica
+        self._errors: Dict[int, BaseException] = {}
+        # Proxy-level completion accounting: enqueue->reply across the
+        # whole tier (admission wait + any failover re-dispatches).
+        self._stats = LatencyStats()
+
+    # -- dispatch ------------------------------------------------------
+
+    def _order(self) -> List[int]:
+        healthy = sorted(self._healthy)
+        counts = {i: len(self._outstanding[i]) for i in healthy}
+        return self.policy.order(healthy, counts)
+
+    def submit(self, queries: Any) -> ProxyTicket:
+        """Admit one batch into the tier; returns a ``ProxyTicket``.
+
+        Replicas are tried in policy order. Under ``policy="block"``
+        pipelines the first choice back-pressures (no fallback — the
+        caller asked for back-pressure); under ``policy="shed"`` a full
+        replica queue falls through to the next, and ``RequestShed`` is
+        raised only when **every** healthy replica is saturated.
+        """
+        with self._lock:
+            if self._closed:
+                raise PipelineClosed("submit after close")
+            if not self._healthy:
+                raise AllReplicasDown(
+                    f"all {len(self.replicas)} replicas unhealthy"
+                )
+            order = self._order()
+            seq = self._seq
+            self._seq += 1
+        ticket = ProxyTicket(seq, queries)
+        shed_error: Optional[RequestShed] = None
+        for replica in order:
+            try:
+                self._dispatch(ticket, replica)
+                return ticket
+            except RequestShed as e:
+                shed_error = e
+                continue
+            except PipelineClosed:
+                continue  # replica torn down under us; try the next
+        if shed_error is None:
+            raise PipelineClosed("every healthy replica is closed")
+        with self._lock:
+            self.shed_count += 1
+        raise RequestShed(
+            f"all {len(order)} healthy replicas saturated"
+        ) from shed_error
+
+    def _dispatch(self, ticket: ProxyTicket, replica: int, *, force: bool = False):
+        queries = ticket.queries
+        if queries is None:
+            # Resolved (and its batch released) after the caller's
+            # done() check: a re-dispatch racing a success. Submitting
+            # the cleared payload would poison a healthy replica with a
+            # fake encode error — skip instead.
+            return
+        pipe = self.replicas.pipelines[replica]
+        inner = pipe.submit(queries, force_block=force)  # may shed
+        ticket._point_at(replica, inner)
+        with self._lock:
+            self._outstanding[replica].add(ticket)
+        inner.add_done_callback(
+            lambda t, tk=ticket, r=replica: self._on_inner_done(tk, r, t)
+        )
+
+    # -- failover ------------------------------------------------------
+
+    def _on_inner_done(self, ticket: ProxyTicket, replica: int, inner: Ticket):
+        """Replica-ticket completion: the single place proxy tickets are
+        resolved (clients only ever wait on the proxy ticket, so they
+        never observe an intermediate replica failure)."""
+        err = inner.error()
+        if err is None:
+            with self._lock:
+                self._outstanding[replica].discard(ticket)
+            if ticket._resolve(value=inner.result()):
+                self._stats.record(ticket)
+            return
+        if isinstance(err, PipelineClosed):
+            # Torn down by close(), not a scan failure: propagate.
+            with self._lock:
+                self._outstanding[replica].discard(ticket)
+            ticket._resolve(error=err)
+            return
+        # Encode/scan failure: eager failover — the moment the replica
+        # ticket fails, not when the client calls result(). First caller
+        # marks the replica unhealthy and sweeps ALL its in-flight
+        # tickets; this ticket may have landed after that sweep (dispatch
+        # raced the failure), so re-dispatch it individually if so.
+        self._on_replica_failure(replica, err)
+        with self._lock:
+            straggler = ticket in self._outstanding[replica]
+            if straggler:
+                self._outstanding[replica].discard(ticket)
+                self.failover_count += 1  # missed the sweep, same fate
+        if straggler:
+            self._redispatch(ticket, err)
+
+    def _on_replica_failure(self, replica: int, error: BaseException):
+        """Mark ``replica`` unhealthy (first caller wins) and re-dispatch
+        every ticket in flight on it, oldest first."""
+        with self._lock:
+            if replica not in self._healthy:
+                return  # already handled
+            self._healthy.discard(replica)
+            self._errors[replica] = error
+            victims = sorted(self._outstanding[replica], key=lambda t: t.seq)
+            self._outstanding[replica] = set()
+            self.failover_count += len(victims)
+        for ticket in victims:
+            self._redispatch(ticket, error)
+
+    def _redispatch(self, ticket: ProxyTicket, error: BaseException):
+        if ticket.done():
+            return  # raced a resolve (first-wins); nothing to recover
+        while True:
+            with self._lock:
+                order = self._order() if self._healthy else []
+            if not order:
+                # No healthy replica can take the batch: the tier is
+                # down and the ticket fails terminally.
+                ticket._resolve(error=error)
+                return
+            try:
+                # force=True: back-pressure rather than shed — an
+                # admitted ticket is never dropped by failover.
+                self._dispatch(ticket, order[0], force=True)
+                return
+            except PipelineClosed:
+                with self._lock:
+                    self._healthy.discard(order[0])
+                continue
+
+    # -- lifecycle / monitoring ---------------------------------------
+
+    def healthy(self) -> List[int]:
+        with self._lock:
+            return sorted(self._healthy)
+
+    def outstanding(self) -> Dict[int, int]:
+        with self._lock:
+            return {i: len(s) for i, s in self._outstanding.items()}
+
+    def close(self, drain: bool = True):
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        self.replicas.close(drain=drain)
+
+    def __enter__(self) -> "QueryRouter":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def stats(self) -> dict:
+        """One proxy-level report over the whole tier.
+
+        Aggregates each replica's totals and merges their latency
+        windows for tier-wide percentiles; per-replica breakdowns ride
+        along under ``per_replica``.
+        """
+        with self._lock:  # one snapshot: per-replica flags must agree
+            shed_proxy = self.shed_count
+            failovers = self.failover_count
+            healthy = sorted(self._healthy)
+        per = []
+        for i, pipe in enumerate(self.replicas.pipelines):
+            s = pipe.stats()
+            s["replica"] = i
+            s["healthy"] = i in healthy
+            per.append(s)
+        n_req, n_q, lat = self._stats.snapshot()
+        lat.sort()
+        idle = (
+            sum(s["device_idle_frac"] for s in per) / len(per) if per else 0.0
+        )
+        return {
+            "replicas": len(self.replicas),
+            "router": getattr(self.policy, "name", type(self.policy).__name__),
+            "healthy": healthy,
+            # proxy-level completions: a failed-over request counts once
+            # here even though two replicas saw it.
+            "requests": n_req,
+            "queries": n_q,
+            # proxy-level sheds only: a replica-level bounce that another
+            # replica absorbed is routing, not shedding.
+            "shed": shed_proxy,
+            "replica_shed": sum(s["shed"] for s in per),
+            "failovers": failovers,
+            # tier-wide percentiles over proxy enqueue->reply (admission
+            # wait + failover re-dispatches included).
+            "latency_p50_ms": 1e3 * _percentile(lat, 0.50),
+            "latency_p99_ms": 1e3 * _percentile(lat, 0.99),
+            "device_idle_frac": idle,
+            "per_replica": per,
+        }
+
+
+# ---------------------------------------------------------------------------
+# offline driver
+# ---------------------------------------------------------------------------
+
+
+def serve_replicated(
+    replicas: Sequence[Tuple[EncodeFn, SearchFn]],
+    batches: List[Any],
+    *,
+    policy: Union[str, Any] = "round-robin",
+    config: ServingConfig = ServingConfig(),
+    share_device: bool = False,
+) -> Tuple[List[Tuple[Array, Array]], dict]:
+    """Run ``batches`` through a fresh replicated tier; (results, stats).
+
+    The replicated twin of ``serving.serve_batches``: results come back
+    in submission order and are bit-identical to ``serve_sequential``
+    on any single replica. Admission is forced to "block" per replica —
+    an offline driver should back-pressure, not shed. See ``ReplicaSet``
+    for ``share_device``.
+    """
+    import dataclasses
+
+    config = dataclasses.replace(config, policy="block")
+    router = QueryRouter(
+        ReplicaSet(replicas, config=config, share_device=share_device),
+        policy=policy,
+    )
+    try:
+        tickets = [router.submit(b) for b in batches]
+        results = [t.result() for t in tickets]
+    finally:
+        # stats() only after close(): the join guarantees every scan
+        # thread has run its completion callbacks (exact counters).
+        router.close()
+    return results, router.stats()

@@ -34,7 +34,7 @@ from repro.index import hnsw_lite
 from repro.index import ivf as ivf_lib
 from repro.index.flat import FlatFloat, FlatSDC
 from repro.kernels.sdc import ref as sdc_ref
-from repro.launch import serving
+from repro.launch import proxy, serving
 
 
 def train_binarizer(docs: np.ndarray, cfg: TrainConfig, steps: int = 300,
@@ -85,9 +85,19 @@ def main():
                     help="times the query stream is replayed for "
                          "steady-state timing")
     ap.add_argument("--queue-depth", type=int, default=8,
-                    help="admission-queue depth (requests)")
+                    help="admission-queue depth (requests, per replica)")
     ap.add_argument("--policy", choices=["block", "shed"], default="block",
-                    help="admission policy when the queue is full")
+                    help="admission policy when a replica queue is full "
+                         "(the proxy sheds only when EVERY replica is "
+                         "saturated)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serving replicas behind the query router (on a "
+                         "single host they share the device and index "
+                         "arrays; each still gets its own pipeline + "
+                         "admission queue)")
+    ap.add_argument("--router", choices=sorted(proxy.ROUTING_POLICIES),
+                    default="round-robin",
+                    help="replica routing policy")
     args = ap.parse_args()
 
     print(f"[data] {args.docs} docs, {args.queries} queries, dim={args.dim}")
@@ -152,11 +162,11 @@ def main():
           f"(float flat: {float_bytes/2**20:.2f} MiB, "
           f"saving {100*(1-nbytes/float_bytes):.1f}%)")
 
-    # --- serve: double-buffered pipeline behind the admission queue ---
+    # --- serve: replicated pipelines behind the query router ---
     _, idx_f = flat_float.search(jnp.asarray(queries), args.k)
 
     # jit'd per-batch encode: the eager path dispatches dozens of small
-    # ops per batch and would fight the scan thread for the GIL.
+    # ops per batch and would fight the scan threads for the GIL.
     @jax.jit
     def _encode_batch(e):
         bits, _, _ = binarize_lib.binarize(
@@ -170,34 +180,41 @@ def main():
     stream = batches * args.rounds
     n_q = args.queries * args.rounds
 
-    # Compile every program shape for both drivers outside the timed
-    # region (a cold call would time jit compilation, not serving).
-    serving.warmup(encode, search, batches)
+    # Single-host replicas share the index closure: N pipelines (each
+    # its own admission queue + worker threads) over the same arrays.
+    replica_fns = [(encode, search)] * args.replicas
+    serving.warmup_replicas(replica_fns, batches)
 
     t0 = time.time()
     serving.serve_sequential(encode, search, stream)
     dt_seq = time.time() - t0
 
-    # Drive the pipeline directly so --policy is honoured: shed-policy
-    # submits that bounce off the full admission queue are retried after
-    # a short pause (observable in stats["shed"]); block policy
+    # Drive the router directly so --policy is honoured: submits that
+    # shed off EVERY replica's full admission queue are retried after a
+    # short pause (observable in stats["shed"]); block policy
     # back-pressures inside submit.
     pcfg = serving.ServingConfig(queue_depth=args.queue_depth,
                                  policy=args.policy)
-    pipe = serving.ServingPipeline(encode, search, config=pcfg)
+    # share_device: single-host replicas sit on one device; their scan
+    # stages take turns instead of oversubscribing the host cores.
+    router = proxy.QueryRouter(
+        proxy.ReplicaSet(replica_fns, config=pcfg,
+                         share_device=args.replicas > 1),
+        policy=args.router,
+    )
     t0 = time.time()
     tickets = []
     for b in stream:
         while True:
             try:
-                tickets.append(pipe.submit(b))
+                tickets.append(router.submit(b))
                 break
             except serving.RequestShed:
                 time.sleep(1e-3)
     results = [t.result() for t in tickets]
     dt_pipe = time.time() - t0
-    stats = pipe.stats()
-    pipe.close()
+    router.close()
+    stats = router.stats()
 
     idx_b = jnp.concatenate([ids for _, ids in results[: len(batches)]], 0)
     gt_t = jnp.asarray(gt)[:, None]
@@ -207,10 +224,16 @@ def main():
     print(f"[serve] sequential: {1e3 * dt_seq / len(stream):.1f} ms/batch "
           f"({n_q / dt_seq:.0f} QPS single-host CPU, warmed)")
     shed = f", {stats['shed']} shed" if stats["shed"] else ""
-    print(f"[serve] pipelined:  {1e3 * dt_pipe / len(stream):.1f} ms/batch "
+    print(f"[serve] routed ({args.replicas} replica(s), {args.router}): "
+          f"{1e3 * dt_pipe / len(stream):.1f} ms/batch "
           f"({n_q / dt_pipe:.0f} QPS; p50={stats['latency_p50_ms']:.1f} ms "
           f"p99={stats['latency_p99_ms']:.1f} ms, device idle "
           f"{100 * stats['device_idle_frac']:.0f}%{shed})")
+    if args.replicas > 1:
+        for s in stats["per_replica"]:
+            print(f"[serve]   replica {s['replica']}: {s['requests']} req "
+                  f"({s['queries']} queries), shed {s['shed']}, device idle "
+                  f"{100 * s['device_idle_frac']:.0f}%")
 
 
 if __name__ == "__main__":

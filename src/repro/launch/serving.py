@@ -5,12 +5,12 @@ at a time on one thread: the device scan sat idle while the host
 binarized the next query batch. This module closes that gap with a
 two-stage pipeline plus a bounded admission queue:
 
-  * **admission queue** — a bounded FIFO in front of the pipeline.
-    ``policy="block"`` back-pressures the caller when full (batch
-    clients); ``policy="shed"`` rejects instead (interactive traffic
-    keeps bounded latency under bursts — the paper's proxy sheds rather
-    than queueing unboundedly). Every admitted request carries its
-    enqueue timestamp, so the reported latency is enqueue→reply, not
+  * **admission queue** (``AdmissionQueue``) — a bounded FIFO in front
+    of the pipeline. ``policy="block"`` back-pressures the caller when
+    full (batch clients); ``policy="shed"`` rejects instead (interactive
+    traffic keeps bounded latency under bursts — the paper's proxy sheds
+    rather than queueing unboundedly). Every admitted request carries
+    its enqueue timestamp, so the reported latency is enqueue→reply, not
     just device time.
   * **encode stage** — a background thread pulls admitted requests and
     runs ``encode_fn`` (float embedding -> packed recurrent-binary
@@ -34,6 +34,12 @@ sequential encode+search loop (no cross-batch state anywhere).
 ``hnsw_lite.search_hnsw_batched`` closures, and the distributed
 ``engine.make_*_search`` functions all qualify, so one pipeline fronts
 every index family.
+
+The admission machinery (``AdmissionQueue``, ``Ticket``,
+``LatencyStats``) is deliberately separable from the stage threads: a
+``ServingPipeline`` is *one replica* — the replicated tier in
+``launch/proxy.py`` composes N of them behind a ``QueryRouter`` and
+reuses the same queue/policy/ticket semantics at the proxy level.
 """
 
 from __future__ import annotations
@@ -43,7 +49,7 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Any, Callable, List, Optional, Protocol, Tuple
+from typing import Any, Callable, List, Optional, Protocol, Sequence, Tuple
 
 import jax
 
@@ -110,20 +116,48 @@ class Ticket:
         self._value: Any = None
         self._error: Optional[BaseException] = None
         self._resolve_lock = threading.Lock()
+        self._callbacks: List[Callable[["Ticket"], None]] = []
 
-    def _resolve(self, value=None, error: Optional[BaseException] = None):
+    def _resolve(self, value=None, error: Optional[BaseException] = None) -> bool:
         # Atomic first-wins: the scan thread and a shutdown sweep may
         # race to resolve the same ticket; it never resolves twice and
-        # a stored value is never clobbered.
+        # a stored value is never clobbered. Returns True to the winner
+        # (so completion stats are recorded exactly once).
         with self._resolve_lock:
             if self._done.is_set():
-                return
+                return False
             self.t_reply = time.perf_counter()
             self._value, self._error = value, error
             self._done.set()
+            callbacks, self._callbacks = self._callbacks, []
+        # Outside the lock: a callback may re-enter ticket/router state
+        # (the proxy's failover re-dispatch does). Shielded: _resolve
+        # runs on stage threads, and a raising callback would otherwise
+        # kill the scan loop and strand every queued ticket behind it.
+        for cb in callbacks:
+            try:
+                cb(self)
+            except BaseException:
+                pass
+        return True
+
+    def add_done_callback(self, fn: Callable[["Ticket"], None]) -> None:
+        """Run ``fn(ticket)`` when the ticket resolves (immediately if it
+        already has). The proxy tier uses this for eager failover: a
+        replica's scan error is observed the moment the ticket fails,
+        not when the client gets around to ``result()``."""
+        with self._resolve_lock:
+            if not self._done.is_set():
+                self._callbacks.append(fn)
+                return
+        fn(self)
 
     def done(self) -> bool:
         return self._done.is_set()
+
+    def error(self) -> Optional[BaseException]:
+        """The resolving error, or None (also None while unresolved)."""
+        return self._error if self._done.is_set() else None
 
     def result(self, timeout: Optional[float] = None) -> Tuple[Array, Array]:
         if not self._done.wait(timeout):
@@ -143,8 +177,130 @@ class Ticket:
 _SENTINEL = object()
 
 
+class AdmissionQueue:
+    """Bounded admission front: FIFO + block/shed policy + ticket minting.
+
+    The reusable half of the serving stack — ``ServingPipeline`` puts one
+    in front of its stage threads (one queue per replica), and the proxy
+    tier reuses the same policy semantics across replicas (a proxy sheds
+    only when *every* replica's AdmissionQueue is full).
+
+    ``admit`` mints a ``Ticket`` (seq number, enqueue timestamp) and
+    enqueues ``(ticket, payload)``. Consumers drain with ``get`` /
+    ``get_nowait``; ``close`` marks the queue closed and pushes a
+    sentinel so a consumer loop can terminate; ``sweep`` fails every
+    still-queued ticket with ``PipelineClosed``.
+    """
+
+    def __init__(self, *, depth: int, policy: str):
+        if policy not in ("block", "shed"):
+            raise ValueError(f"policy must be block|shed, got {policy!r}")
+        self.depth = depth
+        self.policy = policy
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._lock = threading.Lock()
+        self._seq = 0
+        self._closed = False
+        self.shed_count = 0
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def admit(self, payload: Any, *, force_block: bool = False) -> Ticket:
+        """Admit one payload; returns its ``Ticket``.
+
+        block policy: waits for queue space (back-pressure).
+        shed policy: raises ``RequestShed`` when the queue is full —
+        unless ``force_block`` (the proxy's failover re-dispatch must
+        not drop a ticket that was already admitted once).
+        """
+        with self._lock:
+            if self._closed:
+                raise PipelineClosed("submit after close")
+            seq = self._seq
+            self._seq += 1
+        n = int(getattr(payload, "shape", (1,))[0])
+        ticket = Ticket(seq, n)
+        item = (ticket, payload)
+        if self.policy == "shed" and not force_block:
+            try:
+                self._q.put_nowait(item)
+            except queue.Full:
+                with self._lock:
+                    self.shed_count += 1
+                raise RequestShed(
+                    f"admission queue full (depth={self.depth})"
+                ) from None
+        else:
+            self._q.put(item)
+        return ticket
+
+    def get(self):
+        return self._q.get()
+
+    def get_nowait(self):
+        return self._q.get_nowait()
+
+    def close(self) -> bool:
+        """Mark closed; returns True on the first call only."""
+        with self._lock:
+            if self._closed:
+                return False
+            self._closed = True
+            return True
+
+    def push_sentinel(self):
+        self._q.put(_SENTINEL)
+
+    def sweep(self):
+        """Drain the queue, failing every unconsumed ticket."""
+        try:
+            while True:
+                item = self._q.get_nowait()
+                if item is not _SENTINEL:
+                    item[0]._resolve(error=PipelineClosed("pipeline closed"))
+        except queue.Empty:
+            pass
+
+
+class LatencyStats:
+    """Bounded completion accounting: exact totals + a latency window.
+
+    Retaining whole tickets (and their result arrays) would grow without
+    bound on a long-running pipeline, so completions are folded into
+    running counters plus a sliding window of recent latencies for
+    percentiles. ``window()`` exposes the raw window so the proxy tier
+    can merge replicas into one report.
+    """
+
+    def __init__(self, window: int = 4096):
+        self._lock = threading.Lock()
+        self.n_completed = 0
+        self.n_queries = 0
+        self._latencies: "collections.deque" = collections.deque(maxlen=window)
+
+    def record(self, ticket: Ticket):
+        with self._lock:
+            self.n_completed += 1
+            self.n_queries += ticket.n_queries
+            self._latencies.append(ticket.latency_s)
+
+    def snapshot(self) -> Tuple[int, int, List[float]]:
+        with self._lock:
+            return self.n_completed, self.n_queries, list(self._latencies)
+
+    def window(self) -> List[float]:
+        with self._lock:
+            return list(self._latencies)
+
+
 class ServingPipeline:
-    """Bounded-admission, double-buffered encode->scan serving pipeline."""
+    """Bounded-admission, double-buffered encode->scan serving pipeline.
+
+    One pipeline is one *replica*: ``launch/proxy.py`` composes N of
+    them behind a ``QueryRouter`` for the replicated tier.
+    """
 
     def __init__(
         self,
@@ -152,24 +308,26 @@ class ServingPipeline:
         search_fn: SearchFn,
         *,
         config: ServingConfig = ServingConfig(),
+        scan_gate: Optional[threading.Lock] = None,
     ):
+        """``scan_gate``: optional lock shared by co-located replicas.
+
+        A real accelerator's command queue executes one program at a
+        time, so N replicas on one device serialise naturally. XLA CPU
+        does not — concurrent scans oversubscribe the host cores and
+        thrash shared caches — so a ``ReplicaSet`` whose replicas share
+        a device passes one lock to all pipelines and the scan stages
+        take turns dispatching (encode still overlaps freely).
+        """
         self.encode_fn = encode_fn
         self.search_fn = search_fn
         self.config = config
-        self._admission: "queue.Queue" = queue.Queue(maxsize=config.queue_depth)
+        self._scan_gate = scan_gate
+        self._admission = AdmissionQueue(
+            depth=config.queue_depth, policy=config.policy
+        )
         self._encoded: "queue.Queue" = queue.Queue(maxsize=config.encode_ahead)
-        self._closed = False
-        self._lock = threading.Lock()
-        self._seq = 0
-        self.shed_count = 0
-        # Bounded completion accounting: running totals plus a latency
-        # window for percentiles. Retaining whole tickets (and their
-        # result arrays) would grow without bound on a long-running
-        # pipeline.
-        self._n_completed = 0
-        self._n_queries = 0
-        self._latencies: "collections.deque" = collections.deque(maxlen=4096)
-        self._stats_lock = threading.Lock()
+        self._stats = LatencyStats()
         # device-idle accounting (scan thread): time spent waiting for an
         # encoded batch = the device had nothing to do.
         self._scan_idle_s = 0.0
@@ -187,31 +345,20 @@ class ServingPipeline:
     # client side
     # ------------------------------------------------------------------
 
-    def submit(self, queries: Any) -> Ticket:
+    @property
+    def shed_count(self) -> int:
+        return self._admission.shed_count
+
+    def submit(self, queries: Any, *, force_block: bool = False) -> Ticket:
         """Admit one query batch; returns a ``Ticket``.
 
         block policy: waits for queue space (back-pressure).
         shed policy: raises ``RequestShed`` when the queue is full.
+        ``force_block`` overrides a shed policy with back-pressure (used
+        by the proxy's failover re-dispatch, which must never drop an
+        already-admitted ticket).
         """
-        with self._lock:
-            if self._closed:
-                raise PipelineClosed("submit after close")
-            seq = self._seq
-            self._seq += 1
-        n = int(getattr(queries, "shape", (1,))[0])
-        ticket = Ticket(seq, n)
-        item = (ticket, queries)
-        if self.config.policy == "shed":
-            try:
-                self._admission.put_nowait(item)
-            except queue.Full:
-                with self._stats_lock:
-                    self.shed_count += 1
-                raise RequestShed(
-                    f"admission queue full (depth={self.config.queue_depth})"
-                ) from None
-        else:
-            self._admission.put(item)
+        ticket = self._admission.admit(queries, force_block=force_block)
         # A close() racing this submit may have fully shut the stages
         # down with this item still unconsumed (it landed after close()'s
         # own post-join sweep). Sweep whatever remains: only unconsumed
@@ -219,8 +366,8 @@ class ServingPipeline:
         # its real result, and never from here. While any stage thread
         # still lives, either the item precedes the shutdown sentinel
         # (it will be served) or close()'s post-join sweep catches it.
-        if self._closed and not self._scan_thread.is_alive():
-            self._sweep_admission()
+        if self._admission.closed and not self._scan_thread.is_alive():
+            self._admission.sweep()
         return ticket
 
     def close(self, drain: bool = True):
@@ -229,31 +376,19 @@ class ServingPipeline:
         drain=True finishes every admitted request first; drain=False
         resolves still-queued tickets with ``PipelineClosed``.
         """
-        with self._lock:
-            if self._closed:
-                return
-            self._closed = True
+        if not self._admission.close():
+            return
         if not drain:
             # Pull whatever has not reached the encode stage yet and fail
             # it; in-flight batches still complete (FIFO, bounded).
-            self._sweep_admission()
-        self._admission.put(_SENTINEL)
+            self._admission.sweep()
+        self._admission.push_sentinel()
         self._encode_thread.join()
         self._scan_thread.join()
         # Post-join sweep: a submit racing this close may have enqueued
         # after the sentinel; its item sits in the dead queue. Fail those
         # tickets (atomic first-wins _resolve keeps real results intact).
-        self._sweep_admission()
-
-    def _sweep_admission(self):
-        """Drain the admission queue, failing every unconsumed ticket."""
-        try:
-            while True:
-                item = self._admission.get_nowait()
-                if item is not _SENTINEL:
-                    item[0]._resolve(error=PipelineClosed("pipeline closed"))
-        except queue.Empty:
-            pass
+        self._admission.sweep()
 
     def __enter__(self) -> "ServingPipeline":
         return self
@@ -292,11 +427,8 @@ class ServingPipeline:
                 return
             finally:
                 self._scan_busy_s += time.perf_counter() - t0
-            ticket._resolve(value=(vals, ids))
-            with self._stats_lock:
-                self._n_completed += 1
-                self._n_queries += ticket.n_queries
-                self._latencies.append(ticket.latency_s)
+            if ticket._resolve(value=(vals, ids)):
+                self._stats.record(ticket)
 
         while True:
             try:
@@ -323,7 +455,17 @@ class ServingPipeline:
                 await_oldest()
             try:
                 t0 = time.perf_counter()
-                vals, ids = self.search_fn(codes)  # async dispatch
+                if self._scan_gate is not None:
+                    # Co-located replicas take turns. JAX dispatch is
+                    # async, so serialising the dispatch alone would
+                    # still let N scans execute concurrently — hold the
+                    # gate through completion so device work really is
+                    # one replica at a time.
+                    with self._scan_gate:
+                        vals, ids = self.search_fn(codes)
+                        vals, ids = jax.block_until_ready((vals, ids))
+                else:
+                    vals, ids = self.search_fn(codes)  # async dispatch
                 self._scan_busy_s += time.perf_counter() - t0
             except BaseException as e:
                 ticket._resolve(error=e)
@@ -336,6 +478,11 @@ class ServingPipeline:
     # monitoring
     # ------------------------------------------------------------------
 
+    def latency_window(self) -> List[float]:
+        """Recent enqueue->reply latencies (seconds, bounded window) —
+        raw material for cross-replica percentile aggregation."""
+        return self._stats.window()
+
     def stats(self) -> dict:
         """Throughput/latency/idle summary over completed requests.
 
@@ -343,15 +490,13 @@ class ServingPipeline:
         completions (the counters are exact totals) so a long-running
         pipeline's accounting stays O(1) in memory.
         """
-        with self._stats_lock:  # other threads append/increment live
-            lat = sorted(self._latencies)
-            n_req, n_q = self._n_completed, self._n_queries
-            shed = self.shed_count
+        n_req, n_q, lat = self._stats.snapshot()
+        lat = sorted(lat)
         wall = self._scan_idle_s + self._scan_busy_s
         return {
             "requests": n_req,
             "queries": n_q,
-            "shed": shed,
+            "shed": self.shed_count,
             "latency_p50_ms": 1e3 * _percentile(lat, 0.50),
             "latency_p99_ms": 1e3 * _percentile(lat, 0.99),
             "device_idle_frac": self._scan_idle_s / wall if wall > 0 else 0.0,
@@ -407,6 +552,34 @@ def warmup(
         warm = warm + batches[-1:]
     serve_sequential(encode_fn, search_fn, warm)
     serve_batches(encode_fn, search_fn, warm)
+
+
+def warmup_replicas(
+    replicas: Sequence[Tuple[EncodeFn, SearchFn]],
+    batches: List[Any],
+) -> None:
+    """``warmup`` for a replica set: every (encode, search) pair, both
+    drivers, lead + ragged-tail shapes.
+
+    One helper instead of per-driver copies because the pitfalls are
+    easy to drop on a rewrite: worker threads carry **thread-local jit
+    caches** (a program compiled on the caller's thread — e.g. under a
+    ``with mesh:`` scope — recompiles on first call from a pipeline
+    worker thread), and a **ragged tail batch is its own program
+    shape**; both drivers and both shapes must be warmed or the first
+    timed batch pays a jit compile. Distinct replicas (own submesh, own
+    program) each need their own pass; a replica set that repeats one
+    (encode, search) pair is warmed once — the jit cache is shared by
+    every worker thread with the same (default) thread-local context,
+    so N identical passes would just burn N-1 warmup streams.
+    """
+    seen = set()
+    for encode_fn, search_fn in replicas:
+        key = (id(encode_fn), id(search_fn))
+        if key in seen:
+            continue
+        seen.add(key)
+        warmup(encode_fn, search_fn, batches)
 
 
 def _batch_shape(b: Any):

@@ -77,10 +77,28 @@ def test_gate_understands_hnsw_schema(tmp_path):
     assert "hnsw_scan" in out.stdout
 
 
-def _serving_bench(ratio: float):
+def _replicated_row(replicas=2, paired_ratio=0.95, **overrides):
+    row = {
+        "mode": "replicated", "replicas": replicas, "router": "round-robin",
+        "qps": 950.0, "qps_ratio_vs_single": paired_ratio,
+        "ms_per_batch": 1.0, "latency_p50_ms": 5.0, "latency_p99_ms": 9.0,
+        "device_idle_frac": 0.1, "shed": 0, "failovers": 0,
+        "per_replica": [
+            {"replica": i, "requests": 10, "queries": 100, "shed": 0,
+             "device_idle_frac": 0.1}
+            for i in range(replicas)
+        ],
+    }
+    row.update(overrides)
+    return row
+
+
+def _serving_bench(ratio: float, paired_ratio: float = 0.95):
     return {"bench": "serving", "rows": [
         {"mode": "sequential", "qps": 1000.0},
         {"mode": "overlapped", "qps": 1000.0 * ratio},
+        _replicated_row(replicas=1, paired_ratio=1.0),
+        _replicated_row(paired_ratio=paired_ratio),
     ]}
 
 
@@ -108,6 +126,73 @@ def test_serving_gate_fails_on_missing_mode_row(tmp_path):
     assert out.returncode != 0
 
 
+# -- replica sweep (proxy tier) ---------------------------------------------
+
+
+def test_serving_gate_requires_a_replicated_row(tmp_path):
+    """The replica sweep is part of the schema now: a BENCH_serving.json
+    without it (e.g. an emitter regression) must not pass green."""
+    bench = _serving_bench(1.2)
+    bench["rows"] = bench["rows"][:2]  # sequential + overlapped only
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "no 'replicated' rows" in out.stderr
+
+
+def test_serving_gate_fails_on_missing_replicated_keys(tmp_path):
+    bench = _serving_bench(1.2)
+    del bench["rows"][3]["latency_p99_ms"]
+    del bench["rows"][3]["shed"]
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "missing keys" in out.stderr
+    assert "latency_p99_ms" in out.stderr and "shed" in out.stderr
+
+
+def test_serving_gate_fails_on_missing_failover_count(tmp_path):
+    bench = _serving_bench(1.2)
+    del bench["rows"][3]["failovers"]
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "failovers" in out.stderr
+
+
+def test_serving_gate_fails_on_incomplete_per_replica_entry(tmp_path):
+    bench = _serving_bench(1.2)
+    del bench["rows"][3]["per_replica"][1]["device_idle_frac"]
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "per_replica[1]" in out.stderr
+
+
+def test_serving_gate_fails_on_wrong_typed_per_replica(tmp_path):
+    bench = _serving_bench(1.2)
+    bench["rows"][3]["per_replica"] = {}  # present but unparseable
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "expected a list" in out.stderr
+
+
+def test_serving_gate_fails_on_per_replica_count_mismatch(tmp_path):
+    bench = _serving_bench(1.2)
+    bench["rows"][3]["per_replica"].pop()  # 1 entry for replicas=2
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "per_replica has 1 entries" in out.stderr
+
+
+def test_serving_gate_fails_below_replica_floor(tmp_path):
+    out = _run_gate(tmp_path, _serving_bench(1.2, paired_ratio=0.8))
+    assert out.returncode != 0
+    assert "replicated tier lost throughput" in out.stderr
+
+
+def test_serving_gate_replica_floor_is_configurable(tmp_path):
+    out = _run_gate(tmp_path, _serving_bench(1.2, paired_ratio=0.8),
+                    "--min-replica-ratio", "0.75")
+    assert out.returncode == 0, out.stderr
+
+
 def test_gate_accepts_real_emitter_output(tmp_path):
     """End-to-end: the actual tiny-corpus emitter satisfies the gate."""
     repo_root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
@@ -120,5 +205,25 @@ def test_gate_accepts_real_emitter_output(tmp_path):
     out = subprocess.run(
         [sys.executable, GATE, str(path)],
         capture_output=True, text=True, timeout=120,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+
+
+def test_serving_gate_accepts_real_emitter_schema(tmp_path):
+    """End-to-end: the serving emitter's replica sweep satisfies the
+    SCHEMA half of the gate (the QPS floors are waived — a micro corpus
+    in a loaded test process is not a throughput measurement)."""
+    repo_root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    if repo_root not in sys.path:
+        sys.path.insert(0, repo_root)
+    from benchmarks.table5_search_latency import emit_serving_json
+
+    path = tmp_path / "BENCH_serving.json"
+    emit_serving_json(path=str(path), n_docs=512, batch=8, n_batches=6,
+                      trials=2)
+    out = subprocess.run(
+        [sys.executable, GATE, str(path),
+         "--min-serving-ratio", "0", "--min-replica-ratio", "0"],
+        capture_output=True, text=True, timeout=180,
     )
     assert out.returncode == 0, out.stdout + out.stderr
