@@ -148,6 +148,129 @@ def emit_sdc_scan_json(path: str = BENCH_JSON, n_docs: int = 50_000,
     return out
 
 
+def _swap_revival_row(encode, codes_np, levels: int, batches, pcfg,
+                      router_policy: str) -> dict:
+    """Exercise the live index lifecycle and emit its BENCH row.
+
+    Two phases on a fresh 2-replica tier (flat index via the lifecycle
+    builder, share_device like the sweep):
+
+      1. **revival** — replica 1 takes one injected transient scan fault
+         (failover re-dispatches its in-flight work), then a canary
+         probe revives it: `revivals` must come back >= 1.
+      2. **rolling swap under traffic** — a feeder thread keeps
+         submitting the query stream while `RollingSwapController`
+         drains/rebuilds/warms/re-probes each replica in turn. Every
+         ticket must resolve (`lost == 0`), in submission order
+         (`reordered == 0`), bit-identical to the sequential loop
+         (`bit_identical`), and the row records how many queries the
+         tier answered inside the swap window.
+
+    The CI gate (`scripts/check_bench_gate.py`) schema-validates this
+    row and hard-fails on any lost/reordered/non-identical result or a
+    missing revival.
+    """
+    import threading
+
+    from repro.launch import lifecycle, proxy, serving
+
+    snapshot = lifecycle.CorpusSnapshot(codes=codes_np, n_levels=levels)
+    builder = lifecycle.FlatBuilder(k=10, backend="xla")
+    built = builder.build(snapshot)
+    kill = [False]
+
+    def flaky_search(q):  # replica 1: one injected transient fault
+        if kill[0]:
+            kill[0] = False
+            raise RuntimeError("injected transient fault")
+        return built(q)
+
+    serving.warmup_replicas([(encode, built)], batches)
+    reference = serving.serve_sequential(encode, built, batches)
+    router = proxy.QueryRouter(
+        proxy.ReplicaSet([(encode, built), (encode, flaky_search)],
+                         config=pcfg, share_device=True),
+        policy=router_policy,
+    )
+    try:
+        # phase 1: transient fault -> failover -> canary revival
+        kill[0] = True
+        for t in [router.submit(b) for b in batches]:
+            t.result(timeout=120)
+        if not router.probe(1, batches[0], timeout=120):
+            raise RuntimeError("revival probe failed")
+        revivals = router.revival_count
+
+        # phase 2: rolling swap under continuous traffic. A FRESH builder
+        # instance: the digest cache on the tier's own builder would hand
+        # the swap the identical pre-swap SearchFn object, making the
+        # bit-identity check vacuous for the rebuild path.
+        controller = lifecycle.RollingSwapController(
+            router, lifecycle.FlatBuilder(k=10, backend="xla"),
+            warm_batches=batches[:1], encode_fn=encode,
+        )
+        stream = batches * 2
+        tickets = []
+
+        def feeder():
+            for b in stream:
+                while True:
+                    try:
+                        tickets.append(router.submit(b))
+                        break
+                    except serving.RequestShed:
+                        time.sleep(1e-3)
+
+        th = threading.Thread(target=feeder)
+        th.start()
+        t_sw0 = time.perf_counter()
+        report = controller.swap_all(snapshot)
+        t_sw1 = time.perf_counter()
+        th.join()
+
+        lost = 0
+        results = []
+        for t in tickets:
+            try:
+                results.append(t.result(timeout=120))
+            except BaseException:
+                lost += 1
+                results.append(None)
+        lost += len(stream) - len(tickets)
+
+        def eq(r, ref):
+            return (r is not None
+                    and np.array_equal(np.asarray(r[1]), np.asarray(ref[1]))
+                    and np.array_equal(np.asarray(r[0]), np.asarray(ref[0])))
+
+        n_b = len(batches)
+        mismatched = [i for i, r in enumerate(results)
+                      if not eq(r, reference[i % n_b])]
+        # a "reorder" is a mismatch that IS some other batch's answer
+        reordered = sum(
+            1 for i in mismatched
+            if any(eq(results[i], reference[j]) for j in range(n_b)
+                   if j != i % n_b)
+        )
+        q_during = sum(
+            t.n_queries for t in tickets
+            if t.t_reply is not None and t_sw0 <= t.t_reply <= t_sw1
+        )
+        stats = router.stats()
+    finally:
+        router.close()
+    return {
+        "mode": "swap", "replicas": 2, "index_kind": builder.kind,
+        "swapped_replicas": report.swapped, "swap_s": report.total_s,
+        "queries_during_swap": int(q_during),
+        "lost": int(lost), "reordered": int(reordered),
+        "bit_identical": not mismatched,
+        "revivals": int(revivals),
+        "version": report.version.tag,
+        "generations": [p["generation"] for p in stats["per_replica"]],
+    }
+
+
 def emit_serving_json(path: str = BENCH_SERVING_JSON, n_docs: int = 50_000,
                       batch: int = 64, n_batches: int = 32, trials: int = 3,
                       levels: int = 4, m: int = 128, dim: int = 256,
@@ -329,10 +452,15 @@ def emit_serving_json(path: str = BENCH_SERVING_JSON, n_docs: int = 50_000,
             "per_replica": [
                 {"replica": pr["replica"], "requests": pr["requests"],
                  "queries": pr["queries"], "shed": pr["shed"],
-                 "device_idle_frac": pr["device_idle_frac"]}
+                 "device_idle_frac": pr["device_idle_frac"],
+                 "generation": pr["generation"]}
                 for pr in s.get("per_replica", [])
             ],
         })
+    rows.append(_swap_revival_row(
+        encode, np.asarray(cd), levels, batches, pcfg, router
+    ))
+
     out = {
         "bench": "serving",
         "host_backend": jax.default_backend(),
@@ -349,6 +477,8 @@ def emit_serving_json(path: str = BENCH_SERVING_JSON, n_docs: int = 50_000,
     print(f"\n# BENCH_serving -> {path}")
     print("mode,replicas,qps,ms_per_batch")
     for r in rows:
+        if "qps" not in r:
+            continue  # lifecycle rows carry swap metrics, not throughput
         print(f"{r['mode']},{r.get('replicas', 1)},{r['qps']:.0f},"
               f"{r['ms_per_batch']:.2f}")
     print(f"overlapped/sequential QPS ratio: {ovl_ratio:.3f} "
@@ -362,6 +492,12 @@ def emit_serving_json(path: str = BENCH_SERVING_JSON, n_docs: int = 50_000,
         print(f"replicated(x{n})/replicated(x1) QPS ratio: "
               f"{repl_ratio[n]:.3f} best-paired-trial "
               f"({repl_ratio_med[n]:.3f} median, {router})")
+    sw = rows[-1]
+    print(f"rolling swap ({sw['index_kind']}): {sw['swapped_replicas']} "
+          f"replica(s) in {1e3 * sw['swap_s']:.0f} ms under traffic, "
+          f"{sw['queries_during_swap']} queries served mid-swap, "
+          f"lost={sw['lost']} reordered={sw['reordered']} "
+          f"bit_identical={sw['bit_identical']} revivals={sw['revivals']}")
     return out
 
 

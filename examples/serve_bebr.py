@@ -38,16 +38,8 @@ import numpy as np
 
 from repro.core import BinarizerConfig, binarize_lib, init_binarizer, pack_codes
 from repro.data.synthetic import clustered_corpus
-from repro.index.engine import (
-    engine_input_shardings,
-    hnsw_engine_inputs,
-    hnsw_engine_shardings,
-    make_distributed_search,
-    make_hnsw_search,
-)
-from repro.index.hnsw_lite import build_hnsw_sharded
 from repro.kernels.sdc import ref as R
-from repro.launch import proxy, serving
+from repro.launch import lifecycle, proxy, serving
 from repro.launch.mesh import make_replica_meshes
 
 
@@ -59,6 +51,15 @@ def main():
                          "into this many disjoint submeshes")
     ap.add_argument("--router", choices=sorted(proxy.ROUTING_POLICIES),
                     default="round-robin", help="replica routing policy")
+    ap.add_argument("--swap-after", type=int, default=0, metavar="N",
+                    help="after N routed batches, rolling-swap every "
+                         "replica's index from a fresh corpus snapshot "
+                         "(drain -> rebuild on its submesh -> warm -> "
+                         "canary re-probe) under the live stream; "
+                         "0 disables")
+    ap.add_argument("--probe-every", type=float, default=0.0, metavar="S",
+                    help="period (s) of the router's canary health "
+                         "re-probe; revives unhealthy replicas; 0 off")
     args = ap.parse_args()
     if N_DEVICES % args.replicas:
         ap.error(f"--replicas must divide {N_DEVICES}")
@@ -76,45 +77,33 @@ def main():
     enc = lambda e: pack_codes(binarize_lib.binarize(
         p, s, jnp.asarray(e), bcfg)[0])
     d_codes, q_codes = enc(docs), enc(queries)
-    inv = R.doc_inv_norms(d_codes, levels)
 
     meshes = make_replica_meshes(args.replicas, shape=shape)
     print(f"replica submeshes: {args.replicas} x {dict(meshes[0].shape)} — "
           f"{args.index} index of {d_codes.shape[0]} codes sharded over "
           f"{per} leaves per replica, router={args.router}")
 
-    if args.index == "hnsw":
-        # one NSW graph per leaf (same shard layout on every replica, so
-        # one host-side build serves all replicas); the proxy merge is
-        # unchanged
-        sharded = build_hnsw_sharded(
-            np.asarray(d_codes), np.asarray(inv), n_leaves=per,
-            n_levels=levels, M=16, ef_construction=48,
-        )
-        host_inputs = hnsw_engine_inputs(sharded)
-    else:
-        host_inputs = (d_codes, inv)
-
     # jit'd per-batch encode, shared across replicas: the eager path
-    # would fight the leaf scans for the GIL.
+    # would fight the leaf scans for the GIL. Query device placement
+    # happens inside each replica's search closure (the builder emits
+    # submesh-aware SearchFns).
     enc_jit = jax.jit(lambda e: pack_codes(binarize_lib.binarize(
         p, s, e, bcfg)[0]))
+    encode = lambda e: enc_jit(jnp.asarray(e))
 
-    def make_replica(mesh):
-        """(encode, search) closing over one replica submesh: the corpus
-        sharded over ITS leaves, queries broadcast to them."""
-        if args.index == "hnsw":
-            search = make_hnsw_search(mesh, n_levels=levels, k=10, ef=64,
-                                      beam=16)
-            qspec, *in_specs = hnsw_engine_shardings(mesh)
-        else:
-            search = make_distributed_search(mesh, n_levels=levels, k=10)
-            qspec, *in_specs = engine_input_shardings(mesh)
-        ins = [jax.device_put(a, sp) for a, sp in zip(host_inputs, in_specs)]
-        encode = lambda e: jax.device_put(enc_jit(jnp.asarray(e)), qspec)
-        return encode, lambda q: search(q, *ins)
-
-    replica_fns = [make_replica(m) for m in meshes]
+    # The same builder serves the initial tier AND the rolling swap: each
+    # replica's index is `builder.build(snapshot, replica=i)` — the
+    # shard_map program over ITS submesh, closed over its device-placed
+    # corpus shards. For hnsw the host-side sharded graph is built once
+    # per snapshot digest and shared across replicas (same leaf layout).
+    snapshot = lifecycle.CorpusSnapshot(codes=np.asarray(d_codes),
+                                        n_levels=levels)
+    builder = lifecycle.EngineBuilder(
+        meshes, index=args.index, n_levels=levels, k=10,
+        M=16, ef_construction=48, ef=64, beam=16,
+    )
+    replica_fns = [(encode, builder.build(snapshot, replica=i))
+                   for i in range(args.replicas)]
 
     batch = 16
     batches = [queries[i:i + batch]
@@ -134,10 +123,28 @@ def main():
     # share_device stays False: the submeshes model disjoint production
     # hardware (where replica scans genuinely run in parallel). The 8
     # forced host "devices" actually share this machine's cores, so the
-    # demo's QPS numbers carry that contention — agreement, routing and
-    # failover semantics are what this example demonstrates.
-    results, stats = proxy.serve_replicated(replica_fns, stream,
-                                            policy=args.router)
+    # demo's QPS numbers carry that contention — agreement, routing,
+    # failover and rolling-swap semantics are what this example
+    # demonstrates. The router is driven directly (rather than through
+    # serve_replicated) so a mid-stream rolling swap / canary probe can
+    # run against the live tier.
+    router = proxy.QueryRouter(
+        proxy.ReplicaSet(replica_fns, config=serving.ServingConfig()),
+        policy=args.router,
+    )
+    controller = None
+    if args.swap_after:
+        controller = lifecycle.RollingSwapController(
+            router, builder, warm_batches=batches[:1], encode_fn=encode
+        )
+    if args.probe_every:
+        router.start_health_probe(batches[0], interval=args.probe_every)
+    results, swap_report = lifecycle.run_stream_with_swap(
+        router, stream, controller=controller, snapshot=snapshot,
+        swap_after=args.swap_after,
+    )
+    router.close()
+    stats = router.stats()
     dt = time.time() - t0
     # host-side concat: replica results live on disjoint device sets
     ids = np.concatenate([np.asarray(i) for _, i in results[: len(batches)]], 0)
@@ -159,7 +166,20 @@ def main():
     for srep in stats["per_replica"]:
         print(f"  replica {srep['replica']}: {srep['requests']} req "
               f"({srep['queries']} queries), device idle "
-              f"{100*srep['device_idle_frac']:.0f}%")
+              f"{100*srep['device_idle_frac']:.0f}%, "
+              f"generation {srep['generation']}")
+    if swap_report is not None:
+        rep = swap_report
+        print(f"rolling swap -> {rep.version.tag}: {rep.swapped} replica(s) "
+              f"re-indexed under the live stream in {rep.total_s*1e3:.0f} ms")
+        for row in rep.replicas:
+            print(f"  replica {row['replica']}: drain {row['drain_s']*1e3:.0f}"
+                  f" ms, build {row['build_s']*1e3:.0f} ms, warm "
+                  f"{row['warm_s']*1e3:.0f} ms, probe {row['probe_s']*1e3:.0f}"
+                  f" ms")
+    if args.probe_every:
+        print(f"canary re-probe every {args.probe_every}s: "
+              f"{stats['revivals']} revival(s)")
     packed = (code * levels + 7) // 8 + 4
     print(f"index bytes: {d_codes.shape[0]*packed/2**20:.1f} MiB vs "
           f"float {docs.nbytes/2**20:.1f} MiB")

@@ -39,6 +39,16 @@ by +-30%) must be >= --min-replica-ratio (default 0.9: on a
 shared-core CI host replication cannot scale, but the router must not
 COST meaningful throughput either). The per-run median rides along in
 the row for the perf record.
+
+The live index lifecycle ("swap" row, added with launch/lifecycle.py)
+is gated on CORRECTNESS, not speed: the emitter performs a rolling
+per-replica index swap under continuous traffic plus an injected
+transient fault + canary revival, and the gate hard-fails when any
+result was lost or reordered, when results were not bit-identical to
+the sequential loop, when the rolling swap did not cover every replica,
+or when no revival was recorded. Per-replica rows must also carry the
+stats ``generation`` (bumped on every swap/revival so a revived
+replica's counters are not conflated with its previous run).
 """
 
 from __future__ import annotations
@@ -61,7 +71,49 @@ REPLICATED_ROW_KEYS = (
     "shed", "failovers", "per_replica",
 )
 PER_REPLICA_KEYS = ("replica", "requests", "queries", "shed",
-                    "device_idle_frac")
+                    "device_idle_frac", "generation")
+
+# Live index lifecycle row (added with launch/lifecycle.py): a rolling
+# per-replica swap under continuous traffic plus a canary revival. The
+# row is not a throughput measurement — it is a CORRECTNESS record, so
+# the gate hard-fails on any lost or reordered result, any non-bit-
+# identical answer, an incomplete rolling swap, or a missing revival.
+SWAP_ROW_KEYS = (
+    "replicas", "index_kind", "swapped_replicas", "swap_s",
+    "queries_during_swap", "lost", "reordered", "bit_identical", "revivals",
+)
+
+
+def _check_swap_row(row: dict, label: str) -> int:
+    errors = 0
+    missing = [k for k in SWAP_ROW_KEYS if k not in row or row[k] is None]
+    if missing:
+        print(f"serving gate: {label} missing keys {missing}",
+              file=sys.stderr)
+        return errors + 1  # can't judge an incomplete row further
+    if row["lost"] != 0:
+        print(f"serving gate: {label} lost {row['lost']} result(s) during "
+              "the rolling swap", file=sys.stderr)
+        errors += 1
+    if row["reordered"] != 0:
+        print(f"serving gate: {label} reordered {row['reordered']} "
+              "result(s) during the rolling swap", file=sys.stderr)
+        errors += 1
+    if row["bit_identical"] is not True:
+        print(f"serving gate: {label} results not bit-identical to the "
+              "sequential loop across the swap", file=sys.stderr)
+        errors += 1
+    if row["swapped_replicas"] != row["replicas"]:
+        print(f"serving gate: {label} swapped only "
+              f"{row['swapped_replicas']}/{row['replicas']} replicas",
+              file=sys.stderr)
+        errors += 1
+    if row["revivals"] < 1:
+        print(f"serving gate: {label} recorded no canary revival "
+              "(re-probe must revive the injected transient fault)",
+              file=sys.stderr)
+        errors += 1
+    return errors
 
 
 def _check_replicated_schema(row: dict, label: str) -> int:
@@ -104,6 +156,8 @@ def check_serving(bench: dict, min_ratio: float,
     seq, ovl = qps.get("sequential"), qps.get("overlapped")
     print("mode,replicas,qps")
     for r in rows:
+        if "qps" not in r:
+            continue  # lifecycle rows carry swap metrics, not throughput
         print(f"{r.get('mode')},{r.get('replicas', 1)},{r.get('qps')}")
     if seq is None or ovl is None:
         print("serving gate: need both a 'sequential' and an 'overlapped' "
@@ -134,6 +188,20 @@ def check_serving(bench: dict, min_ratio: float,
         print("serving gate: no 'replicated' rows — the replica sweep "
               "must be emitted (launch/proxy.py tier)", file=sys.stderr)
         return 1
+    swap_rows = [r for r in rows if r.get("mode") == "swap"]
+    if not swap_rows:
+        print("serving gate: no 'swap' row — the live index lifecycle "
+              "(rolling swap + canary revival, launch/lifecycle.py) must "
+              "be exercised and emitted", file=sys.stderr)
+        return 1
+    for r in swap_rows:
+        label = f"swap row (index_kind={r.get('index_kind')})"
+        failures += _check_swap_row(r, label)
+        if "lost" in r:
+            print(f"swap({r.get('index_kind')}),lost={r.get('lost')},"
+                  f"reordered={r.get('reordered')},"
+                  f"bit_identical={r.get('bit_identical')},"
+                  f"revivals={r.get('revivals')}")
     for r in replicated:
         label = f"replicated row (replicas={r.get('replicas')})"
         failures += _check_replicated_schema(r, label)

@@ -1,0 +1,107 @@
+#!/usr/bin/env python
+"""Docs lint (stdlib only): broken relative links + launch docstrings.
+
+Two checks, both hard failures in CI (wired into the lint job of
+``.github/workflows/ci.yml`` and ``scripts/ci_dryrun.sh``):
+
+  1. Every relative markdown link in ``README.md`` and ``docs/*.md``
+     must resolve to a file or directory in the repo (external
+     http(s)/mailto links and pure #anchors are skipped; fenced code
+     blocks and inline code spans are stripped first so array shapes
+     like ``[N, D]`` never false-positive). Docs whose pointers rot are
+     worse than no docs.
+  2. Every ``src/repro/launch/*.py`` module must carry a module
+     docstring — the serving tier's invariants (FIFO per client,
+     bit-identity vs serve_sequential, first-wins ticket resolution)
+     live there, not implicitly in test names.
+
+    python scripts/check_docs_links.py [repo_root]
+"""
+
+from __future__ import annotations
+
+import ast
+import glob
+import os
+import re
+import sys
+
+# [text](target "optional title") — target captured up to ) or whitespace
+LINK_RE = re.compile(r"\[[^\]]*\]\(\s*<?([^)\s>]+)>?(?:\s+\"[^\"]*\")?\s*\)")
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def _strip_code(text: str) -> str:
+    """Drop fenced code blocks and inline code spans (links in code are
+    examples, not navigation)."""
+    out, fenced = [], False
+    for line in text.splitlines():
+        if line.lstrip().startswith("```"):
+            fenced = not fenced
+            out.append("")
+            continue
+        out.append("" if fenced else re.sub(r"`[^`]*`", "", line))
+    return "\n".join(out)
+
+
+def check_links(repo: str) -> list:
+    files = [os.path.join(repo, "README.md")]
+    files += sorted(glob.glob(os.path.join(repo, "docs", "*.md")))
+    errors = []
+    for path in files:
+        if not os.path.exists(path):
+            errors.append(f"{os.path.relpath(path, repo)}: file missing")
+            continue
+        with open(path) as f:
+            text = _strip_code(f.read())
+        base = os.path.dirname(path)
+        for target in LINK_RE.findall(text):
+            if target.startswith(EXTERNAL):
+                continue
+            rel = target.split("#")[0]
+            if not rel:  # pure in-page anchor
+                continue
+            resolved = os.path.normpath(os.path.join(base, rel))
+            if not os.path.exists(resolved):
+                errors.append(
+                    f"{os.path.relpath(path, repo)}: broken link -> {target}"
+                )
+    return errors
+
+
+def check_launch_docstrings(repo: str) -> list:
+    errors = []
+    pattern = os.path.join(repo, "src", "repro", "launch", "*.py")
+    modules = sorted(glob.glob(pattern))
+    if not modules:
+        return [f"no modules matched {pattern} (layout changed?)"]
+    for path in modules:
+        with open(path) as f:
+            try:
+                tree = ast.parse(f.read(), filename=path)
+            except SyntaxError as e:
+                errors.append(f"{os.path.relpath(path, repo)}: {e}")
+                continue
+        if not ast.get_docstring(tree):
+            errors.append(
+                f"{os.path.relpath(path, repo)}: missing module docstring"
+            )
+    return errors
+
+
+def main() -> int:
+    repo = sys.argv[1] if len(sys.argv) > 1 else \
+        os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+    repo = os.path.abspath(repo)
+    errors = check_links(repo) + check_launch_docstrings(repo)
+    for e in errors:
+        print(f"docs lint: {e}", file=sys.stderr)
+    if errors:
+        print(f"docs lint: {len(errors)} error(s)", file=sys.stderr)
+        return 1
+    print("docs lint: ok (links resolve, launch modules documented)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

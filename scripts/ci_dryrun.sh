@@ -25,6 +25,9 @@ else
     echo "ruff not installed locally -- SKIPPED (CI installs it)"
 fi
 
+note "job: lint (docs links + launch docstrings)"
+python scripts/check_docs_links.py || fail=1
+
 note "job: lint (no tracked Python bytecode)"
 if git ls-files | grep -E '(^|/)__pycache__/|\.py[cod]$'; then
     echo "tracked bytecode found -- git rm --cached it (.gitignore covers it)"

@@ -284,3 +284,154 @@ def hnsw_engine_inputs(index: ShardedHNSW):
         index.codes, index.inv_norm, index.nbr_codes, index.nbr_inv,
         index.nbr_ids, index.entries,
     )
+
+
+# ---------------------------------------------------------------------------
+# Rebuild-from-snapshot entry points (live index lifecycle).
+#
+# The engine's normal API hands back a bare shard_map program and leaves
+# device placement to the caller; the rolling swap wants the whole thing —
+# "here is a corpus snapshot, give me a serving SearchFn over this
+# replica's submesh" — so these wrap program construction + device_put
+# into one closure a drained replica can hot-swap in
+# (launch/lifecycle.RollingSwapController).
+# ---------------------------------------------------------------------------
+
+
+def flat_engine_inputs_from_snapshot(
+    codes: jax.Array,
+    n_levels: int,
+    *,
+    packed: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Host-side shared flat-engine inputs from a snapshot's unpacked
+    codes: (codes [nibble-packed when ``packed``], inverse doc norms).
+    Replica-independent, so a rolling swap computes them once per
+    snapshot and reuses them for every replica's device placement
+    (``launch/lifecycle.EngineBuilder``)."""
+    from repro.core.binarize_lib import pack_codes_nibbles
+    from repro.kernels.sdc import ref as _ref
+
+    codes = jnp.asarray(codes)
+    inv = _ref.doc_inv_norms(codes, n_levels)
+    if packed:
+        codes = pack_codes_nibbles(codes)
+    return codes, inv
+
+
+def engine_search_from_snapshot(
+    mesh: Mesh,
+    codes: jax.Array,
+    n_levels: int,
+    *,
+    k: int,
+    shard_axes: Tuple[str, ...] = ("data", "model"),
+    backend: str = "auto",
+    packed: bool = False,
+    block_q: int = 128,
+    block_n: int = 512,
+    prepared: Tuple[jax.Array, jax.Array] = None,
+):
+    """Fresh flat engine over ``mesh`` from a snapshot's unpacked codes.
+
+    Shards the codes (nibble-packing them first when ``packed``) and
+    inverse norms over the mesh's leaves and returns
+    ``q_codes -> (scores, ids)`` — queries are placed replicated inside
+    the closure, so it is a drop-in serving ``SearchFn``. Pass
+    ``prepared`` (from ``flat_engine_inputs_from_snapshot``) to skip the
+    per-replica host recompute.
+    """
+    if prepared is None:
+        prepared = flat_engine_inputs_from_snapshot(codes, n_levels,
+                                                    packed=packed)
+    search = make_distributed_search(
+        mesh, n_levels=n_levels, k=k, shard_axes=shard_axes,
+        backend=backend, packed=packed, block_q=block_q, block_n=block_n,
+    )
+    qspec, *in_specs = engine_input_shardings(mesh, shard_axes)
+    ins = [jax.device_put(a, s) for a, s in zip(prepared, in_specs)]
+
+    def snapshot_search(q_codes):
+        return search(jax.device_put(q_codes, qspec), *ins)
+
+    return snapshot_search
+
+
+def sharded_graph_from_snapshot(
+    codes,
+    n_levels: int,
+    *,
+    n_leaves: int,
+    M: int = 16,
+    ef_construction: int = 64,
+    seed: int = 0,
+    packed: bool = False,
+) -> ShardedHNSW:
+    """Host-side per-leaf NSW graphs from a snapshot's unpacked codes:
+    the single copy of the inv-norms + ``build_hnsw_sharded`` recipe,
+    shared by ``hnsw_engine_search_from_snapshot`` and the lifecycle
+    ``EngineBuilder``'s per-digest cache (any drift between two copies
+    would silently break the swap's bit-identity guarantee)."""
+    import numpy as np
+
+    from repro.index.hnsw_lite import build_hnsw_sharded
+    from repro.kernels.sdc import ref as _ref
+
+    codes = np.asarray(codes)
+    inv = np.asarray(_ref.doc_inv_norms(jnp.asarray(codes), n_levels))
+    return build_hnsw_sharded(
+        codes, inv, n_leaves=n_leaves, n_levels=n_levels, M=M,
+        ef_construction=ef_construction, seed=seed, packed=packed,
+    )
+
+
+def hnsw_engine_search_from_snapshot(
+    mesh: Mesh,
+    codes,
+    n_levels: int,
+    *,
+    k: int,
+    M: int = 16,
+    ef_construction: int = 64,
+    ef: int = 64,
+    beam: int = 8,
+    max_hops: int = 64,
+    seed: int = 0,
+    shard_axes: Tuple[str, ...] = ("data", "model"),
+    backend: str = "auto",
+    packed: bool = False,
+    sharded: ShardedHNSW = None,
+):
+    """Fresh HNSW engine over ``mesh`` from a snapshot's unpacked codes.
+
+    Rebuilds one NSW graph per leaf (``sharded_graph_from_snapshot``,
+    deterministic for the same snapshot + seed) unless a prebuilt
+    ``sharded`` graph is passed — replicas share the leaf layout, so a
+    rolling swap builds the graph once and reuses it for every replica's
+    device placement (see ``launch/lifecycle.EngineBuilder``).
+    """
+    n_leaves = 1
+    for ax in shard_axes:
+        n_leaves *= mesh.shape[ax]
+    if sharded is None:
+        sharded = sharded_graph_from_snapshot(
+            codes, n_levels, n_leaves=n_leaves, M=M,
+            ef_construction=ef_construction, seed=seed, packed=packed,
+        )
+    if sharded.entries.shape[0] != n_leaves:
+        raise ValueError(
+            f"prebuilt sharded graph has {sharded.entries.shape[0]} leaves, "
+            f"mesh wants {n_leaves}"
+        )
+    search = make_hnsw_search(
+        mesh, n_levels=n_levels, k=k, ef=ef, beam=beam, max_hops=max_hops,
+        shard_axes=shard_axes, backend=backend, packed=packed,
+    )
+    qspec, *in_specs = hnsw_engine_shardings(mesh, shard_axes)
+    ins = [jax.device_put(a, s)
+           for a, s in zip(hnsw_engine_inputs(sharded), in_specs)]
+
+    def snapshot_search(q_codes):
+        return search(jax.device_put(q_codes, qspec), *ins)
+
+    return snapshot_search

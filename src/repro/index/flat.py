@@ -91,6 +91,30 @@ class FlatSDC:
         return self.codes.shape[0] * (packed_codes + 4)
 
 
+def flat_search_from_snapshot(
+    codes: jax.Array,
+    n_levels: int,
+    *,
+    k: int,
+    packed: bool = False,
+    backend: str = "xla",
+    block_n: int = 512,
+):
+    """Rebuild-from-snapshot entry point (live index lifecycle).
+
+    Builds a fresh exhaustive index from a corpus snapshot's unpacked
+    codes and returns a serving ``SearchFn`` closure
+    (``codes -> (scores, ids)``), ready to be hot-swapped into a
+    drained replica by ``launch/lifecycle.RollingSwapController``.
+    Deterministic: the same snapshot + params always yields a
+    bit-identical index.
+    """
+    index = FlatSDC.build(
+        jnp.asarray(codes), n_levels, packed=packed, backend=backend
+    )
+    return lambda q: index.search(q, k, block_n=block_n)
+
+
 @dataclasses.dataclass
 class FlatBitwise:
     packed: jax.Array  # [N, n_levels, m/32] uint32

@@ -527,6 +527,43 @@ def search_hnsw_batched(
     return vals, ids
 
 
+def hnsw_search_from_snapshot(
+    codes: np.ndarray,
+    n_levels: int,
+    *,
+    k: int,
+    M: int = 16,
+    ef_construction: int = 64,
+    ef: int = 64,
+    beam: int = 8,
+    max_hops: int = 64,
+    seed: int = 0,
+    packed: bool = False,
+    backend: str = "xla",
+):
+    """Rebuild-from-snapshot entry point (live index lifecycle).
+
+    Rebuilds the NSW graph from a corpus snapshot's unpacked codes
+    (host-side, O(N^2) — size swap corpora accordingly) and returns a
+    serving ``SearchFn`` closure over the batched-frontier search, for
+    the rolling swap (``launch/lifecycle.RollingSwapController``).
+    Deterministic: the insertion order derives from ``seed``, so the
+    same snapshot + params rebuild bit-identically.
+    """
+    from repro.kernels.sdc import ref as _ref  # lazy: ref is build-time only
+
+    codes = np.asarray(codes)
+    inv = np.asarray(_ref.doc_inv_norms(jnp.asarray(codes), n_levels))
+    graph = build_hnsw(
+        codes, inv, n_levels=n_levels, M=M,
+        ef_construction=ef_construction, seed=seed, packed=packed,
+    )
+    tables = prepare_batched(graph)
+    return lambda q: search_hnsw_batched(
+        tables, q, k=k, ef=ef, beam=beam, max_hops=max_hops, backend=backend
+    )
+
+
 # ---------------------------------------------------------------------------
 # Sharded build for the distributed engine (index/engine.py): one NSW graph
 # per leaf over that leaf's rows; searched leaf-locally under shard_map and

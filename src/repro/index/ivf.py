@@ -201,6 +201,39 @@ def ivf_search(
     )
 
 
+def ivf_search_from_snapshot(
+    codes: jax.Array,
+    n_levels: int,
+    *,
+    k: int,
+    nlist: int,
+    nprobe: int,
+    seed: int = 0,
+    kmeans_iters: int = 20,
+    max_len: int | None = None,
+    headroom: float = 1.0,
+    packed: bool = False,
+    backend: str = "xla",
+    coarse_sdc: bool = False,
+):
+    """Rebuild-from-snapshot entry point (live index lifecycle).
+
+    Re-clusters a corpus snapshot's codes into a fresh IVF index and
+    returns a serving ``SearchFn`` closure for the rolling swap
+    (``launch/lifecycle.RollingSwapController``). Deterministic: the
+    k-means key derives from ``seed``, so the same snapshot + params
+    rebuild bit-identically.
+    """
+    index = build_ivf(
+        jax.random.PRNGKey(seed), jnp.asarray(codes), n_levels=n_levels,
+        nlist=nlist, kmeans_iters=kmeans_iters, max_len=max_len,
+        headroom=headroom, packed=packed,
+    )
+    return lambda q: search(
+        index, q, nprobe=nprobe, k=k, coarse_sdc=coarse_sdc, backend=backend
+    )
+
+
 def search(
     index: IVFIndex,
     q_codes: jax.Array,

@@ -35,6 +35,36 @@ Every replica scores through the same kernels and every replica returns
 bit-identical (scores, ids) for the same batch, which is what makes
 routing and failover invisible to correctness: only latency and
 throughput change.
+
+Replica health is a five-state machine (per replica, owned by the
+router; ``launch/lifecycle.py`` drives the swap transitions)::
+
+            failure                     drain()
+  healthy ─────────► unhealthy   healthy ─────► draining
+     ▲                   │                          │ begin_rebuild()
+     │ canary ok         │ probe()                  ▼
+  probing ◄──────────────┘◄──────────────────── rebuilding
+
+Only ``healthy`` replicas are routable. ``unhealthy`` is no longer
+forever: a canary probe (``probe`` / the ``start_health_probe`` thread)
+re-admits a replica whose transient fault has cleared — and every
+re-admission bumps the replica pipeline's ``generation`` so its stats
+are not conflated with the previous run.
+
+Invariants (relied on by ``tests/test_proxy_router.py`` and
+``tests/test_lifecycle.py``):
+
+  * **FIFO per client** — a client awaiting its proxy tickets in
+    submission order sees results in submission order, across routing,
+    failover re-dispatch, and rolling swaps.
+  * **Bit-identity vs ``serve_sequential``** — every replica serves the
+    same math, so routed results equal the single-threaded loop's
+    exactly, before, during, and after a swap to an equivalent index.
+  * **First-wins ticket resolution** — a ``ProxyTicket`` is resolved
+    exactly once (the router is the only resolver); a failover or drain
+    re-dispatch racing a late success never clobbers a stored result.
+  * **Admitted is never dropped** — failover and drain re-dispatch with
+    ``force_block``; only ``submit`` itself may shed.
 """
 
 from __future__ import annotations
@@ -42,6 +72,8 @@ from __future__ import annotations
 import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
 
 from repro.launch.serving import (
     Array,
@@ -58,7 +90,13 @@ from repro.launch.serving import (
 
 
 class AllReplicasDown(RuntimeError):
-    """Raised by ``QueryRouter.submit`` when no healthy replica remains."""
+    """Raised by ``QueryRouter.submit`` when every replica is unhealthy
+    (a transiently out-of-service tier — drain/rebuild/probe in flight —
+    raises the retryable ``RequestShed`` instead)."""
+
+
+#: Per-replica health states (see the module docstring's diagram).
+REPLICA_STATES = ("healthy", "draining", "rebuilding", "probing", "unhealthy")
 
 
 # ---------------------------------------------------------------------------
@@ -230,13 +268,33 @@ class QueryRouter:
         self._lock = threading.Lock()
         self._seq = 0
         self._closed = False
+        # _healthy is the ROUTABLE set; _state carries the full health
+        # state machine (a draining replica is out of _healthy but not
+        # unhealthy — see REPLICA_STATES).
         self._healthy = set(range(len(replicas)))
+        self._state: Dict[int, str] = {
+            i: "healthy" for i in range(len(replicas))
+        }
+        self._versions: Dict[int, Any] = {i: None for i in range(len(replicas))}
         self._outstanding: Dict[int, set] = {
             i: set() for i in range(len(replicas))
         }
         self.shed_count = 0  # proxy-level: every healthy replica was full
         self.failover_count = 0  # tickets re-dispatched off a dead replica
+        self.revival_count = 0  # unhealthy replicas re-admitted by a probe
+        # Failover tickets caught while the tier is transiently
+        # unroutable (a drain/rebuild/probe holds every replica): parked
+        # here, flushed by the next successful probe. Never spun on —
+        # _redispatch runs on stage-thread callbacks, and busy-waiting
+        # there can block the very scan thread a revival probe needs.
+        self._parked: List[Tuple[ProxyTicket, BaseException]] = []
+        # Replicas whose current rebuild started from 'unhealthy': their
+        # post-rebuild probe success counts as a revival too (the swap
+        # reclaimed a dead replica in place).
+        self._rebuild_from_dead: set = set()
         self._errors: Dict[int, BaseException] = {}
+        self._probe_thread: Optional[threading.Thread] = None
+        self._probe_stop = threading.Event()
         # Proxy-level completion accounting: enqueue->reply across the
         # whole tier (admission wait + any failover re-dispatches).
         self._stats = LatencyStats()
@@ -261,8 +319,14 @@ class QueryRouter:
             if self._closed:
                 raise PipelineClosed("submit after close")
             if not self._healthy:
-                raise AllReplicasDown(
-                    f"all {len(self.replicas)} replicas unhealthy"
+                if all(s == "unhealthy" for s in self._state.values()):
+                    raise AllReplicasDown(
+                        f"all {len(self.replicas)} replicas unhealthy"
+                    )
+                # Transiently empty tier (drain/rebuild/probe in flight):
+                # retryable, unlike AllReplicasDown.
+                raise RequestShed(
+                    "no routable replica (index swap or probe in progress)"
                 )
             order = self._order()
             seq = self._seq
@@ -295,10 +359,26 @@ class QueryRouter:
             # fake encode error — skip instead.
             return
         pipe = self.replicas.pipelines[replica]
-        inner = pipe.submit(queries, force_block=force)  # may shed
-        ticket._point_at(replica, inner)
+        # Register in _outstanding BEFORE pipe.submit, re-checking
+        # routability under the same lock: submit() picked this replica
+        # from an earlier snapshot, and a drain() landing in the gap
+        # would otherwise see an empty outstanding set, declare the
+        # replica quiet, and let the swap mutate the pipeline while this
+        # batch is still dispatching onto it.
         with self._lock:
+            if replica not in self._healthy:
+                raise RequestShed(
+                    f"replica {replica} left rotation "
+                    f"({self._state[replica]}) before dispatch"
+                )
             self._outstanding[replica].add(ticket)
+        try:
+            inner = pipe.submit(queries, force_block=force)  # may shed
+        except BaseException:
+            with self._lock:
+                self._outstanding[replica].discard(ticket)
+            raise
+        ticket._point_at(replica, inner)
         inner.add_done_callback(
             lambda t, tk=ticket, r=replica: self._on_inner_done(tk, r, t)
         )
@@ -341,12 +421,15 @@ class QueryRouter:
         every ticket in flight on it, oldest first."""
         with self._lock:
             if replica not in self._healthy:
-                return  # already handled
+                return  # already handled (or draining/rebuilding/probing:
+                # the drain path and probe own those transitions)
             self._healthy.discard(replica)
+            self._state[replica] = "unhealthy"
             self._errors[replica] = error
             victims = sorted(self._outstanding[replica], key=lambda t: t.seq)
             self._outstanding[replica] = set()
             self.failover_count += len(victims)
+        self._fail_parked_if_tier_down()
         for ticket in victims:
             self._redispatch(ticket, error)
 
@@ -356,9 +439,18 @@ class QueryRouter:
         while True:
             with self._lock:
                 order = self._order() if self._healthy else []
+                if not order and not self._closed and any(
+                    s != "unhealthy" for s in self._state.values()
+                ):
+                    # Transiently unroutable (a drain/rebuild/probe owns
+                    # every replica this instant): an admitted ticket is
+                    # never dropped, so park it for the next successful
+                    # probe to flush instead of failing work a swap will
+                    # outlive by milliseconds.
+                    self._parked.append((ticket, error))
+                    return
             if not order:
-                # No healthy replica can take the batch: the tier is
-                # down and the ticket fails terminally.
+                # Closed, or every replica is unhealthy: genuinely down.
                 ticket._resolve(error=error)
                 return
             try:
@@ -366,26 +458,272 @@ class QueryRouter:
                 # admitted ticket is never dropped by failover.
                 self._dispatch(ticket, order[0], force=True)
                 return
+            except RequestShed:
+                continue  # replica left rotation between order and dispatch
             except PipelineClosed:
                 with self._lock:
                     self._healthy.discard(order[0])
+                    self._state[order[0]] = "unhealthy"
+                self._fail_parked_if_tier_down()
                 continue
+
+    def _fail_parked_if_tier_down(self):
+        """Terminally fail parked failover tickets once no replica can
+        ever take them (router closed / every replica unhealthy with no
+        transient state left to wait out) — a client awaiting result()
+        must not hang on a tier that has nothing left to revive it."""
+        with self._lock:
+            if not self._closed and any(
+                s != "unhealthy" for s in self._state.values()
+            ):
+                return
+            parked, self._parked = self._parked, []
+        for ticket, err in parked:
+            ticket._resolve(error=err)
+
+    def _flush_parked(self):
+        """Re-dispatch parked failover tickets (a replica just returned
+        to rotation), oldest first."""
+        with self._lock:
+            parked, self._parked = self._parked, []
+        for ticket, err in sorted(parked, key=lambda p: p[0].seq):
+            self._redispatch(ticket, err)
 
     # -- lifecycle / monitoring ---------------------------------------
 
     def healthy(self) -> List[int]:
+        """Routable replicas (state == "healthy")."""
         with self._lock:
             return sorted(self._healthy)
+
+    def states(self) -> Dict[int, str]:
+        """Per-replica health state (see REPLICA_STATES)."""
+        with self._lock:
+            return dict(self._state)
 
     def outstanding(self) -> Dict[int, int]:
         with self._lock:
             return {i: len(s) for i, s in self._outstanding.items()}
+
+    def set_version(self, replica: int, version: Any) -> None:
+        """Record the index version a replica serves (stats/monitoring
+        bookkeeping; ``RollingSwapController`` calls this on swap)."""
+        with self._lock:
+            self._versions[replica] = version
+
+    def versions(self) -> Dict[int, Any]:
+        with self._lock:
+            return dict(self._versions)
+
+    # -- live index lifecycle (drain / rebuild / probe / revive) -------
+
+    def drain(self, replica: int, *, timeout: float = 30.0,
+              poll: float = 0.002) -> None:
+        """healthy -> draining: stop routing to ``replica`` and wait for
+        its in-flight proxy tickets to finish.
+
+        In-flight work completes normally (the routable survivors absorb
+        new traffic meanwhile). Tickets still unresolved at ``timeout``
+        are re-dispatched to the survivors via the failover path
+        (force_block — an admitted ticket is never dropped), so a stuck
+        replica cannot stall the swap. On return the replica holds no
+        proxy tickets; pair with ``ServingPipeline.quiesce`` before
+        touching its stages.
+        """
+        with self._lock:
+            st = self._state[replica]
+            if st != "healthy":
+                raise ValueError(
+                    f"drain: replica {replica} is {st!r}, need 'healthy'"
+                )
+            self._state[replica] = "draining"
+            self._healthy.discard(replica)
+        deadline = time.perf_counter() + timeout
+        while time.perf_counter() < deadline:
+            with self._lock:
+                if not self._outstanding[replica]:
+                    return
+            time.sleep(poll)
+        # Timed out: sweep the stragglers onto the survivors, oldest
+        # first (their inner tickets may still resolve on the draining
+        # replica — first-wins keeps whichever result lands first).
+        with self._lock:
+            victims = sorted(self._outstanding[replica], key=lambda t: t.seq)
+            self._outstanding[replica] = set()
+            self.failover_count += len(victims)
+        err = RuntimeError(
+            f"replica {replica} did not drain within {timeout}s"
+        )
+        for ticket in victims:
+            self._redispatch(ticket, err)
+
+    def begin_rebuild(self, replica: int) -> None:
+        """draining|unhealthy -> rebuilding: the caller owns the replica
+        until it hands it back through ``probe``."""
+        with self._lock:
+            st = self._state[replica]
+            if st not in ("draining", "unhealthy"):
+                raise ValueError(
+                    f"begin_rebuild: replica {replica} is {st!r}, need "
+                    "'draining' or 'unhealthy'"
+                )
+            if st == "unhealthy":
+                self._rebuild_from_dead.add(replica)
+            else:
+                self._rebuild_from_dead.discard(replica)
+            self._state[replica] = "rebuilding"
+
+    def mark_unhealthy(self, replica: int,
+                       error: Optional[BaseException] = None) -> None:
+        """Force a replica out of service (any state -> unhealthy).
+
+        From ``healthy`` this is the normal failover path (in-flight
+        tickets re-dispatch to the survivors). From the transient states
+        it parks the replica where the canary re-probe can reclaim it —
+        the swap controller uses this when an aborted swap would
+        otherwise strand a replica in ``draining``/``rebuilding``
+        forever (no probe targets those states)."""
+        with self._lock:
+            in_rotation = replica in self._healthy
+            if error is not None:
+                self._errors[replica] = error
+        if in_rotation:
+            self._on_replica_failure(
+                replica, error or RuntimeError(
+                    f"replica {replica} marked unhealthy"
+                )
+            )
+        else:
+            with self._lock:
+                self._state[replica] = "unhealthy"
+            self._fail_parked_if_tier_down()
+
+    def probe(self, replica: int, canary: Any, *, expect=None,
+              timeout: float = 30.0, from_rebuild: bool = False) -> bool:
+        """Canary-query an out-of-service replica; success re-admits it.
+
+        The paper-style health re-probe: a real query batch is pushed
+        through the replica's own pipeline (encode + scan, force_block).
+        If it resolves — and matches ``expect``'s (scores, ids) when
+        given — the replica returns to the routable set. A probe of an
+        ``unhealthy`` replica that succeeds is a **revival** (counted in
+        ``revival_count``) and starts a fresh stats generation, ending
+        the old one-strike-forever behavior. Failure parks the replica
+        back in ``unhealthy`` for the next probe.
+
+        ``from_rebuild`` is the swap controller's hand-back: only it may
+        probe a ``rebuilding`` replica. Without the flag a probe of a
+        replica in ``rebuilding`` or ``probing`` returns False untouched
+        — the background probe loop must never re-admit a replica whose
+        stages another thread is mid-mutation (its target snapshot can
+        go stale between listing and probing).
+        """
+        with self._lock:
+            st = self._state[replica]
+            if st == "healthy":
+                return True
+            if st == "draining":
+                raise ValueError(
+                    f"probe: replica {replica} is draining (finish the "
+                    "drain/rebuild first)"
+                )
+            if st == "rebuilding" and not from_rebuild:
+                return False  # the swap controller owns it
+            if st == "probing":
+                return False  # another probe is already in flight
+            # A rebuild that reclaimed a dead replica counts as a
+            # revival too; its generation was already bumped by the
+            # swap controller, so only the direct unhealthy->probing
+            # path needs a fresh one here.
+            revival = st == "unhealthy" or (
+                st == "rebuilding" and replica in self._rebuild_from_dead
+            )
+            fresh_generation = st == "unhealthy"
+            self._rebuild_from_dead.discard(replica)
+            self._state[replica] = "probing"
+        pipe = self.replicas.pipelines[replica]
+        if fresh_generation:
+            # Separate the revived run's stats from the dead run's. The
+            # quiesce must actually succeed: bumping the generation with
+            # an old-generation scan still in flight would let its
+            # completion race the stats reset — the exact conflation the
+            # generation exists to prevent. A still-stuck replica goes
+            # back to unhealthy for the next probe.
+            if not pipe.quiesce(timeout=min(timeout, 5.0)):
+                with self._lock:
+                    self._state[replica] = "unhealthy"
+                self._fail_parked_if_tier_down()
+                return False
+            pipe.new_generation()
+        try:
+            ticket = pipe.submit(canary, force_block=True)
+            vals, ids = ticket.result(timeout=timeout)
+            if expect is not None:
+                ev, ei = expect
+                if not (np.array_equal(np.asarray(ids), np.asarray(ei))
+                        and np.array_equal(np.asarray(vals),
+                                           np.asarray(ev))):
+                    raise RuntimeError(
+                        f"replica {replica} canary mismatch vs expected "
+                        "(scores, ids)"
+                    )
+        except BaseException as e:
+            with self._lock:
+                self._state[replica] = "unhealthy"
+                self._errors[replica] = e
+            self._fail_parked_if_tier_down()
+            return False
+        with self._lock:
+            self._state[replica] = "healthy"
+            self._healthy.add(replica)
+            self._errors.pop(replica, None)
+            if revival:
+                self.revival_count += 1
+        # A replica is back: failover tickets parked while the tier was
+        # transiently unroutable can flow again.
+        self._flush_parked()
+        return True
+
+    def start_health_probe(self, canary: Any, *, interval: float = 1.0,
+                           expect=None, timeout: float = 30.0) -> None:
+        """Start the periodic re-probe loop: every ``interval`` seconds,
+        canary-probe each ``unhealthy`` replica and revive the ones that
+        answer. Idempotent; ``stop_health_probe``/``close`` stops it."""
+        with self._lock:
+            if self._probe_thread is not None and self._probe_thread.is_alive():
+                return
+            self._probe_stop = threading.Event()
+            stop = self._probe_stop
+
+            def loop():
+                while not stop.wait(interval):
+                    with self._lock:
+                        targets = [i for i, s in self._state.items()
+                                   if s == "unhealthy"]
+                    for i in targets:
+                        if stop.is_set():
+                            return
+                        self.probe(i, canary, expect=expect, timeout=timeout)
+
+            self._probe_thread = threading.Thread(
+                target=loop, name="router-health-probe", daemon=True
+            )
+            self._probe_thread.start()
+
+    def stop_health_probe(self) -> None:
+        self._probe_stop.set()
+        t = self._probe_thread
+        if t is not None and t.is_alive():
+            t.join(timeout=30.0)
+        self._probe_thread = None
 
     def close(self, drain: bool = True):
         with self._lock:
             if self._closed:
                 return
             self._closed = True
+        self._fail_parked_if_tier_down()  # closed: parked tickets fail
+        self.stop_health_probe()
         self.replicas.close(drain=drain)
 
     def __enter__(self) -> "QueryRouter":
@@ -404,12 +742,18 @@ class QueryRouter:
         with self._lock:  # one snapshot: per-replica flags must agree
             shed_proxy = self.shed_count
             failovers = self.failover_count
+            revivals = self.revival_count
             healthy = sorted(self._healthy)
+            states = dict(self._state)
+            versions = dict(self._versions)
         per = []
         for i, pipe in enumerate(self.replicas.pipelines):
-            s = pipe.stats()
+            s = pipe.stats()  # carries "generation" (bumped per revival/swap)
             s["replica"] = i
             s["healthy"] = i in healthy
+            s["state"] = states[i]
+            v = versions[i]
+            s["version"] = getattr(v, "tag", v)
             per.append(s)
         n_req, n_q, lat = self._stats.snapshot()
         lat.sort()
@@ -429,6 +773,8 @@ class QueryRouter:
             "shed": shed_proxy,
             "replica_shed": sum(s["shed"] for s in per),
             "failovers": failovers,
+            "revivals": revivals,
+            "states": states,
             # tier-wide percentiles over proxy enqueue->reply (admission
             # wait + failover re-dispatches included).
             "latency_p50_ms": 1e3 * _percentile(lat, 0.50),

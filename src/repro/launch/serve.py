@@ -34,7 +34,7 @@ from repro.index import hnsw_lite
 from repro.index import ivf as ivf_lib
 from repro.index.flat import FlatFloat, FlatSDC
 from repro.kernels.sdc import ref as sdc_ref
-from repro.launch import proxy, serving
+from repro.launch import lifecycle, proxy, serving
 
 
 def train_binarizer(docs: np.ndarray, cfg: TrainConfig, steps: int = 300,
@@ -98,6 +98,15 @@ def main():
     ap.add_argument("--router", choices=sorted(proxy.ROUTING_POLICIES),
                     default="round-robin",
                     help="replica routing policy")
+    ap.add_argument("--swap-after", type=int, default=0, metavar="N",
+                    help="after N batches of the routed stream, run a "
+                         "rolling index swap (drain -> rebuild -> warm -> "
+                         "canary re-probe, one replica at a time) under "
+                         "the live traffic; 0 disables")
+    ap.add_argument("--probe-every", type=float, default=0.0, metavar="S",
+                    help="period (s) of the router's canary health "
+                         "re-probe loop — unhealthy replicas that answer "
+                         "the canary are revived; 0 disables")
     args = ap.parse_args()
 
     print(f"[data] {args.docs} docs, {args.queries} queries, dim={args.dim}")
@@ -126,34 +135,54 @@ def main():
     # --- index build ---
     d_codes = encode_codes(state, docs, bcfg)
 
+    # The lifecycle builder is the single source of build params: the
+    # initial index below consumes builder.params, so a mid-stream
+    # rolling swap (--swap-after) provably rebuilds the SAME index and
+    # the demo's bit-identity claim cannot drift out from under it.
     flat_float = FlatFloat.build(jnp.asarray(docs))
     if args.index == "flat":
-        index = FlatSDC.build(
-            d_codes, bcfg.n_levels, packed=args.packed, backend=args.backend
+        builder = lifecycle.FlatBuilder(
+            k=args.k, packed=args.packed, backend=args.backend
         )
-        search = lambda q: index.search(q, args.k)
+        p = builder.params
+        index = FlatSDC.build(
+            d_codes, bcfg.n_levels, packed=p["packed"], backend=p["backend"]
+        )
+        search = lambda q: index.search(q, p["k"])
         nbytes = index.nbytes()
     elif args.index == "ivf":
+        builder = lifecycle.IVFBuilder(
+            k=args.k, nlist=64, nprobe=32, seed=1, packed=args.packed,
+            backend=args.backend,
+        )
+        p = builder.params
         index = ivf_lib.build_ivf(
-            jax.random.PRNGKey(1), d_codes, n_levels=bcfg.n_levels, nlist=64,
-            packed=args.packed,
+            jax.random.PRNGKey(p["seed"]), d_codes, n_levels=bcfg.n_levels,
+            nlist=p["nlist"], kmeans_iters=p["kmeans_iters"],
+            packed=p["packed"],
         )
         search = lambda q: ivf_lib.search(
-            index, q, nprobe=32, k=args.k, backend=args.backend
+            index, q, nprobe=p["nprobe"], k=p["k"], backend=p["backend"]
         )
         nbytes = index.nbytes()
     else:  # hnsw: batched-frontier graph search on the gather kernel
+        builder = lifecycle.HNSWBuilder(
+            k=args.k, M=16, ef_construction=64, ef=args.ef, beam=args.beam,
+            packed=args.packed, backend=args.backend,
+        )
+        p = builder.params
         inv = np.asarray(sdc_ref.doc_inv_norms(d_codes, bcfg.n_levels))
         print("[index] building NSW graph (host-side, O(N^2) incremental "
               "construction — use --docs <= 20000 for a quick demo)")
         index = hnsw_lite.build_hnsw(
-            np.asarray(d_codes), inv, n_levels=bcfg.n_levels, M=16,
-            ef_construction=64, packed=args.packed,
+            np.asarray(d_codes), inv, n_levels=bcfg.n_levels, M=p["M"],
+            ef_construction=p["ef_construction"], seed=p["seed"],
+            packed=p["packed"],
         )
         tables = hnsw_lite.prepare_batched(index)
         search = lambda q: hnsw_lite.search_hnsw_batched(
-            tables, q, k=args.k, ef=args.ef, beam=args.beam,
-            backend=args.backend,
+            tables, q, k=p["k"], ef=p["ef"], beam=p["beam"],
+            backend=p["backend"],
         )
         nbytes = index.nbytes()
 
@@ -202,16 +231,28 @@ def main():
                          share_device=args.replicas > 1),
         policy=args.router,
     )
+
+    # Live index lifecycle: a rolling swap mid-stream rebuilds each
+    # replica's index from a fresh corpus snapshot (here: the same codes,
+    # so results stay bit-identical and recall is unchanged — the point
+    # of the demo is that the traffic never stops), and the periodic
+    # canary probe revives replicas whose transient faults clear.
+    controller = snapshot = None
+    if args.swap_after:
+        snapshot = lifecycle.CorpusSnapshot(
+            codes=np.asarray(d_codes), n_levels=bcfg.n_levels
+        )
+        controller = lifecycle.RollingSwapController(
+            router, builder, warm_batches=batches[:1], encode_fn=encode
+        )
+    if args.probe_every:
+        router.start_health_probe(batches[0], interval=args.probe_every)
+
     t0 = time.time()
-    tickets = []
-    for b in stream:
-        while True:
-            try:
-                tickets.append(router.submit(b))
-                break
-            except serving.RequestShed:
-                time.sleep(1e-3)
-    results = [t.result() for t in tickets]
+    results, swap_report = lifecycle.run_stream_with_swap(
+        router, stream, controller=controller, snapshot=snapshot,
+        swap_after=args.swap_after,
+    )
     dt_pipe = time.time() - t0
     router.close()
     stats = router.stats()
@@ -234,6 +275,21 @@ def main():
             print(f"[serve]   replica {s['replica']}: {s['requests']} req "
                   f"({s['queries']} queries), shed {s['shed']}, device idle "
                   f"{100 * s['device_idle_frac']:.0f}%")
+    if swap_report is not None:
+        rep = swap_report
+        print(f"[swap] rolling swap -> {rep.version.tag}: {rep.swapped} "
+              f"replica(s) re-indexed in {rep.total_s * 1e3:.0f} ms under "
+              f"live traffic (zero results lost)")
+        for row in rep.replicas:
+            print(f"[swap]   replica {row['replica']}: "
+                  f"drain {row['drain_s'] * 1e3:.0f} ms, "
+                  f"build {row['build_s'] * 1e3:.0f} ms, "
+                  f"warm {row['warm_s'] * 1e3:.0f} ms, "
+                  f"probe {row['probe_s'] * 1e3:.0f} ms "
+                  f"(generation {row['generation']})")
+    if args.probe_every:
+        print(f"[probe] canary re-probe every {args.probe_every}s: "
+              f"{stats['revivals']} revival(s), states {stats['states']}")
 
 
 if __name__ == "__main__":

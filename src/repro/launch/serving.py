@@ -40,6 +40,30 @@ The admission machinery (``AdmissionQueue``, ``Ticket``,
 ``ServingPipeline`` is *one replica* — the replicated tier in
 ``launch/proxy.py`` composes N of them behind a ``QueryRouter`` and
 reuses the same queue/policy/ticket semantics at the proxy level.
+
+Invariants (the tests in ``tests/test_serving_pipeline.py``,
+``tests/test_proxy_router.py`` and ``tests/test_lifecycle.py`` rely on
+these; do not weaken them in a refactor):
+
+  * **FIFO per client** — a client that awaits its tickets in
+    submission order observes results in submission order. Both stages
+    are single threads fed by FIFO queues, so there is no internal
+    reordering to begin with.
+  * **Bit-identity vs ``serve_sequential``** — the pipeline reorders
+    *time*, never *math*: for the same (encode_fn, search_fn) and the
+    same batches, every resolved ticket carries exactly the
+    (scores, ids) the sequential encode->scan loop produces. No
+    cross-batch state exists anywhere in the stages.
+  * **First-wins ticket resolution** — ``Ticket._resolve`` is atomic
+    and idempotent: the scan thread, a shutdown sweep, and a proxy
+    failover re-dispatch may race to resolve one ticket, but exactly
+    one value/error ever sticks and completion stats are recorded
+    exactly once.
+  * **Quiesce means quiet** — after ``quiesce()`` returns True, every
+    admitted request has resolved and the stage threads are blocked on
+    empty queues, so ``swap_fns``/``new_generation`` (the live index
+    lifecycle in ``launch/lifecycle.py``) mutate nothing a stage is
+    reading.
 """
 
 from __future__ import annotations
@@ -242,6 +266,13 @@ class AdmissionQueue:
     def get_nowait(self):
         return self._q.get_nowait()
 
+    def take_shed(self) -> int:
+        """Return and zero the shed counter (generation rollover: the
+        new generation's sheds must not be conflated with the old)."""
+        with self._lock:
+            n, self.shed_count = self.shed_count, 0
+            return n
+
     def close(self) -> bool:
         """Mark closed; returns True on the first call only."""
         with self._lock:
@@ -328,6 +359,24 @@ class ServingPipeline:
         )
         self._encoded: "queue.Queue" = queue.Queue(maxsize=config.encode_ahead)
         self._stats = LatencyStats()
+        # Index generation (bumped by new_generation on a rolling swap or
+        # a canary revival): stats are scoped to the current generation
+        # so a revived/re-indexed replica's counters are not conflated
+        # with its previous run; lifetime totals accumulate separately.
+        self.generation = 0
+        self._lifetime_requests = 0
+        self._lifetime_queries = 0
+        self._lifetime_shed = 0
+        # In-flight accounting for quiesce(): tickets admitted but not
+        # yet resolved (by result, error, or sweep).
+        self._idle_cond = threading.Condition()
+        self._inflight_n = 0
+        # Orders resolve+record against a generation rollover: quiesce()
+        # wakes on the resolve (inside this lock), so new_generation()
+        # cannot swap the stats out between a ticket's resolve and its
+        # record — the last pre-swap completion lands in its own
+        # generation, never the next one's.
+        self._record_lock = threading.Lock()
         # device-idle accounting (scan thread): time spent waiting for an
         # encoded batch = the device had nothing to do.
         self._scan_idle_s = 0.0
@@ -358,7 +407,21 @@ class ServingPipeline:
         by the proxy's failover re-dispatch, which must never drop an
         already-admitted ticket).
         """
-        ticket = self._admission.admit(queries, force_block=force_block)
+        # Reserve the in-flight slot BEFORE admission: once admit() has
+        # enqueued the ticket, a concurrent quiesce() must already see
+        # it, or "quiesce means quiet" has a window where an admitted
+        # batch is invisible and a swap mutates the stages under it.
+        with self._idle_cond:
+            self._inflight_n += 1
+        try:
+            ticket = self._admission.admit(queries, force_block=force_block)
+        except BaseException:
+            with self._idle_cond:
+                self._inflight_n -= 1
+                if self._inflight_n == 0:
+                    self._idle_cond.notify_all()
+            raise
+        ticket.add_done_callback(self._on_ticket_resolved)
         # A close() racing this submit may have fully shut the stages
         # down with this item still unconsumed (it landed after close()'s
         # own post-join sweep). Sweep whatever remains: only unconsumed
@@ -369,6 +432,71 @@ class ServingPipeline:
         if self._admission.closed and not self._scan_thread.is_alive():
             self._admission.sweep()
         return ticket
+
+    def _on_ticket_resolved(self, _ticket: Ticket):
+        with self._idle_cond:
+            self._inflight_n -= 1
+            if self._inflight_n == 0:
+                self._idle_cond.notify_all()
+
+    def quiesce(self, timeout: Optional[float] = None) -> bool:
+        """Drain WITHOUT closing: wait until every admitted request has
+        resolved, then return True (False on timeout, with the pipeline
+        untouched and still serving).
+
+        The stage threads stay up and ``submit`` keeps working — callers
+        that need exclusive access (the rolling index swap) must stop
+        routing traffic here first (``QueryRouter.drain``). Once True is
+        returned, both stages are blocked on empty queues, so
+        ``swap_fns``/``new_generation`` are safe.
+        """
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        with self._idle_cond:
+            while self._inflight_n > 0:
+                wait = None if deadline is None \
+                    else deadline - time.perf_counter()
+                if wait is not None and wait <= 0:
+                    return False
+                self._idle_cond.wait(wait)
+        return True
+
+    def swap_fns(self, *, encode_fn: Optional[EncodeFn] = None,
+                 search_fn: Optional[SearchFn] = None):
+        """Hot-swap the encode/search stages on a live pipeline.
+
+        The stages read ``self.encode_fn``/``self.search_fn`` afresh for
+        every item, so on a quiesced pipeline (``quiesce() == True`` and
+        no traffic being routed here) the swap is atomic per batch: a
+        request is served entirely by the old program or entirely by the
+        new one, never a mix. Used by the rolling index swap
+        (``launch/lifecycle.py``); warm the new program first
+        (``warmup_replicas``) or the first post-swap batch pays a jit
+        compile on the worker threads.
+        """
+        if encode_fn is not None:
+            self.encode_fn = encode_fn
+        if search_fn is not None:
+            self.search_fn = search_fn
+
+    def new_generation(self) -> int:
+        """Start a fresh stats generation (rolling swap / canary revival).
+
+        A revived replica's throughput and latency must not be conflated
+        with its pre-death run — completed counters fold into lifetime
+        totals and the window/idle accounting resets. Call only on a
+        quiesced pipeline (the scan thread also writes the idle/busy
+        clocks). Returns the new generation number.
+        """
+        with self._record_lock:
+            n_req, n_q, _ = self._stats.snapshot()
+            self._lifetime_requests += n_req
+            self._lifetime_queries += n_q
+            self._lifetime_shed += self._admission.take_shed()
+            self._stats = LatencyStats()
+            self._scan_idle_s = 0.0
+            self._scan_busy_s = 0.0
+            self.generation += 1
+            return self.generation
 
     def close(self, drain: bool = True):
         """Shut the pipeline down; joins both stage threads.
@@ -423,12 +551,20 @@ class ServingPipeline:
             try:
                 vals, ids = jax.block_until_ready((vals, ids))
             except BaseException as e:
-                ticket._resolve(error=e)
+                # Busy-clock write BEFORE the resolve and inside the
+                # lock: the resolve wakes quiesce(), and a generation
+                # rollover must not reset the clock between them.
+                with self._record_lock:
+                    self._scan_busy_s += time.perf_counter() - t0
+                    ticket._resolve(error=e)
                 return
-            finally:
-                self._scan_busy_s += time.perf_counter() - t0
-            if ticket._resolve(value=(vals, ids)):
-                self._stats.record(ticket)
+            self._scan_busy_s += time.perf_counter() - t0
+            # One critical section for resolve + record: the resolve is
+            # what wakes quiesce(), so a generation rollover waiting on
+            # _record_lock cannot slip in before the record.
+            with self._record_lock:
+                if ticket._resolve(value=(vals, ids)):
+                    self._stats.record(ticket)
 
         while True:
             try:
@@ -441,8 +577,14 @@ class ServingPipeline:
                     await_oldest()
                     continue
                 t0 = time.perf_counter()
+                gen0 = self.generation
                 item = self._encoded.get()
-                self._scan_idle_s += time.perf_counter() - t0
+                # An idle wait that spans a new_generation() (the blocked
+                # get sat through a drain/rebuild window) belongs to no
+                # generation: adding it would book the whole swap as the
+                # NEW generation's device idle time.
+                if self.generation == gen0:
+                    self._scan_idle_s += time.perf_counter() - t0
             if item is _SENTINEL:
                 break
             ticket, codes = item
@@ -490,16 +632,31 @@ class ServingPipeline:
         completions (the counters are exact totals) so a long-running
         pipeline's accounting stays O(1) in memory.
         """
-        n_req, n_q, lat = self._stats.snapshot()
+        with self._record_lock:  # one snapshot: a concurrent generation
+            # rollover must not fold the window we just read into
+            # lifetime_* (it would double-count a whole generation)
+            n_req, n_q, lat = self._stats.snapshot()
+            lifetime_req = self._lifetime_requests + n_req
+            lifetime_q = self._lifetime_queries + n_q
+            shed = self.shed_count
+            lifetime_shed = self._lifetime_shed + shed
+            generation = self.generation
+            wall = self._scan_idle_s + self._scan_busy_s
+            idle = self._scan_idle_s
         lat = sorted(lat)
-        wall = self._scan_idle_s + self._scan_busy_s
         return {
+            # Scoped to the CURRENT index generation (post last swap or
+            # revival); pre-swap totals live under lifetime_*.
+            "generation": generation,
             "requests": n_req,
             "queries": n_q,
-            "shed": self.shed_count,
+            "lifetime_requests": lifetime_req,
+            "lifetime_queries": lifetime_q,
+            "shed": shed,
+            "lifetime_shed": lifetime_shed,
             "latency_p50_ms": 1e3 * _percentile(lat, 0.50),
             "latency_p99_ms": 1e3 * _percentile(lat, 0.99),
-            "device_idle_frac": self._scan_idle_s / wall if wall > 0 else 0.0,
+            "device_idle_frac": idle / wall if wall > 0 else 0.0,
         }
 
 

@@ -85,9 +85,19 @@ def _replicated_row(replicas=2, paired_ratio=0.95, **overrides):
         "device_idle_frac": 0.1, "shed": 0, "failovers": 0,
         "per_replica": [
             {"replica": i, "requests": 10, "queries": 100, "shed": 0,
-             "device_idle_frac": 0.1}
+             "device_idle_frac": 0.1, "generation": 0}
             for i in range(replicas)
         ],
+    }
+    row.update(overrides)
+    return row
+
+
+def _swap_row(**overrides):
+    row = {
+        "mode": "swap", "replicas": 2, "index_kind": "flat",
+        "swapped_replicas": 2, "swap_s": 0.5, "queries_during_swap": 128,
+        "lost": 0, "reordered": 0, "bit_identical": True, "revivals": 1,
     }
     row.update(overrides)
     return row
@@ -99,6 +109,7 @@ def _serving_bench(ratio: float, paired_ratio: float = 0.95):
         {"mode": "overlapped", "qps": 1000.0 * ratio},
         _replicated_row(replicas=1, paired_ratio=1.0),
         _replicated_row(paired_ratio=paired_ratio),
+        _swap_row(),
     ]}
 
 
@@ -190,6 +201,142 @@ def test_serving_gate_fails_below_replica_floor(tmp_path):
 def test_serving_gate_replica_floor_is_configurable(tmp_path):
     out = _run_gate(tmp_path, _serving_bench(1.2, paired_ratio=0.8),
                     "--min-replica-ratio", "0.75")
+    assert out.returncode == 0, out.stderr
+
+
+# -- live index lifecycle (swap row) ----------------------------------------
+
+
+def test_serving_gate_requires_a_swap_row(tmp_path):
+    """The rolling-swap exercise is part of the schema now: a report
+    without it (lifecycle emitter regression) must not pass green."""
+    bench = _serving_bench(1.2)
+    bench["rows"] = bench["rows"][:4]  # drop the swap row
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "no 'swap' row" in out.stderr
+
+
+def test_serving_gate_fails_on_malformed_swap_row(tmp_path):
+    bench = _serving_bench(1.2)
+    del bench["rows"][4]["lost"]
+    del bench["rows"][4]["revivals"]
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "missing keys" in out.stderr
+    assert "lost" in out.stderr and "revivals" in out.stderr
+
+
+def test_serving_gate_fails_on_lost_results_during_swap(tmp_path):
+    bench = _serving_bench(1.2)
+    bench["rows"][4] = _swap_row(lost=2)
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "lost 2 result(s)" in out.stderr
+
+
+def test_serving_gate_fails_on_reordered_results_during_swap(tmp_path):
+    bench = _serving_bench(1.2)
+    bench["rows"][4] = _swap_row(reordered=1)
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "reordered 1 result(s)" in out.stderr
+
+
+def test_serving_gate_fails_when_swap_breaks_bit_identity(tmp_path):
+    bench = _serving_bench(1.2)
+    bench["rows"][4] = _swap_row(bit_identical=False)
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "not bit-identical" in out.stderr
+
+
+def test_serving_gate_fails_on_incomplete_rolling_swap(tmp_path):
+    bench = _serving_bench(1.2)
+    bench["rows"][4] = _swap_row(swapped_replicas=1)
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "swapped only 1/2" in out.stderr
+
+
+def test_serving_gate_fails_without_a_revival(tmp_path):
+    bench = _serving_bench(1.2)
+    bench["rows"][4] = _swap_row(revivals=0)
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "no canary revival" in out.stderr
+
+
+def test_serving_gate_fails_on_missing_generation(tmp_path):
+    """A per-replica row without the stats generation (revival/swap
+    bookkeeping) is an incomplete report."""
+    bench = _serving_bench(1.2)
+    del bench["rows"][3]["per_replica"][0]["generation"]
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "generation" in out.stderr
+
+
+# -- docs lint (scripts/check_docs_links.py) ---------------------------------
+
+DOCS_LINT = os.path.join(
+    os.path.dirname(__file__), "..", "scripts", "check_docs_links.py"
+)
+
+
+def _run_docs_lint(repo):
+    return subprocess.run(
+        [sys.executable, DOCS_LINT, str(repo)],
+        capture_output=True, text=True, timeout=60,
+    )
+
+
+def _docs_lint_repo(tmp_path, readme="# hi\n[ok](docs/GOOD.md)\n",
+                    launch_src='"""documented."""\nX = 1\n'):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "GOOD.md").write_text("# good\n")
+    (tmp_path / "README.md").write_text(readme)
+    launch = tmp_path / "src" / "repro" / "launch"
+    launch.mkdir(parents=True)
+    (launch / "mod.py").write_text(launch_src)
+    return tmp_path
+
+
+def test_docs_lint_passes_healthy_repo(tmp_path):
+    repo = _docs_lint_repo(tmp_path)
+    out = _run_docs_lint(repo)
+    assert out.returncode == 0, out.stderr
+
+
+def test_docs_lint_fails_on_broken_relative_link(tmp_path):
+    repo = _docs_lint_repo(tmp_path, readme="[dead](docs/MISSING.md)\n")
+    out = _run_docs_lint(repo)
+    assert out.returncode != 0
+    assert "broken link" in out.stderr and "MISSING.md" in out.stderr
+
+
+def test_docs_lint_ignores_external_links_and_code_blocks(tmp_path):
+    repo = _docs_lint_repo(
+        tmp_path,
+        readme=("[ext](https://example.com/x) [anchor](#sec)\n"
+                "```\n[fake](not/a/file.md)\n```\n"
+                "inline `[q](also/fake.md)` span\n"),
+    )
+    out = _run_docs_lint(repo)
+    assert out.returncode == 0, out.stderr
+
+
+def test_docs_lint_fails_on_undocumented_launch_module(tmp_path):
+    repo = _docs_lint_repo(tmp_path, launch_src="X = 1\n")
+    out = _run_docs_lint(repo)
+    assert out.returncode != 0
+    assert "missing module docstring" in out.stderr
+
+
+def test_docs_lint_passes_this_repo(tmp_path):
+    """The real README/docs/launch tree must satisfy its own lint."""
+    repo = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    out = _run_docs_lint(repo)
     assert out.returncode == 0, out.stderr
 
 
