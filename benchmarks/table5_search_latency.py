@@ -172,29 +172,27 @@ def _swap_revival_row(encode, codes_np, levels: int, batches, pcfg,
     """
     import threading
 
-    from repro.launch import lifecycle, proxy, serving
+    from repro.launch import faults, lifecycle, proxy, serving
 
     snapshot = lifecycle.CorpusSnapshot(codes=codes_np, n_levels=levels)
     builder = lifecycle.FlatBuilder(k=10, backend="xla")
     built = builder.build(snapshot)
-    kill = [False]
-
-    def flaky_search(q):  # replica 1: one injected transient fault
-        if kill[0]:
-            kill[0] = False
-            raise RuntimeError("injected transient fault")
-        return built(q)
+    # replica 1: one injected transient scan fault (the shared fault
+    # vocabulary from launch/faults.py — same plan type the tests and
+    # the chaos row use)
+    flaky = faults.FaultInjector(
+        encode, built, faults.FaultPlan.fail_first(1), name="r1"
+    )
 
     serving.warmup_replicas([(encode, built)], batches)
     reference = serving.serve_sequential(encode, built, batches)
     router = proxy.QueryRouter(
-        proxy.ReplicaSet([(encode, built), (encode, flaky_search)],
+        proxy.ReplicaSet([(encode, built), flaky.pair],
                          config=pcfg, share_device=True),
         policy=router_policy,
     )
     try:
         # phase 1: transient fault -> failover -> canary revival
-        kill[0] = True
         for t in [router.submit(b) for b in batches]:
             t.result(timeout=120)
         if not router.probe(1, batches[0], timeout=120):
@@ -268,6 +266,196 @@ def _swap_revival_row(encode, codes_np, levels: int, batches, pcfg,
         "revivals": int(revivals),
         "version": report.version.tag,
         "generations": [p["generation"] for p in stats["per_replica"]],
+    }
+
+
+def _chaos_row(encode, codes_np, levels: int, batches, pcfg,
+               router_policy: str) -> dict:
+    """Chaos drill: stuck scan + deadlines + degradation, one BENCH row.
+
+    Phase 1 — **stuck scan under traffic**. Replica 0 is wrapped in a
+    seeded ``FaultInjector`` (a few latency spikes, then a scan that
+    hangs instead of raising). The armed watchdogs detect the hang,
+    mark the replica unhealthy, and failover re-dispatches its
+    in-flight tickets to the survivor; after ``release()`` the canary
+    probe loop revives it. The stream keeps flowing throughout via
+    ``submit_with_retry`` with per-query deadlines. Every answered
+    ticket must be bit-identical and in submission order, and
+    ``lost`` must be 0 — a deadline miss or a shed is *accounted*,
+    never silent. ``share_device=False`` deliberately: co-located
+    replicas hold a common scan gate through the scan, so a stuck scan
+    would wedge the survivor too — the drill needs the survivor live.
+
+    Phase 2 — **degradation A/B at equal load**. The same overload
+    (arrivals faster than full-effort service, bounded queues, shed
+    policy) runs twice: once with the effort knob disabled, once with
+    ``enable_degradation``. The knob steps effort down under queue
+    pressure, so the degraded run must shed strictly fewer requests.
+    Effort here maps to a synthetic per-level service time (the real
+    knobs — IVF nprobe, HNSW ef/beam — shift latency the same way but
+    not reproducibly enough on a noisy shared host to gate on).
+
+    The CI gate (`scripts/check_bench_gate.py`) schema-validates this
+    row: ``lost != 0``, a missing ``deadline_violations`` count, no
+    watchdog stall/revival, or degradation shedding *more* than
+    baseline all hard-fail.
+    """
+    import dataclasses
+    import threading
+
+    from repro.launch import faults, lifecycle, proxy, serving
+
+    snapshot = lifecycle.CorpusSnapshot(codes=codes_np, n_levels=levels)
+    built = lifecycle.FlatBuilder(k=10, backend="xla").build(snapshot)
+    serving.warmup_replicas([(encode, built)], batches)
+    reference = serving.serve_sequential(encode, built, batches)
+    n_b = len(batches)
+
+    # ---- phase 1: latency spikes, then a hung (non-raising) scan ----
+    plan = faults.FaultPlan([
+        faults.FaultEvent("delay", stage="search", at=0, count=6, arg=1e-3),
+        faults.FaultEvent("stick", stage="search", at=6),
+    ])
+    inj = faults.FaultInjector(encode, built, plan, name="chaos-r0")
+    chaos_cfg = dataclasses.replace(pcfg, policy="shed")
+    router = proxy.QueryRouter(
+        proxy.ReplicaSet([inj.pair, (encode, built)],
+                         config=chaos_cfg, share_device=False),
+        policy=router_policy,
+    )
+    stream = batches * 3
+    tickets: list = []
+    try:
+        router.start_watchdogs(0.25)
+
+        def feeder():
+            for b in stream:
+                tickets.append(router.submit_with_retry(
+                    b, deadline=time.perf_counter() + 30.0,
+                    attempts=2000, base_delay_s=1e-3, max_delay_s=5e-3,
+                ))
+
+        th = threading.Thread(target=feeder)
+        th.start()
+        # watchdog fires -> replica 0 leaves rotation (in-flight work
+        # fails over); then the hang "clears" and the probe loop revives
+        if not router.wait_state(0, ("unhealthy",), timeout=60.0):
+            raise RuntimeError("watchdog never marked the stuck replica")
+        t_fault = time.perf_counter()
+        inj.release()
+        router.start_health_probe(batches[0], interval=0.05)
+        if not router.wait_state(0, ("healthy",), timeout=60.0):
+            raise RuntimeError("probe never revived the released replica")
+        t_recover = time.perf_counter()
+        th.join()
+
+        lost = 0
+        deadline_violations = 0
+        results = []
+        for t in tickets:
+            try:
+                results.append(t.result(timeout=120))
+            except serving.DeadlineExpired:
+                deadline_violations += 1
+                results.append(None)
+            except BaseException:
+                lost += 1
+                results.append(None)
+        lost += len(stream) - len(tickets)
+        deadline_violations += sum(
+            1 for t in tickets
+            if t.deadline is not None and t.t_reply is not None
+            and t.t_reply > t.deadline
+        )
+        # a pair of born-expired requests: the deadline path must shed
+        # them at submit (counted, not lost, no replica blamed)
+        for _ in range(2):
+            try:
+                router.submit(batches[0],
+                              deadline=time.perf_counter() - 1.0)
+            except serving.DeadlineExpired:
+                pass
+        stats = router.stats()
+        deadline_violations += int(stats["deadline_expired"])
+
+        def eq(r, ref):
+            return (r is not None
+                    and np.array_equal(np.asarray(r[1]), np.asarray(ref[1]))
+                    and np.array_equal(np.asarray(r[0]), np.asarray(ref[0])))
+
+        answered = [i for i, r in enumerate(results) if r is not None]
+        mismatched = [i for i in answered
+                      if not eq(results[i], reference[i % n_b])]
+        reordered = sum(
+            1 for i in mismatched
+            if any(eq(results[i], reference[j]) for j in range(n_b)
+                   if j != i % n_b)
+        )
+    finally:
+        inj.release()  # idempotent; close() joins the scan threads
+        router.close()
+
+    # ---- phase 2: equal overload, degradation off vs on ----
+    # Service time per effort level; arrivals outpace level-0 service
+    # across both replicas, so the bounded queues must shed — unless
+    # the knob steps effort down.
+    delay_by_level = (0.010, 0.003, 0.0005)
+    arrival_s = 0.003
+    n_load = 120
+    load_cfg = dataclasses.replace(pcfg, queue_depth=2, policy="shed")
+
+    def load_run(degrade: bool):
+        knob = proxy.EffortKnob(len(delay_by_level))
+
+        def slow_search(q):
+            time.sleep(delay_by_level[min(knob.level,
+                                          len(delay_by_level) - 1)])
+            return built(q)
+
+        r = proxy.QueryRouter(
+            proxy.ReplicaSet([(encode, slow_search)] * 2,
+                             config=load_cfg, share_device=False),
+            policy=router_policy,
+        )
+        shed = lost = 0
+        pending = []
+        try:
+            if degrade:
+                r.enable_degradation(knob, high_water=0.5, low_water=0.0)
+            for i in range(n_load):
+                try:
+                    pending.append(r.submit(batches[i % n_b]))
+                except serving.RequestShed:
+                    shed += 1
+                time.sleep(arrival_s)
+            for t in pending:
+                try:
+                    t.result(timeout=120)
+                except BaseException:
+                    lost += 1
+            s = r.stats()
+        finally:
+            r.close()
+        frac = s["degraded"] / max(1, s["requests"])
+        return shed, lost, frac
+
+    shed_off, lost_off, _ = load_run(degrade=False)
+    shed_on, lost_on, degraded_frac = load_run(degrade=True)
+
+    return {
+        "mode": "chaos", "replicas": 2, "index_kind": "flat",
+        "submitted": len(stream) + 2 * n_load,
+        "lost": int(lost + lost_off + lost_on),
+        "reordered": int(reordered),
+        "bit_identical": not mismatched,
+        "deadline_violations": int(deadline_violations),
+        "watchdog_stalls": int(stats["watchdog_stalls"]),
+        "failovers": int(stats["failovers"]),
+        "revivals": int(stats["revivals"]),
+        "time_to_recover_s": float(t_recover - t_fault),
+        "shed_without_degradation": int(shed_off),
+        "shed_with_degradation": int(shed_on),
+        "degraded_frac": float(degraded_frac),
     }
 
 
@@ -460,6 +648,9 @@ def emit_serving_json(path: str = BENCH_SERVING_JSON, n_docs: int = 50_000,
     rows.append(_swap_revival_row(
         encode, np.asarray(cd), levels, batches, pcfg, router
     ))
+    rows.append(_chaos_row(
+        encode, np.asarray(cd), levels, batches, pcfg, router
+    ))
 
     out = {
         "bench": "serving",
@@ -492,12 +683,20 @@ def emit_serving_json(path: str = BENCH_SERVING_JSON, n_docs: int = 50_000,
         print(f"replicated(x{n})/replicated(x1) QPS ratio: "
               f"{repl_ratio[n]:.3f} best-paired-trial "
               f"({repl_ratio_med[n]:.3f} median, {router})")
-    sw = rows[-1]
+    sw, ch = rows[-2], rows[-1]
     print(f"rolling swap ({sw['index_kind']}): {sw['swapped_replicas']} "
           f"replica(s) in {1e3 * sw['swap_s']:.0f} ms under traffic, "
           f"{sw['queries_during_swap']} queries served mid-swap, "
           f"lost={sw['lost']} reordered={sw['reordered']} "
           f"bit_identical={sw['bit_identical']} revivals={sw['revivals']}")
+    print(f"chaos drill: stuck scan detected in "
+          f"{1e3 * ch['time_to_recover_s']:.0f} ms to revival "
+          f"(stalls={ch['watchdog_stalls']} failovers={ch['failovers']} "
+          f"revivals={ch['revivals']}), lost={ch['lost']} "
+          f"deadline_violations={ch['deadline_violations']}, "
+          f"shed {ch['shed_without_degradation']} -> "
+          f"{ch['shed_with_degradation']} with degradation "
+          f"({100 * ch['degraded_frac']:.0f}% degraded dispatches)")
     return out
 
 

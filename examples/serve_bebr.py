@@ -39,7 +39,7 @@ import numpy as np
 from repro.core import BinarizerConfig, binarize_lib, init_binarizer, pack_codes
 from repro.data.synthetic import clustered_corpus
 from repro.kernels.sdc import ref as R
-from repro.launch import lifecycle, proxy, serving
+from repro.launch import faults, lifecycle, proxy, serving
 from repro.launch.mesh import make_replica_meshes
 
 
@@ -60,6 +60,12 @@ def main():
     ap.add_argument("--probe-every", type=float, default=0.0, metavar="S",
                     help="period (s) of the router's canary health "
                          "re-probe; revives unhealthy replicas; 0 off")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="deterministic fault injection on the replica "
+                         "fns (launch/faults.py grammar), e.g. "
+                         "'r0.search.fail@3' — pair with --probe-every "
+                         "to watch failover + revival on the sharded "
+                         "tier")
     args = ap.parse_args()
     if N_DEVICES % args.replicas:
         ap.error(f"--replicas must divide {N_DEVICES}")
@@ -119,6 +125,11 @@ def main():
     t0 = time.time()
     serving.serve_sequential(enc0, search0, stream)
     dt_seq = time.time() - t0
+    # Chaos wrapping AFTER warmup and the sequential baseline: the fault
+    # schedule is a function of the call index, so earlier traffic must
+    # not consume it — and the faults target the ROUTED tier, not the
+    # un-routed reference leg.
+    replica_fns, injectors = faults.apply_chaos(replica_fns, args.chaos)
     t0 = time.time()
     # share_device stays False: the submeshes model disjoint production
     # hardware (where replica scans genuinely run in parallel). The 8
@@ -143,6 +154,8 @@ def main():
         router, stream, controller=controller, snapshot=snapshot,
         swap_after=args.swap_after,
     )
+    for inj in injectors.values():
+        inj.release()  # a still-stuck scan would wedge close()'s joins
     router.close()
     stats = router.stats()
     dt = time.time() - t0
@@ -180,6 +193,9 @@ def main():
     if args.probe_every:
         print(f"canary re-probe every {args.probe_every}s: "
               f"{stats['revivals']} revival(s)")
+    for i, inj in sorted(injectors.items()):
+        fired = ", ".join(f"{s}#{n}:{k}" for s, n, k in inj.log) or "none"
+        print(f"chaos replica {i}: {len(inj.log)} fault(s) fired ({fired})")
     packed = (code * levels + 7) // 8 + 4
     print(f"index bytes: {d_codes.shape[0]*packed/2**20:.1f} MiB vs "
           f"float {docs.nbytes/2**20:.1f} MiB")

@@ -49,6 +49,15 @@ the sequential loop, when the rolling swap did not cover every replica,
 or when no revival was recorded. Per-replica rows must also carry the
 stats ``generation`` (bumped on every swap/revival so a revived
 replica's counters are not conflated with its previous run).
+
+The chaos drill ("chaos" row, added with launch/faults.py) extends the
+same correctness treatment to the robustness machinery: a stuck
+(non-raising) scan must be caught by the watchdog and survived with
+zero lost results, per-query deadline misses must be *counted*
+(``deadline_violations`` present — an accounting hole is a hard fail
+even at zero misses), a revival must follow the stall clearing, and
+the degradation A/B at equal overload must shed strictly fewer
+requests with the effort knob enabled than without it.
 """
 
 from __future__ import annotations
@@ -82,6 +91,55 @@ SWAP_ROW_KEYS = (
     "replicas", "index_kind", "swapped_replicas", "swap_s",
     "queries_during_swap", "lost", "reordered", "bit_identical", "revivals",
 )
+
+# Chaos drill row (added with launch/faults.py): a stuck (non-raising)
+# scan under traffic + per-query deadlines + the degradation A/B. Like
+# the swap row it is a CORRECTNESS record: lost results, a missing
+# deadline accounting, an undetected stall, a missing revival, or a
+# degradation run that sheds MORE than its baseline all hard-fail.
+CHAOS_ROW_KEYS = (
+    "replicas", "lost", "reordered", "bit_identical",
+    "deadline_violations", "watchdog_stalls", "failovers", "revivals",
+    "time_to_recover_s", "shed_without_degradation",
+    "shed_with_degradation", "degraded_frac",
+)
+
+
+def _check_chaos_row(row: dict, label: str) -> int:
+    errors = 0
+    missing = [k for k in CHAOS_ROW_KEYS if k not in row or row[k] is None]
+    if missing:
+        print(f"serving gate: {label} missing keys {missing}",
+              file=sys.stderr)
+        return errors + 1  # can't judge an incomplete row further
+    if row["lost"] != 0:
+        print(f"serving gate: {label} lost {row['lost']} result(s) — every "
+              "request must resolve or be accounted (shed/deadline)",
+              file=sys.stderr)
+        errors += 1
+    if row["reordered"] != 0:
+        print(f"serving gate: {label} reordered {row['reordered']} "
+              "result(s) across the stall failover", file=sys.stderr)
+        errors += 1
+    if row["bit_identical"] is not True:
+        print(f"serving gate: {label} answered results not bit-identical "
+              "to the sequential loop", file=sys.stderr)
+        errors += 1
+    if row["watchdog_stalls"] < 1:
+        print(f"serving gate: {label} watchdog never detected the injected "
+              "stuck scan", file=sys.stderr)
+        errors += 1
+    if row["revivals"] < 1:
+        print(f"serving gate: {label} recorded no revival after the stall "
+              "cleared", file=sys.stderr)
+        errors += 1
+    if row["shed_with_degradation"] >= row["shed_without_degradation"]:
+        print(f"serving gate: {label} degradation did not reduce shedding "
+              f"({row['shed_with_degradation']} with vs "
+              f"{row['shed_without_degradation']} without at equal load)",
+              file=sys.stderr)
+        errors += 1
+    return errors
 
 
 def _check_swap_row(row: dict, label: str) -> int:
@@ -202,6 +260,21 @@ def check_serving(bench: dict, min_ratio: float,
                   f"reordered={r.get('reordered')},"
                   f"bit_identical={r.get('bit_identical')},"
                   f"revivals={r.get('revivals')}")
+    chaos_rows = [r for r in rows if r.get("mode") == "chaos"]
+    if not chaos_rows:
+        print("serving gate: no 'chaos' row — the fault-injection drill "
+              "(stuck scan + deadlines + degradation, launch/faults.py) "
+              "must be exercised and emitted", file=sys.stderr)
+        return 1
+    for r in chaos_rows:
+        failures += _check_chaos_row(r, "chaos row")
+        if "lost" in r:
+            print(f"chaos,lost={r.get('lost')},"
+                  f"deadline_violations={r.get('deadline_violations')},"
+                  f"stalls={r.get('watchdog_stalls')},"
+                  f"revivals={r.get('revivals')},"
+                  f"shed={r.get('shed_without_degradation')}->"
+                  f"{r.get('shed_with_degradation')}")
     for r in replicated:
         label = f"replicated row (replicas={r.get('replicas')})"
         failures += _check_replicated_schema(r, label)

@@ -540,6 +540,7 @@ def hnsw_search_from_snapshot(
     seed: int = 0,
     packed: bool = False,
     backend: str = "xla",
+    effort=None,
 ):
     """Rebuild-from-snapshot entry point (live index lifecycle).
 
@@ -549,6 +550,14 @@ def hnsw_search_from_snapshot(
     the rolling swap (``launch/lifecycle.RollingSwapController``).
     Deterministic: the insertion order derives from ``seed``, so the
     same snapshot + params rebuild bit-identically.
+
+    ``effort`` is an optional shared knob (any object with an int
+    ``level`` attribute, 0 = full effort — ``launch.proxy.EffortKnob``)
+    read per call: level L serves with ``max(k, ef >> L)`` /
+    ``max(1, beam >> L)``, the graph search's cost knobs, so the router
+    can degrade recall gracefully under pressure. Level 0 is
+    bit-identical to ``effort=None``; each level is its own jit program
+    shape (ef/beam are static), so warm the degraded levels too.
     """
     from repro.kernels.sdc import ref as _ref  # lazy: ref is build-time only
 
@@ -559,9 +568,21 @@ def hnsw_search_from_snapshot(
         ef_construction=ef_construction, seed=seed, packed=packed,
     )
     tables = prepare_batched(graph)
-    return lambda q: search_hnsw_batched(
-        tables, q, k=k, ef=ef, beam=beam, max_hops=max_hops, backend=backend
-    )
+    if effort is None:
+        return lambda q: search_hnsw_batched(
+            tables, q, k=k, ef=ef, beam=beam, max_hops=max_hops,
+            backend=backend,
+        )
+
+    def fn(q):
+        level = max(0, int(effort.level))
+        return search_hnsw_batched(
+            tables, q, k=k, ef=max(k, ef >> level),
+            beam=max(1, beam >> level), max_hops=max_hops, backend=backend,
+        )
+
+    fn.effort = effort
+    return fn
 
 
 # ---------------------------------------------------------------------------

@@ -215,6 +215,7 @@ def ivf_search_from_snapshot(
     packed: bool = False,
     backend: str = "xla",
     coarse_sdc: bool = False,
+    effort=None,
 ):
     """Rebuild-from-snapshot entry point (live index lifecycle).
 
@@ -223,15 +224,36 @@ def ivf_search_from_snapshot(
     (``launch/lifecycle.RollingSwapController``). Deterministic: the
     k-means key derives from ``seed``, so the same snapshot + params
     rebuild bit-identically.
+
+    ``effort`` is an optional shared knob (any object with an int
+    ``level`` attribute, 0 = full effort — ``launch.proxy.EffortKnob``)
+    read per call: level L serves with ``max(1, nprobe >> L)`` probes,
+    so the router can trade recall for latency under pressure without
+    touching the closure. Level 0 is bit-identical to ``effort=None``.
+    Each distinct effective nprobe is its own jit program (nprobe is
+    static): warm the degraded levels or the first degraded batch pays
+    a compile.
     """
     index = build_ivf(
         jax.random.PRNGKey(seed), jnp.asarray(codes), n_levels=n_levels,
         nlist=nlist, kmeans_iters=kmeans_iters, max_len=max_len,
         headroom=headroom, packed=packed,
     )
-    return lambda q: search(
-        index, q, nprobe=nprobe, k=k, coarse_sdc=coarse_sdc, backend=backend
-    )
+    if effort is None:
+        return lambda q: search(
+            index, q, nprobe=nprobe, k=k, coarse_sdc=coarse_sdc,
+            backend=backend,
+        )
+
+    def fn(q):
+        level = max(0, int(effort.level))
+        return search(
+            index, q, nprobe=max(1, nprobe >> level), k=k,
+            coarse_sdc=coarse_sdc, backend=backend,
+        )
+
+    fn.effort = effort
+    return fn
 
 
 def search(

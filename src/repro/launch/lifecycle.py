@@ -59,7 +59,12 @@ import numpy as np
 
 from repro.launch import serving
 from repro.launch.proxy import AllReplicasDown, QueryRouter
-from repro.launch.serving import EncodeFn, RequestShed, SearchFn
+from repro.launch.serving import (
+    DeadlineExpired,
+    EncodeFn,
+    RequestShed,
+    SearchFn,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -430,13 +435,18 @@ class RollingSwapController:
                         "(another controller owns it)"
                     )
                 if st == "probing":
-                    # the probe resolves to healthy or unhealthy shortly
-                    if time.perf_counter() >= deadline:
+                    # The probe resolves to healthy or unhealthy shortly:
+                    # condition-wait on the state machine (woken by the
+                    # transition itself) instead of sleep-polling.
+                    remaining = deadline - time.perf_counter()
+                    if remaining <= 0 or not router.wait_state(
+                        replica, ("healthy", "unhealthy"),
+                        timeout=remaining,
+                    ):
                         raise SwapFailed(
                             f"replica {replica} still probing after "
                             f"{self.drain_timeout}s"
                         )
-                    time.sleep(0.01)
                     continue
                 if st == "healthy":
                     router.drain(replica, timeout=self.drain_timeout)
@@ -534,6 +544,7 @@ def run_stream_with_swap(
     snapshot: Optional[CorpusSnapshot] = None,
     swap_after: int = 0,
     shed_retry_s: float = 1e-3,
+    deadline_s: Optional[float] = None,
 ) -> Tuple[List[Any], Optional[SwapReport]]:
     """Drive a query stream through the tier, optionally swapping mid-way.
 
@@ -546,6 +557,11 @@ def run_stream_with_swap(
     resolved. A failed swap that downs the tier mid-stream surfaces the
     swap's own error (the root cause), not the ``AllReplicasDown`` /
     ticket errors it triggered. Returns ``(results, SwapReport | None)``.
+
+    ``deadline_s`` gives every batch a per-query deadline that many
+    seconds after its first submit attempt; a batch the tier sheds as
+    expired lands as ``None`` in the results (the stream keeps going —
+    a missed budget is an answer, not a tier failure).
     """
     if controller is not None and swap_after and swap_after >= len(stream):
         # Misconfiguration, not a quiet no-op — and caught BEFORE the
@@ -570,9 +586,16 @@ def run_stream_with_swap(
                 and n_submitted == swap_after:
             swap_thread = threading.Thread(target=run_swap, daemon=True)
             swap_thread.start()
+        deadline = (
+            None if deadline_s is None
+            else time.perf_counter() + deadline_s
+        )
         while downstream_error is None:
             try:
-                tickets.append(router.submit(batch))
+                tickets.append(router.submit(batch, deadline=deadline))
+                break
+            except DeadlineExpired:
+                tickets.append(None)  # budget spent waiting out sheds
                 break
             except RequestShed:
                 time.sleep(shed_retry_s)
@@ -582,7 +605,16 @@ def run_stream_with_swap(
             break
     results = []
     try:
-        results = [t.result() for t in tickets]
+        for t in tickets:
+            if t is None:
+                results.append(None)
+                continue
+            try:
+                results.append(t.result())
+            except DeadlineExpired:
+                if deadline_s is None:
+                    raise  # caller-provided deadlines surface as errors
+                results.append(None)  # a missed budget, not a failure
     except BaseException as e:
         downstream_error = downstream_error or e
     if swap_thread is not None:

@@ -64,11 +64,34 @@ Invariants (relied on by ``tests/test_proxy_router.py`` and
     exactly once (the router is the only resolver); a failover or drain
     re-dispatch racing a late success never clobbers a stored result.
   * **Admitted is never dropped** — failover and drain re-dispatch with
-    ``force_block``; only ``submit`` itself may shed.
+    ``force_block``; only ``submit`` itself may shed (or a deadline
+    expire — the client's budget, not the tier's choice).
+
+On top of routing and failover sits the robustness layer:
+
+  * **deadlines** — ``submit(..., deadline=...)`` threads a per-query
+    budget down to the replica stages, which shed expired batches at
+    dequeue (``DeadlineExpired``, counted apart from queue sheds, and
+    never treated as a replica failure);
+  * **stuck-scan watchdogs** — ``start_watchdogs(budget_s)`` puts a
+    monitor on every replica pipeline; a scan that hangs (instead of
+    raising) past its budget marks the replica unhealthy with
+    ``ScanStalled`` and the ordinary failover path re-dispatches its
+    in-flight work — a hung replica no longer deadlocks the tier;
+  * **graceful degradation** — ``enable_degradation(knob)`` steps a
+    shared ``EffortKnob`` down (HNSW ef/beam, IVF nprobe) under queue
+    pressure or near-deadline *before* any query is shed, and back up
+    when pressure clears; degraded dispatches are counted per replica;
+  * **retry + flap suppression** — ``submit_with_retry`` backs off
+    (exponential + seeded jitter) on retryable ``RequestShed``; the
+    health-probe loop backs off probing a replica whose revivals keep
+    failing (``probe_backoff``) so a flapper cannot monopolise it.
 """
 
 from __future__ import annotations
 
+import logging
+import random
 import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
@@ -77,16 +100,20 @@ import numpy as np
 
 from repro.launch.serving import (
     Array,
+    DeadlineExpired,
     EncodeFn,
     LatencyStats,
     PipelineClosed,
     RequestShed,
+    ScanStalled,
     SearchFn,
     ServingConfig,
     ServingPipeline,
     Ticket,
     _percentile,
 )
+
+logger = logging.getLogger(__name__)
 
 
 class AllReplicasDown(RuntimeError):
@@ -133,6 +160,80 @@ ROUTING_POLICIES = {
     RoundRobin.name: RoundRobin,
     LeastOutstanding.name: LeastOutstanding,
 }
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation
+# ---------------------------------------------------------------------------
+
+
+class EffortKnob:
+    """Shared mutable search-effort level: 0 = full effort, each step up
+    trades recall for latency.
+
+    The index closures read ``knob.level`` per call (``ivf_search_from_
+    snapshot(..., effort=knob)`` halves nprobe per level;
+    ``hnsw_search_from_snapshot`` halves ef and beam), and the router
+    steps the SAME knob object down under pressure and back up when it
+    clears — degrade-before-shed. Thread-safe; reads are a bare int
+    load so the hot search path pays nothing.
+
+    Each effort level is its own jit program shape (nprobe/ef/beam are
+    static), so the first batch served at a fresh level pays a compile;
+    keep ``n_levels`` small (2-3 steps is plenty).
+    """
+
+    def __init__(self, n_levels: int = 3):
+        if n_levels < 1:
+            raise ValueError(f"EffortKnob needs n_levels >= 1, got {n_levels}")
+        self.max_level = n_levels - 1
+        self._lock = threading.Lock()
+        self._level = 0
+        self.degrade_count = 0
+        self.restore_count = 0
+
+    @property
+    def level(self) -> int:
+        return self._level
+
+    def degrade(self) -> bool:
+        """Step effort down one level; False when already at the floor."""
+        with self._lock:
+            if self._level >= self.max_level:
+                return False
+            self._level += 1
+            self.degrade_count += 1
+            return True
+
+    def restore(self) -> bool:
+        """Step effort back up one level; False when already at full."""
+        with self._lock:
+            if self._level <= 0:
+                return False
+            self._level -= 1
+            self.restore_count += 1
+            return True
+
+    def reset(self) -> None:
+        with self._lock:
+            self._level = 0
+
+
+def probe_backoff(interval: float, consecutive_failures: int,
+                  *, cap_factor: float = 16.0) -> float:
+    """Extra wait before re-probing a replica that failed its last
+    ``consecutive_failures`` revival probes: ``interval * 2^(n-1)``,
+    capped at ``cap_factor * interval``.
+
+    Flap suppression: a replica that keeps failing its canary gets
+    probed at 1x, 2x, 4x, ... the base interval instead of every tick —
+    a permanently dead (or flapping) replica stops monopolising the
+    probe loop, while the first retry is as fast as ever.
+    """
+    if consecutive_failures <= 0:
+        return 0.0
+    return interval * min(cap_factor,
+                          2.0 ** (consecutive_failures - 1))
 
 
 # ---------------------------------------------------------------------------
@@ -212,8 +313,10 @@ class ProxyTicket(Ticket):
     proxy path, failover retries included.
     """
 
-    def __init__(self, seq: int, queries: Any):
-        super().__init__(seq, int(getattr(queries, "shape", (1,))[0]))
+    def __init__(self, seq: int, queries: Any,
+                 deadline: Optional[float] = None):
+        super().__init__(seq, int(getattr(queries, "shape", (1,))[0]),
+                         deadline=deadline)
         self.queries = queries  # retained for failover re-dispatch
         self._route_lock = threading.Lock()
         self._inner: Optional[Ticket] = None
@@ -266,6 +369,11 @@ class QueryRouter:
                 ) from None
         self.policy = policy
         self._lock = threading.Lock()
+        # Wakes drain()/wait_state() waiters: notified on every health-
+        # state transition and whenever a replica's outstanding set
+        # shrinks — drains complete the instant the last ticket lands,
+        # not on the next poll tick.
+        self._cond = threading.Condition(self._lock)
         self._seq = 0
         self._closed = False
         # _healthy is the ROUTABLE set; _state carries the full health
@@ -282,6 +390,22 @@ class QueryRouter:
         self.shed_count = 0  # proxy-level: every healthy replica was full
         self.failover_count = 0  # tickets re-dispatched off a dead replica
         self.revival_count = 0  # unhealthy replicas re-admitted by a probe
+        # Deadline sheds observed at the proxy (expired before dispatch);
+        # the per-replica pipelines count their own dequeue-time sheds.
+        self._deadline_expired = 0
+        # Graceful degradation (enable_degradation): a shared EffortKnob
+        # the index closures read per call, stepped down under pressure
+        # before any shed, back up when pressure clears.
+        self._effort: Optional[EffortKnob] = None
+        self._degrade_hi = 0.75
+        self._degrade_lo = 0.25
+        self._near_deadline_s = 0.0
+        self._degraded: Dict[int, int] = {
+            i: 0 for i in range(len(replicas))
+        }
+        # Consecutive failed revival probes per replica (flap
+        # suppression state; reset on a successful probe).
+        self._probe_failures: Dict[int, int] = {}
         # Failover tickets caught while the tier is transiently
         # unroutable (a drain/rebuild/probe holds every replica): parked
         # here, flushed by the next successful probe. Never spun on —
@@ -306,15 +430,27 @@ class QueryRouter:
         counts = {i: len(self._outstanding[i]) for i in healthy}
         return self.policy.order(healthy, counts)
 
-    def submit(self, queries: Any) -> ProxyTicket:
+    def submit(self, queries: Any, *,
+               deadline: Optional[float] = None) -> ProxyTicket:
         """Admit one batch into the tier; returns a ``ProxyTicket``.
 
         Replicas are tried in policy order. Under ``policy="block"``
         pipelines the first choice back-pressures (no fallback — the
         caller asked for back-pressure); under ``policy="shed"`` a full
         replica queue falls through to the next, and ``RequestShed`` is
-        raised only when **every** healthy replica is saturated.
+        raised only when **every** healthy replica is saturated — after
+        one degrade-and-retry pass when degradation is enabled
+        (effort steps down BEFORE any query is shed).
+
+        ``deadline`` (absolute ``time.perf_counter()`` instant) rides
+        the ticket down to the replica stages, which shed it at dequeue
+        once expired. An already-expired deadline raises
+        ``DeadlineExpired`` here — terminal, not retryable.
         """
+        if deadline is not None and time.perf_counter() >= deadline:
+            with self._lock:
+                self._deadline_expired += 1
+            raise DeadlineExpired("deadline already expired at submit")
         with self._lock:
             if self._closed:
                 raise PipelineClosed("submit after close")
@@ -328,27 +464,135 @@ class QueryRouter:
                 raise RequestShed(
                     "no routable replica (index swap or probe in progress)"
                 )
+            self._adjust_effort_locked(deadline)
             order = self._order()
             seq = self._seq
             self._seq += 1
-        ticket = ProxyTicket(seq, queries)
+        ticket = ProxyTicket(seq, queries, deadline=deadline)
         shed_error: Optional[RequestShed] = None
-        for replica in order:
-            try:
-                self._dispatch(ticket, replica)
-                return ticket
-            except RequestShed as e:
-                shed_error = e
-                continue
-            except PipelineClosed:
-                continue  # replica torn down under us; try the next
-        if shed_error is None:
-            raise PipelineClosed("every healthy replica is closed")
+        for attempt in (0, 1):
+            for replica in order:
+                try:
+                    self._dispatch(ticket, replica)
+                    return ticket
+                except RequestShed as e:
+                    shed_error = e
+                    continue
+                except PipelineClosed:
+                    continue  # replica torn down under us; try the next
+            if shed_error is None:
+                raise PipelineClosed("every healthy replica is closed")
+            # Every healthy replica is saturated: degrade-before-shed.
+            # Step the knob down once and retry — cheaper scans drain
+            # the queues; the shed only happens when the knob is already
+            # at its floor (or degradation is off).
+            if attempt == 0 and self._effort is not None \
+                    and self._effort.degrade():
+                with self._lock:
+                    order = self._order() if self._healthy else []
+                if order:
+                    continue
+            break
         with self._lock:
             self.shed_count += 1
         raise RequestShed(
-            f"all {len(order)} healthy replicas saturated"
+            "all healthy replicas saturated"
         ) from shed_error
+
+    def _adjust_effort_locked(self, deadline: Optional[float]) -> None:
+        """Step the effort knob against current pressure (lock held).
+
+        Pressure = outstanding tickets / tier queue capacity over the
+        routable replicas. >= high water (or a near-deadline submit):
+        degrade one level. <= low water: restore one level — hysteresis,
+        so the knob does not thrash around a single threshold.
+        """
+        if self._effort is None or not self._healthy:
+            return
+        cap = len(self._healthy) * max(1, self.replicas.config.queue_depth)
+        load = sum(len(self._outstanding[i]) for i in self._healthy)
+        pressure = load / cap
+        near = (
+            deadline is not None
+            and self._near_deadline_s > 0.0
+            and deadline - time.perf_counter() < self._near_deadline_s
+        )
+        if pressure >= self._degrade_hi or near:
+            self._effort.degrade()
+        elif pressure <= self._degrade_lo:
+            self._effort.restore()
+
+    def enable_degradation(self, effort: EffortKnob, *,
+                           high_water: float = 0.75,
+                           low_water: float = 0.25,
+                           near_deadline_s: float = 0.0) -> None:
+        """Turn on degrade-before-shed with ``effort`` (the SAME knob
+        object the replica search closures were built over).
+
+        Every submit re-evaluates queue pressure: >= ``high_water`` of
+        tier capacity (or a deadline within ``near_deadline_s``) steps
+        effort down; <= ``low_water`` steps it back up. A submit that
+        would otherwise shed (every queue full) also degrades once and
+        retries before giving up. Dispatches served at level > 0 are
+        counted per replica (``degraded`` in stats).
+        """
+        if not 0.0 <= low_water < high_water <= 1.0:
+            raise ValueError(
+                f"need 0 <= low_water < high_water <= 1, got "
+                f"{low_water}/{high_water}"
+            )
+        with self._lock:
+            self._effort = effort
+            self._degrade_hi = high_water
+            self._degrade_lo = low_water
+            self._near_deadline_s = near_deadline_s
+
+    def submit_with_retry(
+        self,
+        queries: Any,
+        *,
+        deadline: Optional[float] = None,
+        attempts: int = 6,
+        base_delay_s: float = 0.005,
+        max_delay_s: float = 0.25,
+        jitter: float = 0.5,
+        rng: Optional[random.Random] = None,
+    ) -> ProxyTicket:
+        """``submit`` with exponential backoff + jitter on retryable
+        ``RequestShed`` (saturated tier, or a swap/probe transiently
+        holding every replica).
+
+        Terminal errors — ``AllReplicasDown``, ``PipelineClosed``,
+        ``DeadlineExpired`` — propagate immediately; a deadline that
+        expires *between* attempts cuts the retry loop short the same
+        way. ``rng`` seeds the jitter (defaults to a fresh
+        ``random.Random(0)``: deterministic, but pass a shared seeded
+        instance when many clients retry in lockstep — identical jitter
+        defeats its purpose).
+        """
+        if attempts < 1:
+            raise ValueError(f"attempts must be >= 1, got {attempts}")
+        rng = rng if rng is not None else random.Random(0)
+        last: Optional[RequestShed] = None
+        for attempt in range(attempts):
+            try:
+                return self.submit(queries, deadline=deadline)
+            except RequestShed as e:
+                last = e
+                if attempt == attempts - 1:
+                    break
+                delay = min(max_delay_s, base_delay_s * (2.0 ** attempt))
+                delay *= 1.0 + jitter * rng.random()
+                if deadline is not None \
+                        and time.perf_counter() + delay >= deadline:
+                    with self._lock:
+                        self._deadline_expired += 1
+                    raise DeadlineExpired(
+                        f"deadline would expire during retry backoff "
+                        f"(attempt {attempt + 1}/{attempts})"
+                    ) from e
+                time.sleep(delay)
+        raise last
 
     def _dispatch(self, ticket: ProxyTicket, replica: int, *, force: bool = False):
         queries = ticket.queries
@@ -372,12 +616,18 @@ class QueryRouter:
                     f"({self._state[replica]}) before dispatch"
                 )
             self._outstanding[replica].add(ticket)
+            degraded = self._effort is not None and self._effort.level > 0
         try:
-            inner = pipe.submit(queries, force_block=force)  # may shed
+            inner = pipe.submit(queries, force_block=force,
+                                deadline=ticket.deadline)  # may shed
         except BaseException:
             with self._lock:
                 self._outstanding[replica].discard(ticket)
+                self._cond.notify_all()
             raise
+        if degraded:
+            with self._lock:
+                self._degraded[replica] += 1
         ticket._point_at(replica, inner)
         inner.add_done_callback(
             lambda t, tk=ticket, r=replica: self._on_inner_done(tk, r, t)
@@ -393,13 +643,25 @@ class QueryRouter:
         if err is None:
             with self._lock:
                 self._outstanding[replica].discard(ticket)
+                self._cond.notify_all()
             if ticket._resolve(value=inner.result()):
                 self._stats.record(ticket)
+            return
+        if isinstance(err, DeadlineExpired):
+            # The client's budget ran out while the batch sat queued —
+            # the replica is fine. No failover (re-dispatching expired
+            # work wastes a survivor's time), no health transition; the
+            # pipeline already counted it.
+            with self._lock:
+                self._outstanding[replica].discard(ticket)
+                self._cond.notify_all()
+            ticket._resolve(error=err)
             return
         if isinstance(err, PipelineClosed):
             # Torn down by close(), not a scan failure: propagate.
             with self._lock:
                 self._outstanding[replica].discard(ticket)
+                self._cond.notify_all()
             ticket._resolve(error=err)
             return
         # Encode/scan failure: eager failover — the moment the replica
@@ -412,6 +674,7 @@ class QueryRouter:
             straggler = ticket in self._outstanding[replica]
             if straggler:
                 self._outstanding[replica].discard(ticket)
+                self._cond.notify_all()
                 self.failover_count += 1  # missed the sweep, same fate
         if straggler:
             self._redispatch(ticket, err)
@@ -429,6 +692,7 @@ class QueryRouter:
             victims = sorted(self._outstanding[replica], key=lambda t: t.seq)
             self._outstanding[replica] = set()
             self.failover_count += len(victims)
+            self._cond.notify_all()
         self._fail_parked_if_tier_down()
         for ticket in victims:
             self._redispatch(ticket, error)
@@ -464,6 +728,7 @@ class QueryRouter:
                 with self._lock:
                     self._healthy.discard(order[0])
                     self._state[order[0]] = "unhealthy"
+                    self._cond.notify_all()
                 self._fail_parked_if_tier_down()
                 continue
 
@@ -501,6 +766,27 @@ class QueryRouter:
         with self._lock:
             return dict(self._state)
 
+    def wait_state(self, replica: int, states: Sequence[str], *,
+                   timeout: Optional[float] = None) -> bool:
+        """Block until ``replica``'s health state is one of ``states``
+        (condition wait, woken by every transition — no polling).
+        Returns False on timeout. The swap controller uses this to wait
+        out an in-flight canary probe instead of sleep-polling."""
+        states = tuple(states)
+        for s in states:
+            if s not in REPLICA_STATES:
+                raise ValueError(f"unknown replica state {s!r}")
+        with self._cond:
+            return self._cond.wait_for(
+                lambda: self._state[replica] in states, timeout
+            )
+
+    def probe_failures(self) -> Dict[int, int]:
+        """Consecutive failed revival probes per replica (flap
+        suppression state of the background probe loop)."""
+        with self._lock:
+            return dict(self._probe_failures)
+
     def outstanding(self) -> Dict[int, int]:
         with self._lock:
             return {i: len(s) for i, s in self._outstanding.items()}
@@ -518,19 +804,24 @@ class QueryRouter:
     # -- live index lifecycle (drain / rebuild / probe / revive) -------
 
     def drain(self, replica: int, *, timeout: float = 30.0,
-              poll: float = 0.002) -> None:
+              poll: Optional[float] = None) -> None:
         """healthy -> draining: stop routing to ``replica`` and wait for
         its in-flight proxy tickets to finish.
 
         In-flight work completes normally (the routable survivors absorb
-        new traffic meanwhile). Tickets still unresolved at ``timeout``
-        are re-dispatched to the survivors via the failover path
-        (force_block — an admitted ticket is never dropped), so a stuck
-        replica cannot stall the swap. On return the replica holds no
-        proxy tickets; pair with ``ServingPipeline.quiesce`` before
-        touching its stages.
+        new traffic meanwhile); the wait is a condition-variable sleep
+        woken by each completion (mirrors ``ServingPipeline.quiesce``),
+        so the drain returns the instant the last ticket lands.
+        Tickets still unresolved at ``timeout`` are re-dispatched to the
+        survivors via the failover path (force_block — an admitted
+        ticket is never dropped), so a stuck replica cannot stall the
+        swap. On return the replica holds no proxy tickets; pair with
+        ``ServingPipeline.quiesce`` before touching its stages.
+        ``poll`` is dead (kept for call compatibility): there is no
+        polling loop any more.
         """
-        with self._lock:
+        del poll
+        with self._cond:
             st = self._state[replica]
             if st != "healthy":
                 raise ValueError(
@@ -538,19 +829,19 @@ class QueryRouter:
                 )
             self._state[replica] = "draining"
             self._healthy.discard(replica)
-        deadline = time.perf_counter() + timeout
-        while time.perf_counter() < deadline:
-            with self._lock:
-                if not self._outstanding[replica]:
-                    return
-            time.sleep(poll)
-        # Timed out: sweep the stragglers onto the survivors, oldest
-        # first (their inner tickets may still resolve on the draining
-        # replica — first-wins keeps whichever result lands first).
-        with self._lock:
+            self._cond.notify_all()
+            if self._cond.wait_for(
+                lambda: not self._outstanding[replica], timeout
+            ):
+                return
+            # Timed out: sweep the stragglers onto the survivors, oldest
+            # first (their inner tickets may still resolve on the
+            # draining replica — first-wins keeps whichever result lands
+            # first).
             victims = sorted(self._outstanding[replica], key=lambda t: t.seq)
             self._outstanding[replica] = set()
             self.failover_count += len(victims)
+            self._cond.notify_all()
         err = RuntimeError(
             f"replica {replica} did not drain within {timeout}s"
         )
@@ -572,6 +863,7 @@ class QueryRouter:
             else:
                 self._rebuild_from_dead.discard(replica)
             self._state[replica] = "rebuilding"
+            self._cond.notify_all()
 
     def mark_unhealthy(self, replica: int,
                        error: Optional[BaseException] = None) -> None:
@@ -596,6 +888,7 @@ class QueryRouter:
         else:
             with self._lock:
                 self._state[replica] = "unhealthy"
+                self._cond.notify_all()
             self._fail_parked_if_tier_down()
 
     def probe(self, replica: int, canary: Any, *, expect=None,
@@ -641,6 +934,7 @@ class QueryRouter:
             fresh_generation = st == "unhealthy"
             self._rebuild_from_dead.discard(replica)
             self._state[replica] = "probing"
+            self._cond.notify_all()
         pipe = self.replicas.pipelines[replica]
         if fresh_generation:
             # Separate the revived run's stats from the dead run's. The
@@ -652,6 +946,7 @@ class QueryRouter:
             if not pipe.quiesce(timeout=min(timeout, 5.0)):
                 with self._lock:
                     self._state[replica] = "unhealthy"
+                    self._cond.notify_all()
                 self._fail_parked_if_tier_down()
                 return False
             pipe.new_generation()
@@ -671,14 +966,17 @@ class QueryRouter:
             with self._lock:
                 self._state[replica] = "unhealthy"
                 self._errors[replica] = e
+                self._cond.notify_all()
             self._fail_parked_if_tier_down()
             return False
         with self._lock:
             self._state[replica] = "healthy"
             self._healthy.add(replica)
             self._errors.pop(replica, None)
+            self._probe_failures.pop(replica, None)
             if revival:
                 self.revival_count += 1
+            self._cond.notify_all()
         # A replica is back: failover tickets parked while the tier was
         # transiently unroutable can flow again.
         self._flush_parked()
@@ -688,7 +986,15 @@ class QueryRouter:
                            expect=None, timeout: float = 30.0) -> None:
         """Start the periodic re-probe loop: every ``interval`` seconds,
         canary-probe each ``unhealthy`` replica and revive the ones that
-        answer. Idempotent; ``stop_health_probe``/``close`` stops it."""
+        answer. Idempotent; ``stop_health_probe``/``close`` stops it.
+
+        Flap suppression: a replica whose revival probes keep failing is
+        probed at ``probe_backoff(interval, n_failures)`` spacing
+        (1x, 2x, 4x, ... the interval, capped) instead of every tick —
+        a flapping or permanently dead replica cannot monopolise the
+        loop while healthy work waits. The counter resets the moment a
+        probe succeeds; ``probe_failures()`` exposes it.
+        """
         with self._lock:
             if self._probe_thread is not None and self._probe_thread.is_alive():
                 return
@@ -696,6 +1002,7 @@ class QueryRouter:
             stop = self._probe_stop
 
             def loop():
+                next_due: Dict[int, float] = {}
                 while not stop.wait(interval):
                     with self._lock:
                         targets = [i for i, s in self._state.items()
@@ -703,19 +1010,74 @@ class QueryRouter:
                     for i in targets:
                         if stop.is_set():
                             return
-                        self.probe(i, canary, expect=expect, timeout=timeout)
+                        if time.perf_counter() < next_due.get(i, 0.0):
+                            continue  # backing off a flapper
+                        if self.probe(i, canary, expect=expect,
+                                      timeout=timeout):
+                            next_due.pop(i, None)
+                            continue
+                        with self._lock:
+                            fails = self._probe_failures.get(i, 0) + 1
+                            self._probe_failures[i] = fails
+                        next_due[i] = time.perf_counter() + probe_backoff(
+                            interval, fails
+                        )
 
             self._probe_thread = threading.Thread(
                 target=loop, name="router-health-probe", daemon=True
             )
             self._probe_thread.start()
 
-    def stop_health_probe(self) -> None:
+    def stop_health_probe(self, *, timeout: float = 30.0) -> None:
+        """Stop the probe loop and join its thread.
+
+        Raises ``RuntimeError`` if the thread fails to exit within
+        ``timeout`` — e.g. wedged inside ``probe`` on a stuck canary
+        ticket. The old behaviour (silent join timeout) leaked a daemon
+        thread that could revive replicas long after the caller believed
+        probing had stopped; now the leak is loud and attributable.
+        """
         self._probe_stop.set()
         t = self._probe_thread
-        if t is not None and t.is_alive():
-            t.join(timeout=30.0)
         self._probe_thread = None
+        if t is not None and t.is_alive():
+            t.join(timeout=timeout)
+            if t.is_alive():
+                raise RuntimeError(
+                    f"health-probe thread did not exit within {timeout}s "
+                    "(wedged on a stuck probe ticket?); a daemon thread "
+                    "has leaked and may still revive replicas"
+                )
+
+    # -- stuck-scan watchdogs ------------------------------------------
+
+    def start_watchdogs(self, budget_s: float, *,
+                        poll: Optional[float] = None) -> None:
+        """Arm a stuck-scan watchdog on every replica pipeline.
+
+        A scan that runs past ``budget_s`` without completing marks its
+        replica unhealthy with ``ScanStalled``; the ordinary failover
+        path then re-dispatches the replica's in-flight tickets to the
+        survivors — a hung (non-raising) scan no longer deadlocks the
+        tier. The canary probe loop can revive the replica later if the
+        hang clears; until then it is out of rotation.
+        """
+        for i, pipe in enumerate(self.replicas.pipelines):
+            pipe.start_watchdog(
+                budget_s, self._make_stall_handler(i), poll=poll
+            )
+
+    def _make_stall_handler(self, replica: int):
+        def on_stall(pipe: ServingPipeline, seq: int, age: float):
+            self.mark_unhealthy(replica, ScanStalled(
+                f"replica {replica} scan (inner ticket {seq}) still "
+                f"running after {age:.3f}s (budget exceeded)"
+            ))
+        return on_stall
+
+    def stop_watchdogs(self) -> None:
+        for pipe in self.replicas.pipelines:
+            pipe.stop_watchdog()
 
     def close(self, drain: bool = True):
         with self._lock:
@@ -723,7 +1085,14 @@ class QueryRouter:
                 return
             self._closed = True
         self._fail_parked_if_tier_down()  # closed: parked tickets fail
-        self.stop_health_probe()
+        try:
+            self.stop_health_probe(timeout=5.0)
+        except RuntimeError as e:
+            # close() must complete even with a wedged probe thread; the
+            # leak is logged instead of raised (the direct
+            # stop_health_probe caller gets the exception).
+            logger.error("close(): %s", e)
+        self.stop_watchdogs()
         self.replicas.close(drain=drain)
 
     def __enter__(self) -> "QueryRouter":
@@ -743,6 +1112,11 @@ class QueryRouter:
             shed_proxy = self.shed_count
             failovers = self.failover_count
             revivals = self.revival_count
+            deadline_proxy = self._deadline_expired
+            degraded = dict(self._degraded)
+            effort_level = (
+                self._effort.level if self._effort is not None else None
+            )
             healthy = sorted(self._healthy)
             states = dict(self._state)
             versions = dict(self._versions)
@@ -752,6 +1126,7 @@ class QueryRouter:
             s["replica"] = i
             s["healthy"] = i in healthy
             s["state"] = states[i]
+            s["degraded"] = degraded[i]
             v = versions[i]
             s["version"] = getattr(v, "tag", v)
             per.append(s)
@@ -772,6 +1147,15 @@ class QueryRouter:
             # replica absorbed is routing, not shedding.
             "shed": shed_proxy,
             "replica_shed": sum(s["shed"] for s in per),
+            # Deadline sheds across the tier: expired-at-submit (proxy)
+            # plus expired-at-dequeue (per-replica stages).
+            "deadline_expired": deadline_proxy + sum(
+                s["deadline_expired"] for s in per
+            ),
+            # Dispatches served at reduced effort + the knob's position.
+            "degraded": sum(degraded.values()),
+            "effort_level": effort_level,
+            "watchdog_stalls": sum(s["watchdog_stalls"] for s in per),
             "failovers": failovers,
             "revivals": revivals,
             "states": states,

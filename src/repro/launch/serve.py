@@ -34,7 +34,7 @@ from repro.index import hnsw_lite
 from repro.index import ivf as ivf_lib
 from repro.index.flat import FlatFloat, FlatSDC
 from repro.kernels.sdc import ref as sdc_ref
-from repro.launch import lifecycle, proxy, serving
+from repro.launch import faults, lifecycle, proxy, serving
 
 
 def train_binarizer(docs: np.ndarray, cfg: TrainConfig, steps: int = 300,
@@ -107,6 +107,25 @@ def main():
                     help="period (s) of the router's canary health "
                          "re-probe loop — unhealthy replicas that answer "
                          "the canary are revived; 0 disables")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="deterministic fault injection on the serving "
+                         "fns: comma-joined clauses "
+                         "'[rN.][stage.]kind[@AT][xCOUNT][~PROB][:ARG]' "
+                         "with kind in fail|delay|stick|flap (see "
+                         "launch/faults.py). e.g. "
+                         "'r0.search.fail@3,r1.search.delay~0.5:0.01' — "
+                         "pair with --probe-every / --scan-budget-ms to "
+                         "watch the tier heal")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-batch deadline (ms) enforced through the "
+                         "tier: expired work is shed at dequeue (counted, "
+                         "never scanned) and lands as a None result; "
+                         "0 disables")
+    ap.add_argument("--scan-budget-ms", type=float, default=0.0,
+                    help="stuck-scan watchdog budget (ms): a scan running "
+                         "past it marks its replica unhealthy and fails "
+                         "its in-flight work over to the survivors; "
+                         "0 disables")
     args = ap.parse_args()
 
     print(f"[data] {args.docs} docs, {args.queries} queries, dim={args.dim}")
@@ -213,6 +232,9 @@ def main():
     # its own admission queue + worker threads) over the same arrays.
     replica_fns = [(encode, search)] * args.replicas
     serving.warmup_replicas(replica_fns, batches)
+    # Chaos wrapping AFTER warmup: the fault schedule is a function of
+    # the call index, and warmup traffic must not consume (or trip) it.
+    replica_fns, injectors = faults.apply_chaos(replica_fns, args.chaos)
 
     t0 = time.time()
     serving.serve_sequential(encode, search, stream)
@@ -247,21 +269,35 @@ def main():
         )
     if args.probe_every:
         router.start_health_probe(batches[0], interval=args.probe_every)
+    if args.scan_budget_ms:
+        router.start_watchdogs(args.scan_budget_ms / 1e3)
 
     t0 = time.time()
     results, swap_report = lifecycle.run_stream_with_swap(
         router, stream, controller=controller, snapshot=snapshot,
         swap_after=args.swap_after,
+        deadline_s=(args.deadline_ms / 1e3) if args.deadline_ms else None,
     )
     dt_pipe = time.time() - t0
+    for inj in injectors.values():
+        inj.release()  # a still-stuck scan would wedge close()'s joins
     router.close()
     stats = router.stats()
 
-    idx_b = jnp.concatenate([ids for _, ids in results[: len(batches)]], 0)
+    first = results[: len(batches)]
     gt_t = jnp.asarray(gt)[:, None]
     r_float = float(jnp.mean(jnp.any(idx_f == gt_t, axis=-1)))
-    r_bebr = float(jnp.mean(jnp.any(idx_b == gt_t, axis=-1)))
-    print(f"[serve] recall@{args.k}: float={r_float:.4f} BEBR={r_bebr:.4f}")
+    if all(r is not None for r in first):
+        idx_b = jnp.concatenate([ids for _, ids in first], 0)
+        r_bebr = float(jnp.mean(jnp.any(idx_b == gt_t, axis=-1)))
+        print(f"[serve] recall@{args.k}: float={r_float:.4f} "
+              f"BEBR={r_bebr:.4f}")
+    else:
+        # Deadline sheds are accounted answers, but recall needs the
+        # full first replay of the stream.
+        print(f"[serve] recall@{args.k}: float={r_float:.4f} BEBR=n/a "
+              f"({sum(r is None for r in first)}/{len(first)} first-round "
+              "batches missed their deadline)")
     print(f"[serve] sequential: {1e3 * dt_seq / len(stream):.1f} ms/batch "
           f"({n_q / dt_seq:.0f} QPS single-host CPU, warmed)")
     shed = f", {stats['shed']} shed" if stats["shed"] else ""
@@ -290,6 +326,19 @@ def main():
     if args.probe_every:
         print(f"[probe] canary re-probe every {args.probe_every}s: "
               f"{stats['revivals']} revival(s), states {stats['states']}")
+    if args.deadline_ms:
+        print(f"[deadline] {args.deadline_ms:.0f} ms budget: "
+              f"{stats['deadline_expired']} expired "
+              f"({sum(r is None for r in results)}/{len(results)} batches "
+              "unanswered)")
+    if args.scan_budget_ms:
+        print(f"[watchdog] {args.scan_budget_ms:.0f} ms scan budget: "
+              f"{stats['watchdog_stalls']} stall(s), "
+              f"{stats['failovers']} failover(s)")
+    for i, inj in sorted(injectors.items()):
+        fired = ", ".join(f"{s}#{n}:{k}" for s, n, k in inj.log) or "none"
+        print(f"[chaos] replica {i}: {len(inj.log)} fault(s) fired "
+              f"({fired})")
 
 
 if __name__ == "__main__":

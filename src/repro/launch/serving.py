@@ -99,6 +99,20 @@ class PipelineClosed(RuntimeError):
     threads down."""
 
 
+class DeadlineExpired(RuntimeError):
+    """Surfaced by a ticket whose per-query deadline passed before its
+    batch reached a stage (expired work is shed at dequeue, never
+    scanned). NOT retryable: the deadline is the client's, and retrying
+    against the same deadline cannot succeed."""
+
+
+class ScanStalled(RuntimeError):
+    """A dispatched scan exceeded the watchdog's budget without
+    completing (a hung — not raising — search). The proxy tier treats
+    it like a replica failure: mark unhealthy, re-dispatch in-flight
+    work to the survivors."""
+
+
 @dataclasses.dataclass(frozen=True)
 class ServingConfig:
     """Knobs for ``ServingPipeline`` (see module docstring).
@@ -129,11 +143,18 @@ class ServingConfig:
 
 
 class Ticket:
-    """Handle for one submitted batch; resolves to (scores, ids)."""
+    """Handle for one submitted batch; resolves to (scores, ids).
 
-    def __init__(self, seq: int, n_queries: int):
+    ``deadline`` is an absolute ``time.perf_counter()`` instant (None =
+    no deadline): a stage that dequeues the batch after it has passed
+    sheds the ticket with ``DeadlineExpired`` instead of scanning it.
+    """
+
+    def __init__(self, seq: int, n_queries: int,
+                 deadline: Optional[float] = None):
         self.seq = seq
         self.n_queries = n_queries
+        self.deadline = deadline
         self.t_enqueue = time.perf_counter()
         self.t_reply: Optional[float] = None
         self._done = threading.Event()
@@ -178,6 +199,12 @@ class Ticket:
 
     def done(self) -> bool:
         return self._done.is_set()
+
+    def expired(self, now: Optional[float] = None) -> bool:
+        """Has this ticket's deadline passed? (False when no deadline.)"""
+        if self.deadline is None:
+            return False
+        return (time.perf_counter() if now is None else now) >= self.deadline
 
     def error(self) -> Optional[BaseException]:
         """The resolving error, or None (also None while unresolved)."""
@@ -231,13 +258,16 @@ class AdmissionQueue:
     def closed(self) -> bool:
         return self._closed
 
-    def admit(self, payload: Any, *, force_block: bool = False) -> Ticket:
+    def admit(self, payload: Any, *, force_block: bool = False,
+              deadline: Optional[float] = None) -> Ticket:
         """Admit one payload; returns its ``Ticket``.
 
         block policy: waits for queue space (back-pressure).
         shed policy: raises ``RequestShed`` when the queue is full —
         unless ``force_block`` (the proxy's failover re-dispatch must
         not drop a ticket that was already admitted once).
+        ``deadline``: absolute perf_counter instant after which the
+        stages shed the batch at dequeue instead of serving it.
         """
         with self._lock:
             if self._closed:
@@ -245,7 +275,7 @@ class AdmissionQueue:
             seq = self._seq
             self._seq += 1
         n = int(getattr(payload, "shape", (1,))[0])
-        ticket = Ticket(seq, n)
+        ticket = Ticket(seq, n, deadline=deadline)
         item = (ticket, payload)
         if self.policy == "shed" and not force_block:
             try:
@@ -377,6 +407,22 @@ class ServingPipeline:
         # record — the last pre-swap completion lands in its own
         # generation, never the next one's.
         self._record_lock = threading.Lock()
+        # Deadline sheds (expired tickets dropped at stage dequeue):
+        # counted apart from admission-queue sheds — one is the tier
+        # saturated, the other is the client's budget already spent.
+        self._deadline_expired = 0
+        self._lifetime_deadline_expired = 0
+        # Stuck-scan watchdog state: dispatch times of in-flight scans
+        # (seq -> perf_counter at dispatch), oldest first. The scan
+        # thread cannot police itself — a hung ``search_fn`` blocks it —
+        # so ``start_watchdog`` runs a monitor thread over this map.
+        self._watch_lock = threading.Lock()
+        self._scan_started: "collections.OrderedDict" = (
+            collections.OrderedDict()
+        )
+        self._watchdog_thread: Optional[threading.Thread] = None
+        self._watchdog_stop = threading.Event()
+        self.watchdog_stalls = 0
         # device-idle accounting (scan thread): time spent waiting for an
         # encoded batch = the device had nothing to do.
         self._scan_idle_s = 0.0
@@ -398,7 +444,8 @@ class ServingPipeline:
     def shed_count(self) -> int:
         return self._admission.shed_count
 
-    def submit(self, queries: Any, *, force_block: bool = False) -> Ticket:
+    def submit(self, queries: Any, *, force_block: bool = False,
+               deadline: Optional[float] = None) -> Ticket:
         """Admit one query batch; returns a ``Ticket``.
 
         block policy: waits for queue space (back-pressure).
@@ -406,6 +453,9 @@ class ServingPipeline:
         ``force_block`` overrides a shed policy with back-pressure (used
         by the proxy's failover re-dispatch, which must never drop an
         already-admitted ticket).
+        ``deadline``: absolute perf_counter instant; a batch still
+        queued when it passes is shed at dequeue with
+        ``DeadlineExpired``, never scanned.
         """
         # Reserve the in-flight slot BEFORE admission: once admit() has
         # enqueued the ticket, a concurrent quiesce() must already see
@@ -414,7 +464,9 @@ class ServingPipeline:
         with self._idle_cond:
             self._inflight_n += 1
         try:
-            ticket = self._admission.admit(queries, force_block=force_block)
+            ticket = self._admission.admit(
+                queries, force_block=force_block, deadline=deadline
+            )
         except BaseException:
             with self._idle_cond:
                 self._inflight_n -= 1
@@ -438,6 +490,21 @@ class ServingPipeline:
             self._inflight_n -= 1
             if self._inflight_n == 0:
                 self._idle_cond.notify_all()
+
+    def _shed_expired(self, ticket: Ticket) -> None:
+        """Fail a ticket whose deadline passed while it sat queued.
+
+        Resolve + count share ``_record_lock`` for the same reason the
+        scan loop's resolve+record do: a generation rollover must not
+        slip between them and book the expiry in the wrong generation.
+        """
+        with self._record_lock:
+            if ticket._resolve(error=DeadlineExpired(
+                f"ticket {ticket.seq} expired "
+                f"{time.perf_counter() - ticket.deadline:.4f}s past its "
+                "deadline before it was scanned"
+            )):
+                self._deadline_expired += 1
 
     def quiesce(self, timeout: Optional[float] = None) -> bool:
         """Drain WITHOUT closing: wait until every admitted request has
@@ -492,11 +559,93 @@ class ServingPipeline:
             self._lifetime_requests += n_req
             self._lifetime_queries += n_q
             self._lifetime_shed += self._admission.take_shed()
+            self._lifetime_deadline_expired += self._deadline_expired
+            self._deadline_expired = 0
             self._stats = LatencyStats()
             self._scan_idle_s = 0.0
             self._scan_busy_s = 0.0
             self.generation += 1
             return self.generation
+
+    # ------------------------------------------------------------------
+    # stuck-scan watchdog
+    # ------------------------------------------------------------------
+
+    def scan_oldest_age(self) -> Optional[float]:
+        """Seconds the oldest in-flight scan has been running (None when
+        no scan is in flight). The watchdog's probe — also usable by an
+        external monitor."""
+        with self._watch_lock:
+            if not self._scan_started:
+                return None
+            t0 = next(iter(self._scan_started.values()))
+        return time.perf_counter() - t0
+
+    def _watch_begin(self, seq: int) -> None:
+        with self._watch_lock:
+            self._scan_started[seq] = time.perf_counter()
+
+    def _watch_end(self, seq: int) -> None:
+        with self._watch_lock:
+            self._scan_started.pop(seq, None)
+
+    def start_watchdog(
+        self,
+        budget_s: float,
+        on_stall: Callable[["ServingPipeline", int, float], None],
+        *,
+        poll: Optional[float] = None,
+    ) -> None:
+        """Watch for scans that hang past ``budget_s`` without completing.
+
+        A hung ``search_fn`` blocks the scan thread itself, so a
+        separate monitor thread checks the oldest in-flight scan's age
+        every ``poll`` seconds (default ``budget_s / 4``) and calls
+        ``on_stall(pipeline, seq, age)`` ONCE per stalled scan — the
+        proxy tier wires this to ``QueryRouter.mark_unhealthy`` so the
+        existing failover path re-dispatches the replica's in-flight
+        work. The stalled scan itself is left alone: there is no safe
+        way to kill it, and first-wins resolution discards its result
+        if it ever completes. Idempotent while the watchdog is alive.
+        """
+        if budget_s <= 0:
+            raise ValueError(f"watchdog budget must be > 0, got {budget_s}")
+        if self._watchdog_thread is not None \
+                and self._watchdog_thread.is_alive():
+            return
+        stop = threading.Event()
+        self._watchdog_stop = stop
+        tick = poll if poll is not None else budget_s / 4.0
+
+        def loop():
+            last_fired = -1  # seqs are monotonic; FIFO scans never return
+            while not stop.wait(tick):
+                with self._watch_lock:
+                    if not self._scan_started:
+                        continue
+                    seq, t0 = next(iter(self._scan_started.items()))
+                age = time.perf_counter() - t0
+                if age <= budget_s or seq <= last_fired:
+                    continue
+                last_fired = seq
+                with self._record_lock:
+                    self.watchdog_stalls += 1
+                try:
+                    on_stall(self, seq, age)
+                except BaseException:
+                    pass  # a raising handler must not kill the monitor
+
+        self._watchdog_thread = threading.Thread(
+            target=loop, name="serving-watchdog", daemon=True
+        )
+        self._watchdog_thread.start()
+
+    def stop_watchdog(self) -> None:
+        self._watchdog_stop.set()
+        t = self._watchdog_thread
+        self._watchdog_thread = None
+        if t is not None and t.is_alive():
+            t.join(timeout=5.0)
 
     def close(self, drain: bool = True):
         """Shut the pipeline down; joins both stage threads.
@@ -504,6 +653,7 @@ class ServingPipeline:
         drain=True finishes every admitted request first; drain=False
         resolves still-queued tickets with ``PipelineClosed``.
         """
+        self.stop_watchdog()
         if not self._admission.close():
             return
         if not drain:
@@ -535,6 +685,12 @@ class ServingPipeline:
                 self._encoded.put(_SENTINEL)
                 return
             ticket, queries = item
+            if ticket.expired():
+                # Shed at dequeue: an expired batch is never encoded —
+                # the client's budget is spent, and the stage time would
+                # only delay still-live work behind it.
+                self._shed_expired(ticket)
+                continue
             try:
                 codes = self.encode_fn(queries)
             except BaseException as e:  # surfaced on the ticket
@@ -551,6 +707,7 @@ class ServingPipeline:
             try:
                 vals, ids = jax.block_until_ready((vals, ids))
             except BaseException as e:
+                self._watch_end(ticket.seq)
                 # Busy-clock write BEFORE the resolve and inside the
                 # lock: the resolve wakes quiesce(), and a generation
                 # rollover must not reset the clock between them.
@@ -558,6 +715,7 @@ class ServingPipeline:
                     self._scan_busy_s += time.perf_counter() - t0
                     ticket._resolve(error=e)
                 return
+            self._watch_end(ticket.seq)
             self._scan_busy_s += time.perf_counter() - t0
             # One critical section for resolve + record: the resolve is
             # what wakes quiesce(), so a generation rollover waiting on
@@ -588,6 +746,12 @@ class ServingPipeline:
             if item is _SENTINEL:
                 break
             ticket, codes = item
+            if ticket.expired():
+                # Shed at dequeue (same as the encode stage): the scan
+                # is the expensive step — expired work must never reach
+                # the device.
+                self._shed_expired(ticket)
+                continue
             # Bound device concurrency BEFORE dispatching: at most
             # dispatch_ahead scans run at once (1 = strictly serial
             # device — on shared-core CPU, concurrent full-corpus scans
@@ -595,6 +759,9 @@ class ServingPipeline:
             # anyway and a deeper window just hides dispatch latency).
             while len(inflight) >= self.config.dispatch_ahead:
                 await_oldest()
+            # Watchdog clock starts at dispatch: a hung search_fn blocks
+            # right here, where this thread can no longer observe it.
+            self._watch_begin(ticket.seq)
             try:
                 t0 = time.perf_counter()
                 if self._scan_gate is not None:
@@ -610,6 +777,7 @@ class ServingPipeline:
                     vals, ids = self.search_fn(codes)  # async dispatch
                 self._scan_busy_s += time.perf_counter() - t0
             except BaseException as e:
+                self._watch_end(ticket.seq)
                 ticket._resolve(error=e)
                 continue
             inflight.append((ticket, vals, ids))
@@ -640,6 +808,11 @@ class ServingPipeline:
             lifetime_q = self._lifetime_queries + n_q
             shed = self.shed_count
             lifetime_shed = self._lifetime_shed + shed
+            deadline_expired = self._deadline_expired
+            lifetime_deadline = (
+                self._lifetime_deadline_expired + deadline_expired
+            )
+            watchdog_stalls = self.watchdog_stalls
             generation = self.generation
             wall = self._scan_idle_s + self._scan_busy_s
             idle = self._scan_idle_s
@@ -654,6 +827,11 @@ class ServingPipeline:
             "lifetime_queries": lifetime_q,
             "shed": shed,
             "lifetime_shed": lifetime_shed,
+            # Deadline sheds are not queue sheds: the queue had room,
+            # the client's time budget did not.
+            "deadline_expired": deadline_expired,
+            "lifetime_deadline_expired": lifetime_deadline,
+            "watchdog_stalls": watchdog_stalls,
             "latency_p50_ms": 1e3 * _percentile(lat, 0.50),
             "latency_p99_ms": 1e3 * _percentile(lat, 0.99),
             "device_idle_frac": idle / wall if wall > 0 else 0.0,

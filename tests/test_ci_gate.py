@@ -103,6 +103,19 @@ def _swap_row(**overrides):
     return row
 
 
+def _chaos_row(**overrides):
+    row = {
+        "mode": "chaos", "replicas": 2, "index_kind": "flat",
+        "submitted": 40, "lost": 0, "reordered": 0, "bit_identical": True,
+        "deadline_violations": 2, "watchdog_stalls": 1, "failovers": 4,
+        "revivals": 1, "time_to_recover_s": 0.1,
+        "shed_without_degradation": 30, "shed_with_degradation": 3,
+        "degraded_frac": 0.9,
+    }
+    row.update(overrides)
+    return row
+
+
 def _serving_bench(ratio: float, paired_ratio: float = 0.95):
     return {"bench": "serving", "rows": [
         {"mode": "sequential", "qps": 1000.0},
@@ -110,6 +123,7 @@ def _serving_bench(ratio: float, paired_ratio: float = 0.95):
         _replicated_row(replicas=1, paired_ratio=1.0),
         _replicated_row(paired_ratio=paired_ratio),
         _swap_row(),
+        _chaos_row(),
     ]}
 
 
@@ -275,6 +289,57 @@ def test_serving_gate_fails_on_missing_generation(tmp_path):
     out = _run_gate(tmp_path, bench)
     assert out.returncode != 0
     assert "generation" in out.stderr
+
+
+# -- chaos drill (fault injection row) ---------------------------------------
+
+
+def test_serving_gate_requires_a_chaos_row(tmp_path):
+    """The fault-injection drill is part of the schema now: a report
+    without it (emitter regression) must not pass green."""
+    bench = _serving_bench(1.2)
+    bench["rows"] = bench["rows"][:5]  # drop the chaos row
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "no 'chaos' row" in out.stderr
+
+
+def test_serving_gate_fails_on_lost_results_under_chaos(tmp_path):
+    bench = _serving_bench(1.2)
+    bench["rows"][5] = _chaos_row(lost=3)
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "lost 3 result(s)" in out.stderr
+
+
+def test_serving_gate_fails_on_missing_deadline_accounting(tmp_path):
+    """deadline_violations must be PRESENT even at zero — a report that
+    cannot count deadline misses is an accounting hole, not a pass."""
+    bench = _serving_bench(1.2)
+    del bench["rows"][5]["deadline_violations"]
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "missing keys" in out.stderr
+    assert "deadline_violations" in out.stderr
+
+
+def test_serving_gate_fails_when_watchdog_missed_the_stall(tmp_path):
+    bench = _serving_bench(1.2)
+    bench["rows"][5] = _chaos_row(watchdog_stalls=0)
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "watchdog never detected" in out.stderr
+
+
+def test_serving_gate_fails_when_degradation_does_not_help(tmp_path):
+    """The A/B at equal load must show strictly fewer sheds with the
+    effort knob enabled; equal counts mean the knob is not wired in."""
+    bench = _serving_bench(1.2)
+    bench["rows"][5] = _chaos_row(shed_with_degradation=30,
+                                  shed_without_degradation=30)
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "did not reduce shedding" in out.stderr
 
 
 # -- docs lint (scripts/check_docs_links.py) ---------------------------------

@@ -1,0 +1,305 @@
+"""Deterministic fault injection (launch/faults.py) + the robustness
+knobs it drives: --chaos spec parsing (bad clauses fail loudly), the
+four fault kinds on schedule, seeded-probabilistic replay, stuck-call
+release semantics, the EffortKnob / probe_backoff primitives, and the
+index closures' effort degradation (level 0 bit-identical to the
+dedicated closure; level L equal to the closure built with the halved
+search params)."""
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.index import hnsw_lite
+from repro.index import ivf as ivf_lib
+from repro.kernels.sdc import ref as R
+from repro.launch.faults import (
+    FaultEvent,
+    FaultInjector,
+    FaultPlan,
+    InjectedFault,
+    apply_chaos,
+    parse_chaos_spec,
+    wrap_replicas,
+)
+from repro.launch.proxy import EffortKnob, probe_backoff
+
+LEVELS = 4
+
+
+def _identity_pair():
+    return (lambda x: ("enc", x)), (lambda c: ("scan", c))
+
+
+def _injector(plan):
+    enc, scan = _identity_pair()
+    return FaultInjector(enc, scan, plan, name="t")
+
+
+# ---------------------------------------------------------------------------
+# spec parsing
+# ---------------------------------------------------------------------------
+
+
+def test_parse_chaos_spec_full_grammar():
+    plans = parse_chaos_spec(
+        "r1.search.fail@10x3, delay@0x*:0.02, encode.fail~0.25, seed=7"
+    )
+    assert set(plans) == {0, 1}
+    assert all(p.seed == 7 for p in plans.values())
+    (f,) = plans[1].events
+    assert (f.kind, f.stage, f.at, f.count) == ("fail", "search", 10, 3)
+    d, e = plans[0].events
+    assert (d.kind, d.at, d.count, d.arg) == ("delay", 0, 0, 0.02)
+    assert (e.kind, e.stage, e.prob) == ("fail", "encode", 0.25)
+
+
+@pytest.mark.parametrize("spec", [
+    "bogus",                 # unknown clause shape
+    "r1.explode@3",          # unknown kind
+    "fail~1.5",              # prob out of range
+    "seed=x",                # bad seed
+    "delay@3",               # delay without :ARG (seconds)
+    "flap@0x4:2",            # flap period < count
+    "search.fail@3x2:nope",  # unparseable arg
+])
+def test_parse_chaos_spec_rejects_bad_clauses(spec):
+    with pytest.raises(ValueError):
+        parse_chaos_spec(spec)
+
+
+def test_apply_chaos_none_is_untouched_and_bad_replica_rejected():
+    replicas = [_identity_pair(), _identity_pair()]
+    out, injectors = apply_chaos(replicas, None)
+    assert out == list(replicas) and injectors == {}
+    with pytest.raises(ValueError, match="replica 5"):
+        wrap_replicas(replicas, {5: FaultPlan.fail_first(1)})
+
+
+# ---------------------------------------------------------------------------
+# fault kinds on schedule
+# ---------------------------------------------------------------------------
+
+
+def test_fail_first_then_recovers_and_logs():
+    inj = _injector(FaultPlan.fail_first(2))
+    for i in range(2):
+        with pytest.raises(InjectedFault, match=f"search call {i}"):
+            inj.search(i)
+    assert inj.search("x") == ("scan", "x")  # recovered
+    assert inj.encode("e") == ("enc", "e")  # other stage untouched
+    assert inj.log == [("search", 0, "fail"), ("search", 1, "fail")]
+    assert inj.calls == {"encode": 1, "search": 3}
+
+
+def test_fail_after_fails_forever_and_fail_at_picks_indices():
+    inj = _injector(FaultPlan.fail_after(1))
+    inj.search(0)
+    for _ in range(3):
+        with pytest.raises(InjectedFault):
+            inj.search(1)
+
+    inj = _injector(FaultPlan.fail_at(1, 3))
+    outcomes = []
+    for i in range(5):
+        try:
+            inj.search(i)
+            outcomes.append(True)
+        except InjectedFault:
+            outcomes.append(False)
+    assert outcomes == [True, False, True, False, True]
+
+
+def test_delay_every_sleeps_then_calls_through():
+    inj = _injector(FaultPlan.delay_every(0.05, at=1))
+    t0 = time.perf_counter()
+    inj.search(0)
+    assert time.perf_counter() - t0 < 0.04  # before `at`: no delay
+    t0 = time.perf_counter()
+    assert inj.search(1) == ("scan", 1)
+    assert time.perf_counter() - t0 >= 0.05
+
+
+def test_stick_blocks_until_release_then_calls_through():
+    inj = _injector(FaultPlan.stick_at(0))
+    out = []
+    th = threading.Thread(target=lambda: out.append(inj.search("q")))
+    th.start()
+    time.sleep(0.05)
+    assert th.is_alive() and inj.stuck_count == 1 and not out
+    inj.release()
+    th.join(timeout=5)
+    assert not th.is_alive()
+    assert out == [("scan", "q")]  # a hung scan completes, never raises
+    # after release(), later stick events are no-ops
+    inj2 = _injector(FaultPlan.stick_at(0))
+    inj2.release()
+    assert inj2.search("q") == ("scan", "q")
+
+
+def test_flap_fires_periodically():
+    inj = _injector(FaultPlan([
+        FaultEvent("flap", at=2, count=1, arg=3.0)  # calls 2, 5, 8, ...
+    ]))
+    outcomes = []
+    for i in range(9):
+        try:
+            inj.search(i)
+            outcomes.append(True)
+        except InjectedFault:
+            outcomes.append(False)
+    assert outcomes == [True, True, False, True, True, False, True, True,
+                        False]
+
+
+def test_probabilistic_schedule_replays_exactly_per_seed():
+    def schedule(seed):
+        inj = _injector(FaultPlan(
+            [FaultEvent("fail", prob=0.4)], seed=seed
+        ))
+        out = []
+        for i in range(40):
+            try:
+                inj.search(i)
+                out.append(True)
+            except InjectedFault:
+                out.append(False)
+        return out
+
+    a, b = schedule(3), schedule(3)
+    assert a == b  # same seed -> identical fault schedule
+    assert not all(a) and any(a)  # it actually fires sometimes
+    assert schedule(4) != a  # and the seed matters
+
+
+def test_encode_prob_clause_does_not_perturb_search_schedule():
+    plan = FaultPlan([FaultEvent("fail", stage="search", prob=0.4)], seed=5)
+    both = FaultPlan([FaultEvent("fail", stage="search", prob=0.4),
+                      FaultEvent("fail", stage="encode", prob=0.4)], seed=5)
+
+    def search_schedule(p, interleave_encodes):
+        inj = _injector(p)
+        out = []
+        for i in range(30):
+            if interleave_encodes:
+                try:
+                    inj.encode(i)
+                except InjectedFault:
+                    pass
+            try:
+                inj.search(i)
+                out.append(True)
+            except InjectedFault:
+                out.append(False)
+        return out
+
+    assert search_schedule(plan, False) == search_schedule(both, True)
+
+
+# ---------------------------------------------------------------------------
+# effort knob + probe backoff
+# ---------------------------------------------------------------------------
+
+
+def test_effort_knob_bounds_and_counters():
+    knob = EffortKnob(3)
+    assert knob.level == 0 and knob.max_level == 2
+    assert knob.degrade() and knob.level == 1
+    assert knob.degrade() and knob.level == 2
+    assert not knob.degrade() and knob.level == 2  # floor
+    assert knob.restore() and knob.level == 1
+    assert knob.restore() and knob.level == 0
+    assert not knob.restore() and knob.level == 0  # ceiling
+    knob.degrade()
+    knob.reset()
+    assert knob.level == 0
+    assert not EffortKnob(1).degrade()  # single-level knob: a no-op
+    with pytest.raises(ValueError):
+        EffortKnob(0)
+
+
+def test_probe_backoff_doubles_and_caps():
+    assert probe_backoff(0.1, 0) == 0.0
+    got = [probe_backoff(0.1, n) for n in range(1, 6)]
+    np.testing.assert_allclose(got, [0.1, 0.2, 0.4, 0.8, 1.6])
+    assert probe_backoff(0.1, 50) == pytest.approx(0.1 * 16.0)  # capped
+
+
+# ---------------------------------------------------------------------------
+# index closures honour the effort knob
+# ---------------------------------------------------------------------------
+
+
+def _code_corpus(n=400, q=16, dim=32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    cd = jax.random.randint(key, (n, dim), 0, 2**LEVELS).astype(jnp.int8)
+    cq = jax.random.randint(
+        jax.random.fold_in(key, 1), (q, dim), 0, 2**LEVELS
+    ).astype(jnp.int8)
+    return cd, cq
+
+
+def _assert_same(a, b):
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+
+
+def test_ivf_effort_levels_match_dedicated_nprobe_closures():
+    cd, cq = _code_corpus()
+    kw = dict(k=10, nlist=8, nprobe=4, seed=1, kmeans_iters=3, backend="xla")
+    plain = ivf_lib.ivf_search_from_snapshot(cd, LEVELS, **kw)
+    knob = EffortKnob(3)
+    fn = ivf_lib.ivf_search_from_snapshot(cd, LEVELS, effort=knob, **kw)
+    assert fn.effort is knob
+    _assert_same(fn(cq), plain(cq))  # level 0: bit-identical
+    knob.degrade()  # level 1 == a closure built with nprobe >> 1
+    half = ivf_lib.ivf_search_from_snapshot(
+        cd, LEVELS, **{**kw, "nprobe": 2}
+    )
+    _assert_same(fn(cq), half(cq))
+    knob.degrade()
+    knob.degrade()  # floor: nprobe never drops below 1
+    floor = ivf_lib.ivf_search_from_snapshot(
+        cd, LEVELS, **{**kw, "nprobe": 1}
+    )
+    _assert_same(fn(cq), floor(cq))
+
+
+def test_hnsw_effort_levels_match_dedicated_ef_beam_closures():
+    cd, cq = _code_corpus()
+    kw = dict(k=10, M=8, ef_construction=24, ef=24, beam=8, seed=0,
+              backend="xla")
+    plain = hnsw_lite.hnsw_search_from_snapshot(np.asarray(cd), LEVELS, **kw)
+    knob = EffortKnob(3)
+    fn = hnsw_lite.hnsw_search_from_snapshot(
+        np.asarray(cd), LEVELS, effort=knob, **kw
+    )
+    assert fn.effort is knob
+    _assert_same(fn(cq), plain(cq))  # level 0: bit-identical
+    knob.degrade()  # level 1 == ef/2, beam/2 (floored at k and 1)
+    half = hnsw_lite.hnsw_search_from_snapshot(
+        np.asarray(cd), LEVELS, **{**kw, "ef": 12, "beam": 4}
+    )
+    _assert_same(fn(cq), half(cq))
+    knob.degrade()  # ef floors at k=10 (24 >> 2 = 6 < k), beam at 2
+    floor = hnsw_lite.hnsw_search_from_snapshot(
+        np.asarray(cd), LEVELS, **{**kw, "ef": 10, "beam": 2}
+    )
+    _assert_same(fn(cq), floor(cq))
+
+
+def test_effort_level_zero_matches_reference_scan():
+    cd, cq = _code_corpus()
+    knob = EffortKnob(2)
+    fn = ivf_lib.ivf_search_from_snapshot(
+        cd, LEVELS, k=10, nlist=1, nprobe=1, seed=1, kmeans_iters=1,
+        backend="xla", effort=knob,
+    )
+    vals, ids = fn(cq)
+    ev, ei = jax.lax.top_k(R.sdc_ref(cq, cd, LEVELS), 10)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ei))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(ev), rtol=1e-5)

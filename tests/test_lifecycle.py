@@ -16,6 +16,7 @@ import numpy as np
 import pytest
 
 from repro.launch import lifecycle, serving
+from repro.launch.faults import FaultEvent, FaultInjector, FaultPlan
 from repro.launch.lifecycle import (
     CorpusSnapshot,
     RollingSwapController,
@@ -437,16 +438,32 @@ def test_state_machine_guards_misuse():
 # ---------------------------------------------------------------------------
 
 
+class _CountdownEvent(FaultEvent):
+    """A re-armable fail-N-more-times counter expressed as a custom
+    ``FaultEvent``: ``applies`` consumes one charge per firing call,
+    and tests mutate the shared ``fail_times`` list to arm/clear it
+    mid-run (position-independent, unlike the stock positional
+    events)."""
+
+    def applies(self, i, rng=None):
+        if self._times[0] > 0:
+            self._times[0] -= 1
+            return True
+        return False
+
+
 def _flaky_replica(fail_times):
-    """Identity replica whose search fails ``fail_times[0]`` more times."""
+    """Identity replica whose search fails ``fail_times[0]`` more times.
 
-    def search(c):
-        if fail_times[0] > 0:
-            fail_times[0] -= 1
-            raise RuntimeError("transient fault")
-        return c * 2, c + 1
-
-    return (lambda x: x), search
+    Built on the shared ``FaultInjector`` (launch/faults.py) so the
+    error type, per-stage call counting, and fault log match every
+    other injected fault in the suite."""
+    ev = _CountdownEvent("fail")
+    object.__setattr__(ev, "_times", fail_times)  # frozen dataclass
+    return FaultInjector(
+        (lambda x: x), (lambda c: (c * 2, c + 1)),
+        FaultPlan([ev]), name="flaky",
+    ).pair
 
 
 def test_canary_probe_revives_and_separates_generations():

@@ -16,15 +16,19 @@ from repro.index import ivf as ivf_lib
 from repro.index.flat import FlatSDC
 from repro.index.hnsw_lite import build_hnsw, prepare_batched, search_hnsw_batched
 from repro.kernels.sdc import ref as R
+from repro.launch.faults import FaultInjector, FaultPlan
 from repro.launch.mesh import make_replica_meshes
 from repro.launch.proxy import (
     AllReplicasDown,
+    EffortKnob,
     QueryRouter,
     ReplicaSet,
     serve_replicated,
 )
 from repro.launch.serving import (
+    DeadlineExpired,
     RequestShed,
+    ScanStalled,
     ServingConfig,
     serve_sequential,
 )
@@ -34,8 +38,9 @@ LEVELS = 4
 
 def _identity_replica(tag, calls=None, fail_after=None, scan_sleep=0.0):
     """(encode, search) whose output encodes the input batch; optionally
-    records which replica served each batch and fails after N scans."""
-    count = [0]
+    records which replica served each batch. Fault schedules come from
+    the shared chaos vocabulary: ``fail_after=N`` wraps the pair in a
+    ``FaultInjector`` whose scans raise from scan call N on."""
 
     def encode(x):
         return x
@@ -43,14 +48,15 @@ def _identity_replica(tag, calls=None, fail_after=None, scan_sleep=0.0):
     def search(c):
         if scan_sleep:
             time.sleep(scan_sleep)
-        count[0] += 1
-        if fail_after is not None and count[0] > fail_after:
-            raise RuntimeError(f"replica {tag} died")
         if calls is not None:
             calls.append((tag, int(np.asarray(c).ravel()[0])))
         return c * 2, c + 1
 
-    return encode, search
+    if fail_after is None:
+        return encode, search
+    return FaultInjector(
+        encode, search, FaultPlan.fail_after(fail_after), name=f"r{tag}"
+    ).pair
 
 
 def _batches(n=6, width=4):
@@ -228,7 +234,7 @@ def test_all_replicas_down_surfaces_error_and_rejects_submits():
     )
     try:
         t = router.submit(_batches(1)[0])
-        with pytest.raises(RuntimeError, match="died"):
+        with pytest.raises(RuntimeError, match="injected fail"):
             t.result(timeout=15)
         assert router.healthy() == []
         with pytest.raises(AllReplicasDown):
@@ -299,6 +305,305 @@ def test_stats_aggregate_per_replica_rows():
                     "device_idle_frac"):
             assert key in s
     assert stats["latency_p99_ms"] >= stats["latency_p50_ms"]
+
+
+# ---------------------------------------------------------------------------
+# robustness: deadlines, stuck-scan watchdog, retry, degradation
+# ---------------------------------------------------------------------------
+
+
+def test_ticket_result_timeout_then_late_resolution_no_leaks():
+    """result(timeout=) raising TimeoutError must not consume the ticket:
+    a later resolution still lands, exactly once, and runs each done
+    callback exactly once (no leaked callback registrations)."""
+    from repro.launch.serving import Ticket
+
+    t = Ticket(0, 4)
+    with pytest.raises(TimeoutError, match="not ready"):
+        t.result(timeout=0.05)
+    assert not t.done()
+    fired = []
+    t.add_done_callback(lambda tk: fired.append("a"))
+    t.add_done_callback(lambda tk: fired.append("b"))
+    assert t._resolve(value=("v", "i")) is True
+    assert t.result(timeout=1) == ("v", "i")
+    # second resolution loses: value not clobbered, callbacks not re-run
+    assert t._resolve(error=RuntimeError("late loser")) is False
+    assert t.result() == ("v", "i") and t.error() is None
+    assert fired == ["a", "b"] and t._callbacks == []
+    # post-resolution registration fires immediately, exactly once
+    t.add_done_callback(lambda tk: fired.append("c"))
+    assert fired == ["a", "b", "c"] and t._callbacks == []
+
+
+def test_watchdog_fails_over_stuck_scan_without_loss_or_reorder():
+    """A scan that HANGS (never raises) must not deadlock the tier: the
+    watchdog marks the replica unhealthy (ScanStalled) and failover
+    re-dispatches its in-flight tickets to the survivor — every ticket
+    resolves, in order, bit-identical."""
+    calls = []
+    stuck = FaultInjector(*_identity_replica(0, calls),
+                          plan=FaultPlan.stick_at(0), name="r0")
+    router = QueryRouter(
+        ReplicaSet([stuck.pair, _identity_replica(1, calls)],
+                   config=ServingConfig(queue_depth=16)),
+        policy="round-robin",
+    )
+    try:
+        router.start_watchdogs(0.1)
+        tickets = [router.submit(b) for b in _batches(8)]
+        results = [t.result(timeout=30) for t in tickets]
+        _check_identity(results, 8)  # nothing lost, FIFO per client
+        assert router.wait_state(0, ("unhealthy",), timeout=10)
+        stats = router.stats()
+        assert stats["watchdog_stalls"] >= 1
+        assert stats["failovers"] >= 1
+        assert isinstance(router._errors[0], ScanStalled)
+        # the survivor answered everything; the stuck scan answered none
+        assert all(r == 1 for (r, _) in calls)
+    finally:
+        stuck.release()  # un-wedge the scan thread before close() joins
+        router.close()
+
+
+def test_deadline_expired_sheds_at_dequeue_replica_stays_healthy():
+    """Tickets whose deadline passes while queued are shed at dequeue —
+    counted as deadline_expired (not queue sheds, not failures), never
+    scanned, and the replica stays healthy."""
+    calls = []
+    router = QueryRouter(
+        ReplicaSet([_identity_replica(0, calls, scan_sleep=0.2)],
+                   config=ServingConfig(queue_depth=8)),
+    )
+    try:
+        deadline = time.perf_counter() + 0.05
+        tickets = [router.submit(b, deadline=deadline) for b in _batches(4)]
+        outcomes = []
+        for t in tickets:
+            try:
+                t.result(timeout=30)
+                outcomes.append("ok")
+            except DeadlineExpired:
+                outcomes.append("expired")
+        # the first batch was dequeued before the deadline; the ones
+        # stuck behind its slow scan expired un-scanned
+        assert outcomes[0] == "ok" and outcomes.count("expired") == 3
+        assert len(calls) == 1  # expired work never reached the scan
+        stats = router.stats()
+        assert stats["deadline_expired"] == 3
+        assert stats["shed"] == 0 and stats["failovers"] == 0
+        assert router.healthy() == [0]  # a missed budget is not a fault
+    finally:
+        router.close()
+
+
+def test_submit_rejects_already_expired_deadline():
+    router = QueryRouter(ReplicaSet([_identity_replica(0)]))
+    try:
+        with pytest.raises(DeadlineExpired, match="already expired"):
+            router.submit(_batches(1)[0],
+                          deadline=time.perf_counter() - 1.0)
+        stats = router.stats()
+        assert stats["deadline_expired"] == 1
+        assert stats["requests"] == 0  # never reached a replica
+    finally:
+        router.close()
+
+
+def _gated_tier(n_extra_queued=1):
+    """One replica whose encode blocks on a gate, with its admission
+    queue then filled: the next submit must shed tier-wide."""
+    gate = threading.Event()
+    started = threading.Event()
+
+    def encode(x):
+        started.set()
+        gate.wait(timeout=30)
+        return x
+
+    def search(c):
+        return c * 2, c + 1
+
+    router = QueryRouter(
+        ReplicaSet([(encode, search)],
+                   config=ServingConfig(queue_depth=n_extra_queued,
+                                        policy="shed")),
+    )
+    head, *rest = _batches(1 + n_extra_queued)
+    tickets = [router.submit(head)]
+    # only fill the queue once the encode thread holds the head batch,
+    # or the filler itself would race the dequeue and shed
+    assert started.wait(timeout=5)
+    tickets += [router.submit(b) for b in rest]
+    return router, gate, tickets
+
+
+def test_submit_with_retry_succeeds_once_pressure_clears():
+    router, gate, tickets = _gated_tier()
+    try:
+        # saturated right now -> first attempts shed; the gate opens
+        # mid-backoff and a later attempt lands
+        threading.Timer(0.05, gate.set).start()
+        t = router.submit_with_retry(
+            _batches(3)[2], attempts=20, base_delay_s=0.01,
+            max_delay_s=0.05,
+        )
+        vals, ids = t.result(timeout=10)
+        np.testing.assert_array_equal(np.asarray(vals), np.full((4,), 4))
+        assert router.shed_count >= 1  # it genuinely shed before landing
+        for tk in tickets:
+            tk.result(timeout=10)
+    finally:
+        gate.set()
+        router.close()
+
+
+def test_submit_with_retry_deadline_cuts_backoff_short():
+    router, gate, tickets = _gated_tier()
+    try:
+        t0 = time.perf_counter()
+        with pytest.raises(DeadlineExpired, match="retry backoff"):
+            router.submit_with_retry(
+                _batches(3)[2], deadline=time.perf_counter() + 0.05,
+                attempts=50, base_delay_s=0.2, jitter=0.0,
+            )
+        # failed by deadline math, not by burning 50 x 0.2s of backoff
+        assert time.perf_counter() - t0 < 2.0
+        assert router.stats()["deadline_expired"] >= 1
+    finally:
+        gate.set()
+        router.close()
+
+
+def test_submit_with_retry_terminal_errors_propagate_immediately():
+    router = QueryRouter(
+        ReplicaSet([_identity_replica(i, fail_after=0) for i in range(2)],
+                   config=ServingConfig(queue_depth=4)),
+    )
+    try:
+        t = router.submit(_batches(1)[0])
+        with pytest.raises(RuntimeError, match="injected fail"):
+            t.result(timeout=15)
+        assert router.healthy() == []
+        t0 = time.perf_counter()
+        with pytest.raises(AllReplicasDown):
+            router.submit_with_retry(_batches(2)[1], attempts=8,
+                                     base_delay_s=0.2)
+        assert time.perf_counter() - t0 < 1.0  # no backoff on terminal
+    finally:
+        router.close()
+
+
+def test_transiently_empty_tier_sheds_retryable_under_deadline_path():
+    """RequestShed (retryable) vs AllReplicasDown (terminal) must stay
+    distinguishable when submits carry deadlines: a tier that is merely
+    draining sheds; a tier that is dead raises AllReplicasDown."""
+    router = QueryRouter(ReplicaSet([_identity_replica(0)],
+                                    config=ServingConfig(queue_depth=4)))
+    try:
+        deadline = time.perf_counter() + 30.0
+        router.drain(0, timeout=5)  # healthy -> draining: tier empty
+        with pytest.raises(RequestShed, match="no routable replica"):
+            router.submit(_batches(1)[0], deadline=deadline)
+        router.mark_unhealthy(0, RuntimeError("boom"))
+        with pytest.raises(AllReplicasDown):
+            router.submit(_batches(1)[0], deadline=deadline)
+    finally:
+        router.close()
+
+
+def test_stop_health_probe_raises_when_probe_thread_is_wedged():
+    """A probe wedged on a stuck canary must make stop_health_probe fail
+    LOUDLY (the old silent join timeout leaked a daemon thread that kept
+    reviving replicas behind the caller's back)."""
+    stuck = FaultInjector(*_identity_replica(0),
+                          plan=FaultPlan.stick_at(0), name="r0")
+    router = QueryRouter(
+        ReplicaSet([stuck.pair], config=ServingConfig(queue_depth=4)),
+    )
+    try:
+        router.mark_unhealthy(0, RuntimeError("down"))
+        router.start_health_probe(_batches(1)[0], interval=0.01,
+                                  timeout=30.0)
+        deadline = time.time() + 10
+        while time.time() < deadline and stuck.stuck_count == 0:
+            time.sleep(0.005)
+        assert stuck.stuck_count == 1  # the probe is wedged in the canary
+        with pytest.raises(RuntimeError, match="did not exit"):
+            router.stop_health_probe(timeout=0.2)
+        # the hang clears: the wedged probe completes, revives the
+        # replica, sees the stop flag, and the thread exits for real
+        stuck.release()
+        assert router.wait_state(0, ("healthy",), timeout=10)
+    finally:
+        stuck.release()
+        router.close()
+
+
+def test_flap_suppression_backs_off_a_permanently_failing_replica():
+    flaky = FaultInjector(*_identity_replica(1),
+                          plan=FaultPlan.fail_after(0), name="r1")
+    router = QueryRouter(
+        ReplicaSet([_identity_replica(0), flaky.pair],
+                   config=ServingConfig(queue_depth=8)),
+    )
+    try:
+        tickets = [router.submit(b) for b in _batches(4)]
+        for t in tickets:
+            t.result(timeout=15)  # failover absorbs replica 1's faults
+        assert router.wait_state(1, ("unhealthy",), timeout=10)
+        router.start_health_probe(_batches(1)[0], interval=0.02,
+                                  timeout=2.0)
+        time.sleep(0.6)
+        fails = router.probe_failures().get(1, 0)
+        # without backoff ~0.6/0.02 = 30 probes; with 1x,2x,4x... spacing
+        # the count stays small — and it must have actually retried
+        assert 2 <= fails <= 10, fails
+        assert router.states()[1] == "unhealthy"
+    finally:
+        router.close()
+
+
+def test_degradation_steps_down_before_shedding_and_back_up():
+    gate = threading.Event()
+    started = threading.Event()
+
+    def encode(x):
+        started.set()
+        gate.wait(timeout=30)
+        return x
+
+    def search(c):
+        return c * 2, c + 1
+
+    knob = EffortKnob(2)
+    router = QueryRouter(
+        ReplicaSet([(encode, search)],
+                   config=ServingConfig(queue_depth=1, policy="shed")),
+    )
+    router.enable_degradation(knob, high_water=0.5, low_water=0.0)
+    try:
+        b = _batches(4)
+        t0 = router.submit(b[0])  # encode gated: 1 outstanding
+        assert started.wait(timeout=5)
+        t1 = router.submit(b[1])  # pressure 1.0 >= 0.5: degrades first
+        assert knob.level == 1 and knob.degrade_count == 1
+        # queue now full and the knob is at its floor: the shed is real
+        with pytest.raises(RequestShed):
+            router.submit(b[2])
+        assert router.stats()["effort_level"] == 1
+        gate.set()
+        _check_identity([t0.result(timeout=10), t1.result(timeout=10)], 2)
+        # dispatches served while degraded were counted
+        assert router.stats()["degraded"] >= 1
+        # pressure cleared: the next submit restores full effort
+        t3 = router.submit(b[0])
+        assert knob.level == 0 and knob.restore_count == 1
+        t3.result(timeout=10)
+        assert router.stats()["effort_level"] == 0
+    finally:
+        gate.set()
+        router.close()
 
 
 # ---------------------------------------------------------------------------
