@@ -459,6 +459,239 @@ def _chaos_row(encode, codes_np, levels: int, batches, pcfg,
     }
 
 
+def _upgrade_row(pcfg, router_policy: str) -> dict:
+    """Live v1 -> v2 embedding-version migration, one BENCH row.
+
+    A self-contained mini-world (64-d floats, 32-d 3-level codes, 3000
+    docs): phi_v1 is trained on the old backbone's embeddings, the
+    backbone is "upgraded" (drifted float space, data/synthetic
+    ``backbone_upgrade``), and phi_v2 is compatibility-trained against
+    phi_v1 (``bc_train_step``, paper §3.2.3) so v2 codes score against
+    the v1 index and vice versa.
+
+    A 2-replica tier starts on the v1 index with both cross-version
+    encoders registered in the router's ``CompatibilityMatrix``. A mixed
+    stream of typed ``SearchRequest``s (alternating embedding_version
+    v1/v2) runs while ``RollingSwapController`` migrates the tier to the
+    v2 index one replica at a time:
+
+      * pre-swap, v2 requests take the compat hop onto v1 replicas
+        (one full round resolves before the swap starts, so the row
+        always exercises that path);
+      * mid-swap, each version is served natively by one replica and by
+        compat on the other;
+      * post-swap (a final round after the swap joins), v1 requests take
+        the compat hop onto the now-v2 tier.
+
+    Every answered request must be bit-identical to the sequential
+    reference for its (query_version, served_by_version) pair — degrade
+    by version, never by correctness — with ``lost == 0`` and
+    ``reordered == 0``, and per-version recall across the whole
+    migration window must hold ``COMPAT_RECALL_FLOOR`` (embedded in the
+    row as ``recall_floor`` for the CI gate).
+    """
+    import threading
+
+    import repro.core.losses as L
+    from repro.core import (
+        BinarizerConfig,
+        TrainConfig,
+        bc_train_step,
+        init_train_state,
+        make_encode_fn,
+        train_step,
+    )
+    from repro.data.synthetic import (
+        backbone_upgrade,
+        clustered_corpus,
+        pair_batches,
+    )
+    from repro.launch import lifecycle, proxy, serving
+    from repro.train import optim
+
+    DIM, CODE, LEVELS, K = 64, 32, 3, 10
+    cfg = TrainConfig(
+        binarizer=BinarizerConfig(input_dim=DIM, code_dim=CODE,
+                                  n_levels=LEVELS, hidden_dim=48),
+        queue=L.QueueConfig(length=512, dim=CODE, top_k=16),
+        adam=optim.AdamConfig(lr=1e-3, clip_norm=5.0),
+        temperature=0.2, bc_weight=1.0, bc_influence_weight=4.0,
+    )
+    docs, queries, gt = clustered_corpus(0, 3000, 64, DIM, n_clusters=128)
+    new_docs = backbone_upgrade(docs, 5)
+    new_queries = backbone_upgrade(queries, 5)
+
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(functools.partial(train_step, cfg=cfg))
+    gen = pair_batches(docs, 1, 64)
+    for _ in range(150):
+        a, p = next(gen)
+        state, _ = step(state, a, p)
+    v1 = state
+
+    # phi_v2: warm-started from phi_v1 and anchored to its output space
+    # on the shared items (backward-compatible training)
+    copy = functools.partial(jax.tree_util.tree_map, jnp.copy)
+    state = init_train_state(jax.random.PRNGKey(7), cfg)._replace(
+        params=copy(v1.params), m_params=copy(v1.params),
+        bn_state=copy(v1.bn_state), m_bn_state=copy(v1.bn_state),
+    )
+    bc_step = jax.jit(functools.partial(bc_train_step, cfg=cfg))
+    rng = np.random.default_rng(8)
+    for _ in range(300):
+        idx = rng.integers(0, docs.shape[0], 128)
+        noise = rng.normal(size=(128, DIM)).astype(np.float32) * 0.02
+        a = new_docs[idx] + noise
+        a /= np.linalg.norm(a, axis=-1, keepdims=True) + 1e-12
+        state, _ = bc_step(state, v1.params, v1.bn_state,
+                           jnp.asarray(a), jnp.asarray(docs[idx]))
+    v2 = state
+
+    enc_v1 = make_encode_fn(v1.params, v1.bn_state, cfg.binarizer)
+    enc_v2 = make_encode_fn(v2.params, v2.bn_state, cfg.binarizer)
+    snap_v1 = lifecycle.CorpusSnapshot(
+        codes=np.asarray(enc_v1(docs)), n_levels=LEVELS,
+        embedding_version="v1",
+    )
+    snap_v2 = lifecycle.CorpusSnapshot(
+        codes=np.asarray(enc_v2(new_docs)), n_levels=LEVELS,
+        embedding_version="v2",
+    )
+    builder = lifecycle.FlatBuilder(k=K, backend="xla")
+    search_v1 = builder.build(snap_v1)
+    # reference-only v2 build; the tier's own v2 search_fn comes from the
+    # controller's FRESH builder — same snapshot, deterministic math, so
+    # the bit-identity check is against an independently built index
+    search_v2 = lifecycle.FlatBuilder(k=K, backend="xla").build(snap_v2)
+
+    batch = 32
+    n_b = queries.shape[0] // batch
+    v1_batches = [queries[i * batch:(i + 1) * batch] for i in range(n_b)]
+    v2_batches = [new_queries[i * batch:(i + 1) * batch] for i in range(n_b)]
+    serving.warmup_replicas(
+        [(enc_v1, search_v1), (enc_v2, search_v1)],
+        v1_batches[:1] + v2_batches[:1],
+    )
+    # sequential references for every (query_version, index_version)
+    # combination a request can legally resolve through
+    ref = {
+        ("v1", "v1"): serving.serve_sequential(enc_v1, search_v1, v1_batches),
+        ("v2", "v1"): serving.serve_sequential(enc_v2, search_v1, v2_batches),
+        ("v1", "v2"): serving.serve_sequential(enc_v1, search_v2, v1_batches),
+        ("v2", "v2"): serving.serve_sequential(enc_v2, search_v2, v2_batches),
+    }
+
+    compat = proxy.CompatibilityMatrix()
+    compat.register("v2", "v1", enc_v2)  # bc codes search the old index
+    compat.register("v1", "v2", enc_v1)  # old codes search the bc index
+    router = proxy.QueryRouter(
+        proxy.ReplicaSet([(enc_v1, search_v1)] * 2, config=pcfg,
+                         share_device=True),
+        policy=router_policy, compat=compat,
+    )
+    ver_v1 = lifecycle.builder_version(builder, snap_v1)
+    tickets: list = []
+    try:
+        for r in range(2):
+            router.set_version(r, ver_v1)
+
+        def round_requests():
+            out = []
+            for i in range(n_b):
+                out.append(("v1", i, serving.SearchRequest(
+                    queries=v1_batches[i], embedding_version="v1")))
+                out.append(("v2", i, serving.SearchRequest(
+                    queries=v2_batches[i], embedding_version="v2")))
+            return out
+
+        def submit_with_retry(req):
+            while True:
+                try:
+                    return router.submit(req)
+                except serving.RequestShed:
+                    time.sleep(1e-3)
+
+        # round 0 resolves BEFORE the swap starts: deterministic
+        # pre-swap coverage of the v2-on-v1 compat hop
+        for qv, i, req in round_requests():
+            tickets.append((qv, i, submit_with_retry(req)))
+        for _, _, t in tickets:
+            t.result(timeout=120)
+
+        mid = [r for _ in range(3) for r in round_requests()]
+
+        def feeder():
+            for qv, i, req in mid:
+                tickets.append((qv, i, submit_with_retry(req)))
+
+        th = threading.Thread(target=feeder)
+        th.start()
+        t_sw0 = time.perf_counter()
+        report = lifecycle.RollingSwapController(
+            router, lifecycle.FlatBuilder(k=K, backend="xla"),
+            warm_batches=v2_batches[:1], encode_fn=enc_v2,
+        ).swap_all(snap_v2)
+        t_sw1 = time.perf_counter()
+        th.join()
+
+        # a final post-swap round: v1 requests now take the compat hop
+        for qv, i, req in round_requests():
+            tickets.append((qv, i, submit_with_retry(req)))
+
+        n_expected = (1 + 3 + 1) * 2 * n_b
+        lost = 0
+        answered = []
+        for qv, i, t in tickets:
+            try:
+                answered.append((qv, i, t.search_result(timeout=120)))
+            except BaseException:
+                lost += 1
+        lost += n_expected - len(tickets)
+
+        def eq(res, rf):
+            return (np.array_equal(np.asarray(res.ids), np.asarray(rf[1]))
+                    and np.array_equal(np.asarray(res.scores),
+                                       np.asarray(rf[0])))
+
+        mismatched = reordered = 0
+        hits = {"v1": [], "v2": []}
+        for qv, i, res in answered:
+            sv = res.served_by_version
+            if sv not in ("v1", "v2") or not eq(res, ref[(qv, sv)][i]):
+                if sv in ("v1", "v2") and any(
+                    eq(res, ref[(qv, sv)][j]) for j in range(n_b) if j != i
+                ):
+                    reordered += 1
+                else:
+                    mismatched += 1
+                continue
+            g = gt[i * batch:(i + 1) * batch]
+            hits[qv].append(float(np.mean(
+                np.any(np.asarray(res.ids) == g[:, None], axis=-1))))
+        q_during = sum(
+            t.n_queries for _, _, t in tickets
+            if t.t_reply is not None and t_sw0 <= t.t_reply <= t_sw1
+        )
+        stats = router.stats()
+    finally:
+        router.close()
+    return {
+        "mode": "upgrade", "replicas": 2, "index_kind": builder.kind,
+        "from_version": "v1", "to_version": "v2",
+        "swapped_replicas": report.swapped, "swap_s": report.total_s,
+        "submitted": int(n_expected),
+        "queries_during_swap": int(q_during),
+        "lost": int(lost), "reordered": int(reordered),
+        "bit_identical": not mismatched,
+        "compat_dispatches": int(stats["compat_dispatches"]),
+        "recall_v1": float(np.mean(hits["v1"])) if hits["v1"] else 0.0,
+        "recall_v2": float(np.mean(hits["v2"])) if hits["v2"] else 0.0,
+        "recall_floor": lifecycle.COMPAT_RECALL_FLOOR,
+        "final_versions": [pr["embedding_version"]
+                           for pr in stats["per_replica"]],
+    }
+
+
 def emit_serving_json(path: str = BENCH_SERVING_JSON, n_docs: int = 50_000,
                       batch: int = 64, n_batches: int = 32, trials: int = 3,
                       levels: int = 4, m: int = 128, dim: int = 256,
@@ -651,6 +884,7 @@ def emit_serving_json(path: str = BENCH_SERVING_JSON, n_docs: int = 50_000,
     rows.append(_chaos_row(
         encode, np.asarray(cd), levels, batches, pcfg, router
     ))
+    rows.append(_upgrade_row(pcfg, router))
 
     out = {
         "bench": "serving",
@@ -683,7 +917,7 @@ def emit_serving_json(path: str = BENCH_SERVING_JSON, n_docs: int = 50_000,
         print(f"replicated(x{n})/replicated(x1) QPS ratio: "
               f"{repl_ratio[n]:.3f} best-paired-trial "
               f"({repl_ratio_med[n]:.3f} median, {router})")
-    sw, ch = rows[-2], rows[-1]
+    sw, ch, up = rows[-3], rows[-2], rows[-1]
     print(f"rolling swap ({sw['index_kind']}): {sw['swapped_replicas']} "
           f"replica(s) in {1e3 * sw['swap_s']:.0f} ms under traffic, "
           f"{sw['queries_during_swap']} queries served mid-swap, "
@@ -697,6 +931,15 @@ def emit_serving_json(path: str = BENCH_SERVING_JSON, n_docs: int = 50_000,
           f"shed {ch['shed_without_degradation']} -> "
           f"{ch['shed_with_degradation']} with degradation "
           f"({100 * ch['degraded_frac']:.0f}% degraded dispatches)")
+    print(f"live upgrade {up['from_version']}->{up['to_version']} "
+          f"({up['index_kind']}): {up['swapped_replicas']} replica(s) in "
+          f"{1e3 * up['swap_s']:.0f} ms under mixed-version traffic "
+          f"({up['queries_during_swap']} queries mid-swap, "
+          f"{up['compat_dispatches']} compat dispatches), "
+          f"lost={up['lost']} reordered={up['reordered']} "
+          f"bit_identical={up['bit_identical']}, recall "
+          f"v1={up['recall_v1']:.3f} v2={up['recall_v2']:.3f} "
+          f"(floor {up['recall_floor']}), final={up['final_versions']}")
     return out
 
 

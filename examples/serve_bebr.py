@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import BinarizerConfig, binarize_lib, init_binarizer, pack_codes
+from repro.core import BinarizerConfig, binarize_lib, init_binarizer
 from repro.data.synthetic import clustered_corpus
 from repro.kernels.sdc import ref as R
 from repro.launch import faults, lifecycle, proxy, serving
@@ -80,8 +80,7 @@ def main():
     bcfg = BinarizerConfig(input_dim=dim, code_dim=code, n_levels=levels,
                            hidden_dim=0)
     p, s = init_binarizer(jax.random.PRNGKey(0), bcfg)
-    enc = lambda e: pack_codes(binarize_lib.binarize(
-        p, s, jnp.asarray(e), bcfg)[0])
+    enc = binarize_lib.make_encode_fn(p, s, bcfg)
     d_codes, q_codes = enc(docs), enc(queries)
 
     meshes = make_replica_meshes(args.replicas, shape=shape)
@@ -93,9 +92,7 @@ def main():
     # would fight the leaf scans for the GIL. Query device placement
     # happens inside each replica's search closure (the builder emits
     # submesh-aware SearchFns).
-    enc_jit = jax.jit(lambda e: pack_codes(binarize_lib.binarize(
-        p, s, e, bcfg)[0]))
-    encode = lambda e: enc_jit(jnp.asarray(e))
+    encode = enc
 
     # The same builder serves the initial tier AND the rolling swap: each
     # replica's index is `builder.build(snapshot, replica=i)` — the

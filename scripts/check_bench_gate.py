@@ -58,6 +58,21 @@ zero lost results, per-query deadline misses must be *counted*
 even at zero misses), a revival must follow the stall clearing, and
 the degradation A/B at equal overload must shed strictly fewer
 requests with the effort knob enabled than without it.
+
+The live embedding-version migration ("upgrade" row, added with the
+version-aware serving tier) gates the compat-encoded upgrade path: the
+emitter runs mixed v1/v2 traffic through a 2-replica tier while a
+rolling swap migrates it from the v1 to the v2 index, with the
+CompatibilityMatrix covering the cross-version window. The gate
+hard-fails when any result was lost or reordered, when answers were not
+bit-identical to the sequential reference for their
+(query_version, served_by_version) pair, when per-version recall over
+the migration window drops below the row's embedded ``recall_floor``
+(itself floored by --min-upgrade-recall so an emitter cannot pass by
+shipping a zero floor), when no compat dispatch was recorded (a
+"migration" that never exercised the cross-version hop proves nothing),
+when the swap did not cover every replica, or when any replica does not
+finish on the target version.
 """
 
 from __future__ import annotations
@@ -103,6 +118,63 @@ CHAOS_ROW_KEYS = (
     "time_to_recover_s", "shed_without_degradation",
     "shed_with_degradation", "degraded_frac",
 )
+
+# Live embedding-version migration row (added with the version-aware
+# serving tier): mixed v1/v2 traffic over a rolling v1 -> v2 index swap,
+# cross-version requests served through the CompatibilityMatrix. A
+# CORRECTNESS record like the swap/chaos rows, plus a QUALITY floor:
+# per-version recall across the migration window must hold the row's
+# own recall_floor (which --min-upgrade-recall keeps honest).
+UPGRADE_ROW_KEYS = (
+    "replicas", "index_kind", "from_version", "to_version",
+    "swapped_replicas", "swap_s", "queries_during_swap",
+    "lost", "reordered", "bit_identical", "compat_dispatches",
+    "recall_v1", "recall_v2", "recall_floor", "final_versions",
+)
+
+
+def _check_upgrade_row(row: dict, label: str, min_recall: float) -> int:
+    errors = 0
+    missing = [k for k in UPGRADE_ROW_KEYS if k not in row or row[k] is None]
+    if missing:
+        print(f"serving gate: {label} missing keys {missing}",
+              file=sys.stderr)
+        return errors + 1  # can't judge an incomplete row further
+    if row["lost"] != 0:
+        print(f"serving gate: {label} lost {row['lost']} result(s) during "
+              "the version migration", file=sys.stderr)
+        errors += 1
+    if row["reordered"] != 0:
+        print(f"serving gate: {label} reordered {row['reordered']} "
+              "result(s) during the version migration", file=sys.stderr)
+        errors += 1
+    if row["bit_identical"] is not True:
+        print(f"serving gate: {label} answers not bit-identical to the "
+              "sequential reference for their (query_version, "
+              "served_by_version) pair", file=sys.stderr)
+        errors += 1
+    if row["swapped_replicas"] != row["replicas"]:
+        print(f"serving gate: {label} migrated only "
+              f"{row['swapped_replicas']}/{row['replicas']} replicas",
+              file=sys.stderr)
+        errors += 1
+    if row["compat_dispatches"] < 1:
+        print(f"serving gate: {label} recorded no compat dispatch — the "
+              "cross-version hop was never exercised", file=sys.stderr)
+        errors += 1
+    floor = max(float(row["recall_floor"]), min_recall)
+    for key in ("recall_v1", "recall_v2"):
+        if row[key] < floor:
+            print(f"serving gate: {label} {key}={row[key]:.4f} below the "
+                  f"recall floor {floor}", file=sys.stderr)
+            errors += 1
+    bad = [v for v in row["final_versions"] if v != row["to_version"]]
+    if bad or len(row["final_versions"]) != row["replicas"]:
+        print(f"serving gate: {label} final replica versions "
+              f"{row['final_versions']} != {row['replicas']} x "
+              f"'{row['to_version']}'", file=sys.stderr)
+        errors += 1
+    return errors
 
 
 def _check_chaos_row(row: dict, label: str) -> int:
@@ -205,9 +277,11 @@ def _check_replicated_schema(row: dict, label: str) -> int:
 
 
 def check_serving(bench: dict, min_ratio: float,
-                  min_replica_ratio: float) -> int:
+                  min_replica_ratio: float,
+                  min_upgrade_recall: float = 0.5) -> int:
     """Overlapped QPS >= min_ratio x sequential, replicated QPS >=
-    min_replica_ratio x overlapped, replica-sweep schema complete."""
+    min_replica_ratio x overlapped, replica-sweep schema complete,
+    swap/chaos/upgrade correctness rows present and clean."""
     rows = bench.get("rows", [])
     qps = {r.get("mode"): r.get("qps") for r in rows
            if r.get("mode") in ("sequential", "overlapped")}
@@ -275,6 +349,24 @@ def check_serving(bench: dict, min_ratio: float,
                   f"revivals={r.get('revivals')},"
                   f"shed={r.get('shed_without_degradation')}->"
                   f"{r.get('shed_with_degradation')}")
+    upgrade_rows = [r for r in rows if r.get("mode") == "upgrade"]
+    if not upgrade_rows:
+        print("serving gate: no 'upgrade' row — the live embedding-version "
+              "migration (compat-gated rolling v1 -> v2 swap, version-aware "
+              "serving tier) must be exercised and emitted", file=sys.stderr)
+        return 1
+    for r in upgrade_rows:
+        label = (f"upgrade row ({r.get('from_version')} -> "
+                 f"{r.get('to_version')})")
+        failures += _check_upgrade_row(r, label, min_upgrade_recall)
+        if "lost" in r:
+            print(f"upgrade,lost={r.get('lost')},"
+                  f"reordered={r.get('reordered')},"
+                  f"bit_identical={r.get('bit_identical')},"
+                  f"compat_dispatches={r.get('compat_dispatches')},"
+                  f"recall_v1={r.get('recall_v1')},"
+                  f"recall_v2={r.get('recall_v2')},"
+                  f"final={r.get('final_versions')}")
     for r in replicated:
         label = f"replicated row (replicas={r.get('replicas')})"
         failures += _check_replicated_schema(r, label)
@@ -348,12 +440,18 @@ def main() -> int:
                          "< 1.0 because a shared-core host cannot scale "
                          "with replicas, but the router must not cost "
                          "throughput)")
+    ap.add_argument("--min-upgrade-recall", type=float, default=0.5,
+                    help="floor for the upgrade row's own recall_floor: "
+                         "per-version recall over the live migration is "
+                         "gated at max(row recall_floor, this), so an "
+                         "emitter cannot pass by shipping a zero floor")
     args = ap.parse_args()
     with open(args.bench_json) as f:
         bench = json.load(f)
     if bench.get("bench") == "serving":
         return check_serving(bench, args.min_serving_ratio,
-                             args.min_replica_ratio)
+                             args.min_replica_ratio,
+                             args.min_upgrade_recall)
     return check(bench, args.max_packed_ratio)
 
 

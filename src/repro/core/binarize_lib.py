@@ -293,6 +293,25 @@ def pack_codes(bits: jax.Array) -> jax.Array:
     return codes.astype(jnp.int8)
 
 
+def make_encode_fn(params, state, cfg: "BinarizerConfig"):
+    """Serving ``EncodeFn`` from trained binarizer weights.
+
+    The one canonical closure (jit'd eval-mode binarize -> per-dim
+    packed int codes) that ``launch/serve.py``, the examples, the
+    benchmarks, and the version-compat machinery all previously
+    hand-rolled: float embeddings [B, dim] -> packed codes [B, code_dim]
+    int8. Accepts numpy or jax inputs (``jnp.asarray`` outside the jit
+    boundary keeps retracing off the hot path). Distinct weights give a
+    distinct jit cache entry, so a ``CompatibilityMatrix`` can register
+    one of these per (query_version, index_version) pair.
+    """
+    @jax.jit
+    def _encode(e):
+        return pack_codes(binarize(params, state, e, cfg)[0])
+
+    return lambda e: _encode(jnp.asarray(e))
+
+
 def unpack_codes(codes: jax.Array, n_levels: int) -> jax.Array:
     """Integer codes [..., m] -> bits [..., n_levels, m] in {-1, +1}."""
     c = codes.astype(jnp.int32)

@@ -1,0 +1,45 @@
+"""Shared argument resolver for the ``*_search_from_snapshot`` family.
+
+Every index family exposes one rebuild-from-snapshot entry point with
+the same convention::
+
+    <kind>_search_from_snapshot(snapshot, *, k, packed, backend, ...)
+
+where ``snapshot`` is anything snapshot-shaped (``launch.lifecycle
+.CorpusSnapshot`` — duck-typed here as "has ``.codes`` and
+``.n_levels``", so this package never imports the serving layer). The
+legacy two-argument form ``(codes, n_levels, *, ...)`` keeps working
+through the same resolver, so pre-existing callers and tests are
+untouched.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+
+def resolve_snapshot_args(codes: Any,
+                          n_levels: Optional[int]) -> Tuple[Any, int]:
+    """Normalize ``(snapshot, None)`` / ``(codes, n_levels)`` to
+    ``(codes, n_levels)``.
+
+    A snapshot-shaped first argument (has ``.codes`` and ``.n_levels``)
+    supplies both; passing an explicit ``n_levels`` alongside one that
+    disagrees is an error (silently preferring either side would build
+    an index that scores garbage). Raw codes require ``n_levels``.
+    """
+    snap_codes = getattr(codes, "codes", None)
+    snap_levels = getattr(codes, "n_levels", None)
+    if snap_codes is not None and snap_levels is not None:
+        if n_levels is not None and int(n_levels) != int(snap_levels):
+            raise ValueError(
+                f"n_levels={n_levels} disagrees with the snapshot's "
+                f"n_levels={snap_levels}"
+            )
+        return snap_codes, int(snap_levels)
+    if n_levels is None:
+        raise TypeError(
+            "n_levels is required when passing raw codes (or pass a "
+            "CorpusSnapshot, which carries it)"
+        )
+    return codes, int(n_levels)

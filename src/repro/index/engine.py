@@ -321,8 +321,8 @@ def flat_engine_inputs_from_snapshot(
 
 def engine_search_from_snapshot(
     mesh: Mesh,
-    codes: jax.Array,
-    n_levels: int,
+    codes,
+    n_levels: int = None,
     *,
     k: int,
     shard_axes: Tuple[str, ...] = ("data", "model"),
@@ -340,7 +340,15 @@ def engine_search_from_snapshot(
     the closure, so it is a drop-in serving ``SearchFn``. Pass
     ``prepared`` (from ``flat_engine_inputs_from_snapshot``) to skip the
     per-replica host recompute.
+
+    ``codes`` may be a ``CorpusSnapshot`` (preferred — carries its own
+    ``n_levels``) or raw unpacked codes plus an explicit ``n_levels``
+    (legacy form); one convention across every
+    ``*_search_from_snapshot`` entry point.
     """
+    from repro.index._snapshot import resolve_snapshot_args
+
+    codes, n_levels = resolve_snapshot_args(codes, n_levels)
     if prepared is None:
         prepared = flat_engine_inputs_from_snapshot(codes, n_levels,
                                                     packed=packed)
@@ -388,7 +396,7 @@ def sharded_graph_from_snapshot(
 def hnsw_engine_search_from_snapshot(
     mesh: Mesh,
     codes,
-    n_levels: int,
+    n_levels: int = None,
     *,
     k: int,
     M: int = 16,
@@ -409,7 +417,15 @@ def hnsw_engine_search_from_snapshot(
     ``sharded`` graph is passed — replicas share the leaf layout, so a
     rolling swap builds the graph once and reuses it for every replica's
     device placement (see ``launch/lifecycle.EngineBuilder``).
+
+    ``codes`` may be a ``CorpusSnapshot`` (preferred — carries its own
+    ``n_levels``) or raw unpacked codes plus an explicit ``n_levels``
+    (legacy form); one convention across every
+    ``*_search_from_snapshot`` entry point.
     """
+    from repro.index._snapshot import resolve_snapshot_args
+
+    codes, n_levels = resolve_snapshot_args(codes, n_levels)
     n_leaves = 1
     for ax in shard_axes:
         n_leaves *= mesh.shape[ax]

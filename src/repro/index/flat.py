@@ -92,8 +92,8 @@ class FlatSDC:
 
 
 def flat_search_from_snapshot(
-    codes: jax.Array,
-    n_levels: int,
+    codes,
+    n_levels: int = None,
     *,
     k: int,
     packed: bool = False,
@@ -108,7 +108,15 @@ def flat_search_from_snapshot(
     drained replica by ``launch/lifecycle.RollingSwapController``.
     Deterministic: the same snapshot + params always yields a
     bit-identical index.
+
+    First argument: a ``CorpusSnapshot`` (preferred — carries its own
+    ``n_levels``) or raw unpacked codes plus an explicit ``n_levels``
+    (legacy form). Same convention across every
+    ``*_search_from_snapshot`` entry point.
     """
+    from repro.index._snapshot import resolve_snapshot_args
+
+    codes, n_levels = resolve_snapshot_args(codes, n_levels)
     index = FlatSDC.build(
         jnp.asarray(codes), n_levels, packed=packed, backend=backend
     )

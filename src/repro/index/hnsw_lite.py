@@ -528,8 +528,8 @@ def search_hnsw_batched(
 
 
 def hnsw_search_from_snapshot(
-    codes: np.ndarray,
-    n_levels: int,
+    codes,
+    n_levels: int = None,
     *,
     k: int,
     M: int = 16,
@@ -558,9 +558,16 @@ def hnsw_search_from_snapshot(
     can degrade recall gracefully under pressure. Level 0 is
     bit-identical to ``effort=None``; each level is its own jit program
     shape (ef/beam are static), so warm the degraded levels too.
+
+    First argument: a ``CorpusSnapshot`` (preferred — carries its own
+    ``n_levels``) or raw unpacked codes plus an explicit ``n_levels``
+    (legacy form); one convention across every
+    ``*_search_from_snapshot`` entry point.
     """
+    from repro.index._snapshot import resolve_snapshot_args
     from repro.kernels.sdc import ref as _ref  # lazy: ref is build-time only
 
+    codes, n_levels = resolve_snapshot_args(codes, n_levels)
     codes = np.asarray(codes)
     inv = np.asarray(_ref.doc_inv_norms(jnp.asarray(codes), n_levels))
     graph = build_hnsw(

@@ -202,8 +202,8 @@ def ivf_search(
 
 
 def ivf_search_from_snapshot(
-    codes: jax.Array,
-    n_levels: int,
+    codes,
+    n_levels: int = None,
     *,
     k: int,
     nlist: int,
@@ -225,6 +225,11 @@ def ivf_search_from_snapshot(
     k-means key derives from ``seed``, so the same snapshot + params
     rebuild bit-identically.
 
+    First argument: a ``CorpusSnapshot`` (preferred — carries its own
+    ``n_levels``) or raw unpacked codes plus an explicit ``n_levels``
+    (legacy form); one convention across every
+    ``*_search_from_snapshot`` entry point.
+
     ``effort`` is an optional shared knob (any object with an int
     ``level`` attribute, 0 = full effort — ``launch.proxy.EffortKnob``)
     read per call: level L serves with ``max(1, nprobe >> L)`` probes,
@@ -234,6 +239,9 @@ def ivf_search_from_snapshot(
     static): warm the degraded levels or the first degraded batch pays
     a compile.
     """
+    from repro.index._snapshot import resolve_snapshot_args
+
+    codes, n_levels = resolve_snapshot_args(codes, n_levels)
     index = build_ivf(
         jax.random.PRNGKey(seed), jnp.asarray(codes), n_levels=n_levels,
         nlist=nlist, kmeans_iters=kmeans_iters, max_len=max_len,

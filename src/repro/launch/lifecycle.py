@@ -51,6 +51,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import hashlib
+import inspect
 import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
@@ -58,13 +59,20 @@ from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
 import numpy as np
 
 from repro.launch import serving
-from repro.launch.proxy import AllReplicasDown, QueryRouter
+from repro.launch.proxy import AllReplicasDown, IncompatibleVersion, QueryRouter
 from repro.launch.serving import (
     DeadlineExpired,
     EncodeFn,
     RequestShed,
     SearchFn,
 )
+
+#: Minimum acceptable recall@k for cross-version traffic served through a
+#: bc-trained compat encoder (the serving-tier face of the offline floor
+#: ``tests/test_compat.py`` asserts). The upgrade bench row records it and
+#: ``scripts/check_bench_gate.py`` enforces per-version recall >= floor
+#: throughout a live migration.
+COMPAT_RECALL_FLOOR = 0.55
 
 
 # ---------------------------------------------------------------------------
@@ -200,9 +208,7 @@ class FlatBuilder(_SnapshotCachingBuilder):
     def _build(self, snapshot: CorpusSnapshot) -> SearchFn:
         from repro.index.flat import flat_search_from_snapshot
 
-        return flat_search_from_snapshot(
-            snapshot.codes, snapshot.n_levels, **self.params
-        )
+        return flat_search_from_snapshot(snapshot, **self.params)
 
 
 class IVFBuilder(_SnapshotCachingBuilder):
@@ -221,9 +227,7 @@ class IVFBuilder(_SnapshotCachingBuilder):
     def _build(self, snapshot: CorpusSnapshot) -> SearchFn:
         from repro.index.ivf import ivf_search_from_snapshot
 
-        return ivf_search_from_snapshot(
-            snapshot.codes, snapshot.n_levels, **self.params
-        )
+        return ivf_search_from_snapshot(snapshot, **self.params)
 
 
 class HNSWBuilder(_SnapshotCachingBuilder):
@@ -246,9 +250,7 @@ class HNSWBuilder(_SnapshotCachingBuilder):
     def _build(self, snapshot: CorpusSnapshot) -> SearchFn:
         from repro.index.hnsw_lite import hnsw_search_from_snapshot
 
-        return hnsw_search_from_snapshot(
-            np.asarray(snapshot.codes), snapshot.n_levels, **self.params
-        )
+        return hnsw_search_from_snapshot(snapshot, **self.params)
 
 
 class EngineBuilder:
@@ -318,7 +320,7 @@ class EngineBuilder:
         p = self.params
         if self.index == "flat":
             return engine.engine_search_from_snapshot(
-                mesh, snapshot.codes, snapshot.n_levels, k=p["k"],
+                mesh, snapshot, k=p["k"],
                 shard_axes=self.shard_axes, backend=p["backend"],
                 packed=p["packed"], prepared=self._flat_inputs(snapshot),
             )
@@ -326,7 +328,7 @@ class EngineBuilder:
         for ax in self.shard_axes:
             n_leaves *= mesh.shape[ax]
         return engine.hnsw_engine_search_from_snapshot(
-            mesh, snapshot.codes, snapshot.n_levels, k=p["k"],
+            mesh, snapshot, k=p["k"],
             ef=p["ef"], beam=p["beam"], max_hops=p["max_hops"],
             shard_axes=self.shard_axes, backend=p["backend"],
             packed=p["packed"],
@@ -343,13 +345,38 @@ INDEX_BUILDERS = {
 }
 
 
+class UnknownBuildParam(TypeError):
+    """``make_builder`` was handed a kwarg its builder does not take.
+
+    Typed (and raised at the registry boundary, naming the builder and
+    its real parameters) instead of the bare ``TypeError`` the
+    constructor would throw deep in the stack — an operator's
+    ``--index ivf`` with an HNSW-only knob fails with the fix in the
+    message."""
+
+
 def make_builder(kind: str, **params) -> IndexBuilder:
+    """Construct a single-host builder from the registry, kwargs checked.
+
+    Unknown kwargs raise ``UnknownBuildParam`` listing the builder's
+    accepted parameters — the registry is the API boundary CLI flags and
+    config files funnel through, so a typo'd knob must fail here, not as
+    a bare ``TypeError`` inside the constructor.
+    """
     try:
         cls = INDEX_BUILDERS[kind]
     except KeyError:
         raise ValueError(
             f"unknown index builder {kind!r}; known: {sorted(INDEX_BUILDERS)}"
         ) from None
+    known = [p for p in inspect.signature(cls.__init__).parameters
+             if p != "self"]
+    unknown = sorted(set(params) - set(known))
+    if unknown:
+        raise UnknownBuildParam(
+            f"{cls.__name__} does not take {unknown} "
+            f"(accepted: {sorted(known)})"
+        )
     return cls(**params)
 
 
@@ -599,8 +626,10 @@ def run_stream_with_swap(
                 break
             except RequestShed:
                 time.sleep(shed_retry_s)
-            except AllReplicasDown as e:
-                downstream_error = e  # tier down: stop submitting
+            except (AllReplicasDown, IncompatibleVersion) as e:
+                # Tier down, or a versioned batch no replica can ever
+                # serve: terminal either way — stop submitting.
+                downstream_error = e
         if downstream_error is not None:
             break
     results = []

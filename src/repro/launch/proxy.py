@@ -90,6 +90,7 @@ On top of routing and failover sits the robustness layer:
 
 from __future__ import annotations
 
+import dataclasses
 import logging
 import random
 import threading
@@ -102,14 +103,17 @@ from repro.launch.serving import (
     Array,
     DeadlineExpired,
     EncodeFn,
+    IncompatibleVersion,
     LatencyStats,
     PipelineClosed,
     RequestShed,
     ScanStalled,
     SearchFn,
+    SearchRequest,
     ServingConfig,
     ServingPipeline,
     Ticket,
+    as_search_request,
     _percentile,
 )
 
@@ -219,6 +223,81 @@ class EffortKnob:
             self._level = 0
 
 
+# ---------------------------------------------------------------------------
+# embedding-version compatibility
+# ---------------------------------------------------------------------------
+
+
+def _embedding_version(v: Any) -> Optional[str]:
+    """Embedding version of a replica's recorded index version.
+
+    ``set_version`` stores whatever the lifecycle hands it — an
+    ``IndexVersion`` (which carries ``.embedding_version``) or a bare
+    string tag. None = unversioned (routes any traffic)."""
+    return getattr(v, "embedding_version", v)
+
+
+class CompatibilityMatrix:
+    """(query_version, index_version) -> compat encoder.
+
+    The serving face of backward-compatible training (paper §3.2.3):
+    ``bc_train_step`` anchors a new binarizer's output space to the old
+    one's, so a query from either model can be encoded INTO the other's
+    binary index without re-encoding the corpus. Registering
+    ``(qv, iv) -> enc`` declares: a version-``qv`` float query, encoded
+    by ``enc``, searches a version-``iv`` index at the bc recall floor.
+
+    The router consults this at dispatch: a v2 query preferring a v2
+    replica falls back to a v1 replica *through* the registered encoder
+    when no native replica is routable — degrade by version before
+    shedding, the version-axis analogue of the ``EffortKnob`` ladder.
+
+    Same-version and unversioned pairs never need (or get) an entry:
+    ``lookup`` returns None for them and the replica's own encoder runs.
+    Thread-safe; ``register`` is how a live tier learns a new upgrade
+    path mid-flight.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._enc: Dict[Tuple[str, str], EncodeFn] = {}
+
+    def register(self, query_version: str, index_version: str,
+                 encode_fn: EncodeFn) -> None:
+        if query_version is None or index_version is None:
+            raise ValueError("compat pair versions must be non-None")
+        if query_version == index_version:
+            raise ValueError(
+                f"same-version pair {query_version!r} needs no compat encoder"
+            )
+        with self._lock:
+            self._enc[(query_version, index_version)] = encode_fn
+
+    def lookup(self, query_version: Optional[str],
+               index_version: Optional[str]) -> Optional[EncodeFn]:
+        """The compat encoder for a cross-version hop, else None.
+
+        None also for native pairs (same version, or either side
+        unversioned) — "no encoder needed", not "unreachable"; use
+        ``compatible`` to distinguish."""
+        if query_version is None or index_version is None \
+                or query_version == index_version:
+            return None
+        with self._lock:
+            return self._enc.get((query_version, index_version))
+
+    def compatible(self, query_version: Optional[str],
+                   index_version: Optional[str]) -> bool:
+        if query_version is None or index_version is None:
+            return True
+        return (query_version == index_version
+                or self.lookup(query_version, index_version) is not None)
+
+    def pairs(self) -> List[Tuple[str, str]]:
+        with self._lock:
+            return sorted(self._enc)
+
+
 def probe_backoff(interval: float, consecutive_failures: int,
                   *, cap_factor: float = 16.0) -> float:
     """Extra wait before re-probing a replica that failed its last
@@ -313,23 +392,24 @@ class ProxyTicket(Ticket):
     proxy path, failover retries included.
     """
 
-    def __init__(self, seq: int, queries: Any,
+    def __init__(self, seq: int, request: SearchRequest,
                  deadline: Optional[float] = None):
-        super().__init__(seq, int(getattr(queries, "shape", (1,))[0]),
-                         deadline=deadline)
-        self.queries = queries  # retained for failover re-dispatch
+        super().__init__(seq, request.n_queries, deadline=deadline)
+        # The typed request is retained for failover re-dispatch (and
+        # cleared by Ticket._resolve: a resolved ticket held by a
+        # long-running client must not pin its input alongside the
+        # result for the rest of the run).
+        self.request = request
+
         self._route_lock = threading.Lock()
         self._inner: Optional[Ticket] = None
         self._replica: Optional[int] = None
         self.redispatches = 0
 
-    def _resolve(self, value=None, error=None) -> bool:
-        won = super()._resolve(value=value, error=error)
-        # The batch was retained only so failover could re-submit it; a
-        # resolved ticket held by a long-running client must not pin its
-        # input alongside the result for the rest of the run.
-        self.queries = None
-        return won
+    @property
+    def queries(self) -> Any:
+        """Legacy accessor: the raw submitted batch (None once resolved)."""
+        return None if self.request is None else self.request.payload
 
     def _point_at(self, replica: int, inner: Ticket):
         with self._route_lock:
@@ -357,8 +437,14 @@ class QueryRouter:
         replicas: ReplicaSet,
         *,
         policy: Union[str, Any] = "round-robin",
+        compat: Optional[CompatibilityMatrix] = None,
     ):
+        """``compat``: the tier's embedding-version compatibility matrix
+        (bc-trained cross-version encoders). Defaults to an empty one —
+        versioned traffic then routes only to native-version replicas
+        and raises ``IncompatibleVersion`` when none exists."""
         self.replicas = replicas
+        self.compat = compat if compat is not None else CompatibilityMatrix()
         if isinstance(policy, str):
             try:
                 policy = ROUTING_POLICIES[policy]()
@@ -403,6 +489,11 @@ class QueryRouter:
         self._degraded: Dict[int, int] = {
             i: 0 for i in range(len(replicas))
         }
+        # Dispatches that crossed embedding versions through a compat
+        # encoder (per replica) — the version-axis degradation counter.
+        self._compat_served: Dict[int, int] = {
+            i: 0 for i in range(len(replicas))
+        }
         # Consecutive failed revival probes per replica (flap
         # suppression state; reset on a successful probe).
         self._probe_failures: Dict[int, int] = {}
@@ -430,6 +521,34 @@ class QueryRouter:
         counts = {i: len(self._outstanding[i]) for i in healthy}
         return self.policy.order(healthy, counts)
 
+    def _route_version(self, replica: int) -> Optional[str]:
+        """Embedding version ``replica`` currently serves (lock held)."""
+        return _embedding_version(self._versions.get(replica))
+
+    def _order_for_locked(self, req: SearchRequest) -> List[int]:
+        """Policy order, filtered and re-ranked by embedding version
+        (lock held): native-version replicas first (policy order within
+        the group), then compat-reachable ones — degrade by version only
+        when no native replica is routable. Unversioned requests (and
+        unversioned replicas) see the plain policy order.
+
+        A codes request cannot take the compat hop (there are no floats
+        left to re-encode), so it is native-only.
+        """
+        order = self._order()
+        qv = req.embedding_version
+        if qv is None:
+            return order
+        native = [i for i in order
+                  if self._route_version(i) in (None, qv)]
+        if req.queries is None:
+            return native
+        compat = [i for i in order
+                  if i not in native
+                  and self.compat.lookup(qv, self._route_version(i))
+                  is not None]
+        return native + compat
+
     def submit(self, queries: Any, *,
                deadline: Optional[float] = None) -> ProxyTicket:
         """Admit one batch into the tier; returns a ``ProxyTicket``.
@@ -446,7 +565,17 @@ class QueryRouter:
         the ticket down to the replica stages, which shed it at dequeue
         once expired. An already-expired deadline raises
         ``DeadlineExpired`` here — terminal, not retryable.
+
+        ``queries`` may be a bare batch (legacy shim — unversioned,
+        routes anywhere) or a ``SearchRequest``. A versioned request is
+        offered native-version replicas first, then compat-reachable
+        ones (through the tier's ``CompatibilityMatrix`` encoder);
+        healthy replicas that serve the wrong version with no compat
+        path raise ``IncompatibleVersion`` — terminal, like
+        ``AllReplicasDown``, unlike ``RequestShed``.
         """
+        req = as_search_request(queries, deadline=deadline)
+        deadline = req.deadline
         if deadline is not None and time.perf_counter() >= deadline:
             with self._lock:
                 self._deadline_expired += 1
@@ -465,10 +594,24 @@ class QueryRouter:
                     "no routable replica (index swap or probe in progress)"
                 )
             self._adjust_effort_locked(deadline)
-            order = self._order()
+            if req.effort is not None and self._effort is not None:
+                # Advisory effort hint: pre-degrade the shared knob at
+                # least this far (coarse — the knob is tier-wide).
+                while self._effort.level < req.effort \
+                        and self._effort.degrade():
+                    pass
+            order = self._order_for_locked(req)
+            if not order:
+                raise IncompatibleVersion(
+                    f"no routable replica serves embedding version "
+                    f"{req.embedding_version!r} and no compat encoder "
+                    f"reaches one (healthy replica versions: "
+                    f"{sorted(str(self._route_version(i)) for i in self._healthy)}, "
+                    f"compat pairs: {self.compat.pairs()})"
+                )
             seq = self._seq
             self._seq += 1
-        ticket = ProxyTicket(seq, queries, deadline=deadline)
+        ticket = ProxyTicket(seq, req, deadline=deadline)
         shed_error: Optional[RequestShed] = None
         for attempt in (0, 1):
             for replica in order:
@@ -489,7 +632,8 @@ class QueryRouter:
             if attempt == 0 and self._effort is not None \
                     and self._effort.degrade():
                 with self._lock:
-                    order = self._order() if self._healthy else []
+                    order = self._order_for_locked(req) \
+                        if self._healthy else []
                 if order:
                     continue
             break
@@ -595,8 +739,8 @@ class QueryRouter:
         raise last
 
     def _dispatch(self, ticket: ProxyTicket, replica: int, *, force: bool = False):
-        queries = ticket.queries
-        if queries is None:
+        req = ticket.request
+        if req is None:
             # Resolved (and its batch released) after the caller's
             # done() check: a re-dispatch racing a success. Submitting
             # the cleared payload would poison a healthy replica with a
@@ -608,17 +752,35 @@ class QueryRouter:
         # from an earlier snapshot, and a drain() landing in the gap
         # would otherwise see an empty outstanding set, declare the
         # replica quiet, and let the swap mutate the pipeline while this
-        # batch is still dispatching onto it.
+        # batch is still dispatching onto it. The compat encoder is
+        # resolved under the SAME lock: the replica's version may have
+        # rolled (mid-upgrade swap) since submit() ranked it.
         with self._lock:
             if replica not in self._healthy:
                 raise RequestShed(
                     f"replica {replica} left rotation "
                     f"({self._state[replica]}) before dispatch"
                 )
+            compat_enc: Optional[EncodeFn] = None
+            rv = self._route_version(replica)
+            if req.embedding_version is not None and rv is not None \
+                    and rv != req.embedding_version:
+                compat_enc = None if req.queries is None \
+                    else self.compat.lookup(req.embedding_version, rv)
+                if compat_enc is None:
+                    # Retryable at this level: submit/redispatch fall
+                    # through to the next replica in version order.
+                    raise RequestShed(
+                        f"replica {replica} serves version {rv!r}; no "
+                        f"compat encoder from {req.embedding_version!r}"
+                    )
             self._outstanding[replica].add(ticket)
             degraded = self._effort is not None and self._effort.level > 0
+        inner_req = req if compat_enc is None else dataclasses.replace(
+            req, encode_override=compat_enc
+        )
         try:
-            inner = pipe.submit(queries, force_block=force,
+            inner = pipe.submit(inner_req, force_block=force,
                                 deadline=ticket.deadline)  # may shed
         except BaseException:
             with self._lock:
@@ -628,14 +790,19 @@ class QueryRouter:
         if degraded:
             with self._lock:
                 self._degraded[replica] += 1
+        if compat_enc is not None:
+            with self._lock:
+                self._compat_served[replica] += 1
         ticket._point_at(replica, inner)
         inner.add_done_callback(
-            lambda t, tk=ticket, r=replica: self._on_inner_done(tk, r, t)
+            lambda t, tk=ticket, r=replica, ce=compat_enc is not None:
+                self._on_inner_done(tk, r, t, compat=ce)
         )
 
     # -- failover ------------------------------------------------------
 
-    def _on_inner_done(self, ticket: ProxyTicket, replica: int, inner: Ticket):
+    def _on_inner_done(self, ticket: ProxyTicket, replica: int, inner: Ticket,
+                       *, compat: bool = False):
         """Replica-ticket completion: the single place proxy tickets are
         resolved (clients only ever wait on the proxy ticket, so they
         never observe an intermediate replica failure)."""
@@ -643,8 +810,18 @@ class QueryRouter:
         if err is None:
             with self._lock:
                 self._outstanding[replica].discard(ticket)
+                served_v = self._route_version(replica)
                 self._cond.notify_all()
-            if ticket._resolve(value=inner.result()):
+            if inner.served_by_version is not None:
+                served_v = inner.served_by_version
+            # Provenance rides the resolve (same first-wins lock): two
+            # racing inner successes (failover straggler + re-dispatch)
+            # must not let the loser stamp the winner's result.
+            if ticket._resolve(
+                value=inner.result(),
+                provenance=(replica, served_v,
+                            inner.served_by_generation, compat),
+            ):
                 self._stats.record(ticket)
             return
         if isinstance(err, DeadlineExpired):
@@ -700,10 +877,24 @@ class QueryRouter:
     def _redispatch(self, ticket: ProxyTicket, error: BaseException):
         if ticket.done():
             return  # raced a resolve (first-wins); nothing to recover
+        req = ticket.request
+        if req is None:
+            return  # resolved between done() and here; nothing to recover
         while True:
             with self._lock:
-                order = self._order() if self._healthy else []
-                if not order and not self._closed and any(
+                order = self._order_for_locked(req) if self._healthy else []
+                if not order and self._healthy and not self._closed:
+                    # Healthy replicas exist but none serves (or compat-
+                    # reaches) the request's embedding version: a
+                    # version dead-end, not a transient outage. Parking
+                    # would hang the client on a probe that cannot
+                    # change the version topology — fail typed instead.
+                    error = IncompatibleVersion(
+                        f"failover: no routable replica serves embedding "
+                        f"version {req.embedding_version!r} and no compat "
+                        f"encoder reaches one"
+                    )
+                elif not order and not self._closed and any(
                     s != "unhealthy" for s in self._state.values()
                 ):
                     # Transiently unroutable (a drain/rebuild/probe owns
@@ -714,7 +905,8 @@ class QueryRouter:
                     self._parked.append((ticket, error))
                     return
             if not order:
-                # Closed, or every replica is unhealthy: genuinely down.
+                # Closed, every replica unhealthy, or a version
+                # dead-end: genuinely unservable.
                 ticket._resolve(error=error)
                 return
             try:
@@ -792,10 +984,19 @@ class QueryRouter:
             return {i: len(s) for i, s in self._outstanding.items()}
 
     def set_version(self, replica: int, version: Any) -> None:
-        """Record the index version a replica serves (stats/monitoring
-        bookkeeping; ``RollingSwapController`` calls this on swap)."""
+        """Record the index version a replica serves.
+
+        ``RollingSwapController`` calls this on swap. Beyond stats, the
+        version's ``embedding_version`` now drives routing: versioned
+        requests prefer native replicas and fall back through the
+        ``CompatibilityMatrix``. The embedding version is also pushed
+        into the replica pipeline so replica-level tickets carry it as
+        provenance."""
         with self._lock:
             self._versions[replica] = version
+        self.replicas.pipelines[replica].embedding_version = (
+            _embedding_version(version)
+        )
 
     def versions(self) -> Dict[int, Any]:
         with self._lock:
@@ -1114,6 +1315,7 @@ class QueryRouter:
             revivals = self.revival_count
             deadline_proxy = self._deadline_expired
             degraded = dict(self._degraded)
+            compat_served = dict(self._compat_served)
             effort_level = (
                 self._effort.level if self._effort is not None else None
             )
@@ -1127,8 +1329,10 @@ class QueryRouter:
             s["healthy"] = i in healthy
             s["state"] = states[i]
             s["degraded"] = degraded[i]
+            s["compat_served"] = compat_served[i]
             v = versions[i]
             s["version"] = getattr(v, "tag", v)
+            s["embedding_version"] = _embedding_version(v)
             per.append(s)
         n_req, n_q, lat = self._stats.snapshot()
         lat.sort()
@@ -1155,6 +1359,9 @@ class QueryRouter:
             # Dispatches served at reduced effort + the knob's position.
             "degraded": sum(degraded.values()),
             "effort_level": effort_level,
+            # Dispatches that crossed embedding versions through a
+            # compat encoder (version-axis degradation).
+            "compat_dispatches": sum(compat_served.values()),
             "watchdog_stalls": sum(s["watchdog_stalls"] for s in per),
             "failovers": failovers,
             "revivals": revivals,
@@ -1189,8 +1396,6 @@ def serve_replicated(
     an offline driver should back-pressure, not shed. See ``ReplicaSet``
     for ``share_device``.
     """
-    import dataclasses
-
     config = dataclasses.replace(config, policy="block")
     router = QueryRouter(
         ReplicaSet(replicas, config=config, share_device=share_device),

@@ -22,6 +22,7 @@ import numpy as np
 from repro.core import (
     BinarizerConfig,
     TrainConfig,
+    bc_train_step,
     binarize_eval,
     init_train_state,
     pack_codes,
@@ -56,6 +57,36 @@ def encode_codes(state, emb: np.ndarray, bcfg: BinarizerConfig, batch=4096):
         )
         outs.append(pack_codes(bits))
     return jnp.concatenate(outs, 0)
+
+
+def bc_train_binarizer(old, old_docs: np.ndarray, new_docs: np.ndarray,
+                       cfg: TrainConfig, steps: int = 300, batch: int = 256,
+                       seed: int = 7):
+    """Backward-compatible training (paper §3.2.3): warm-start phi_new
+    from phi_old and anchor its output space to phi_old's on the shared
+    items, so new-backbone queries can search the old binary index."""
+    copy = functools.partial(jax.tree_util.tree_map, jnp.copy)
+    state = init_train_state(jax.random.PRNGKey(seed), cfg)._replace(
+        params=copy(old.params), m_params=copy(old.params),
+        bn_state=copy(old.bn_state), m_bn_state=copy(old.bn_state),
+    )
+    step = jax.jit(functools.partial(bc_train_step, cfg=cfg))
+    rng = np.random.default_rng(seed + 1)
+    dim = old_docs.shape[-1]
+    for _ in range(steps):
+        idx = rng.integers(0, old_docs.shape[0], batch)
+        noise = rng.normal(size=(batch, dim)).astype(np.float32) * 0.02
+        a = new_docs[idx] + noise
+        a /= np.linalg.norm(a, axis=-1, keepdims=True) + 1e-12
+        state, _ = step(state, old.params, old.bn_state, jnp.asarray(a),
+                        jnp.asarray(old_docs[idx]))
+    return state
+
+
+def _next_version(tag: str) -> str:
+    if tag.startswith("v") and tag[1:].isdigit():
+        return f"v{int(tag[1:]) + 1}"
+    return tag + "+1"
 
 
 def main():
@@ -98,6 +129,19 @@ def main():
     ap.add_argument("--router", choices=sorted(proxy.ROUTING_POLICIES),
                     default="round-robin",
                     help="replica routing policy")
+    ap.add_argument("--embedding-version", default="v1",
+                    help="embedding-version tag for the trained binarizer, "
+                         "the corpus snapshot, and the tier's replicas; "
+                         "typed SearchRequests are routed by this tag")
+    ap.add_argument("--upgrade-after", type=int, default=0, metavar="N",
+                    help="after N batches, run a LIVE embedding-version "
+                         "migration: bc-train the next-version binarizer "
+                         "against a drifted backbone "
+                         "(data/synthetic.backbone_upgrade), register "
+                         "cross-version compat encoders, and rolling-swap "
+                         "every replica to the new index while the stream "
+                         "mixes old- and new-version queries; 0 disables "
+                         "(mutually exclusive with --swap-after)")
     ap.add_argument("--swap-after", type=int, default=0, metavar="N",
                     help="after N batches of the routed stream, run a "
                          "rolling index swap (drain -> rebuild -> warm -> "
@@ -127,6 +171,9 @@ def main():
                          "its in-flight work over to the survivors; "
                          "0 disables")
     args = ap.parse_args()
+    if args.swap_after and args.upgrade_after:
+        ap.error("--swap-after and --upgrade-after are mutually exclusive "
+                 "(the upgrade IS a rolling swap, to the next-version index)")
 
     print(f"[data] {args.docs} docs, {args.queries} queries, dim={args.dim}")
     docs, queries, gt = synthetic.clustered_corpus(
@@ -215,14 +262,7 @@ def main():
 
     # jit'd per-batch encode: the eager path dispatches dozens of small
     # ops per batch and would fight the scan threads for the GIL.
-    @jax.jit
-    def _encode_batch(e):
-        bits, _, _ = binarize_lib.binarize(
-            state.params, state.bn_state, e, bcfg
-        )
-        return pack_codes(bits)
-
-    encode = lambda e: _encode_batch(jnp.asarray(e))
+    encode = binarize_lib.make_encode_fn(state.params, state.bn_state, bcfg)
     batch = args.batch or args.queries
     batches = [queries[i:i + batch] for i in range(0, args.queries, batch)]
     stream = batches * args.rounds
@@ -248,11 +288,15 @@ def main():
                                  policy=args.policy)
     # share_device: single-host replicas sit on one device; their scan
     # stages take turns instead of oversubscribing the host cores.
+    compat = proxy.CompatibilityMatrix()
     router = proxy.QueryRouter(
         proxy.ReplicaSet(replica_fns, config=pcfg,
                          share_device=args.replicas > 1),
-        policy=args.router,
+        policy=args.router, compat=compat,
     )
+    from_version = args.embedding_version
+    for r in range(args.replicas):
+        router.set_version(r, from_version)
 
     # Live index lifecycle: a rolling swap mid-stream rebuilds each
     # replica's index from a fresh corpus snapshot (here: the same codes,
@@ -260,13 +304,57 @@ def main():
     # of the demo is that the traffic never stops), and the periodic
     # canary probe revives replicas whose transient faults clear.
     controller = snapshot = None
+    to_version = None
+    stream_meta = None
     if args.swap_after:
         snapshot = lifecycle.CorpusSnapshot(
-            codes=np.asarray(d_codes), n_levels=bcfg.n_levels
+            codes=np.asarray(d_codes), n_levels=bcfg.n_levels,
+            embedding_version=from_version,
         )
         controller = lifecycle.RollingSwapController(
             router, builder, warm_batches=batches[:1], encode_fn=encode
         )
+    elif args.upgrade_after:
+        # Live embedding-version migration: bc-train the next-version
+        # binarizer against a drifted backbone, register cross-version
+        # compat encoders (v_new queries search the v_old index and vice
+        # versa through the bc-anchored output space), then rolling-swap
+        # the tier to the new index under mixed-version traffic.
+        to_version = _next_version(from_version)
+        print(f"[upgrade] backbone drift + bc-training {to_version} "
+              f"binarizer ({args.steps} steps)")
+        new_docs = synthetic.backbone_upgrade(docs, 5)
+        new_queries = synthetic.backbone_upgrade(queries, 5)
+        new_state = bc_train_binarizer(state, docs, new_docs, tcfg,
+                                       steps=args.steps)
+        enc_new = binarize_lib.make_encode_fn(
+            new_state.params, new_state.bn_state, bcfg
+        )
+        compat.register(to_version, from_version, enc_new)
+        compat.register(from_version, to_version, encode)
+        snapshot = lifecycle.CorpusSnapshot(
+            codes=np.asarray(encode_codes(new_state, new_docs, bcfg)),
+            n_levels=bcfg.n_levels, embedding_version=to_version,
+        )
+        controller = lifecycle.RollingSwapController(
+            router, builder, warm_batches=batches[:1], encode_fn=enc_new
+        )
+        # the compat hop runs enc_new on the still-v_old replicas before
+        # the swap reaches them: pre-compile it like every other stage
+        serving.warmup_replicas([(enc_new, search)], batches[:1])
+        new_batches = [new_queries[i:i + batch]
+                       for i in range(0, args.queries, batch)]
+        # mixed-version stream: each round alternates an old-version and
+        # a new-version request per batch index
+        stream, stream_meta = [], []
+        for _ in range(args.rounds):
+            for i, (b, nb) in enumerate(zip(batches, new_batches)):
+                stream.append(serving.SearchRequest(
+                    queries=b, embedding_version=from_version))
+                stream_meta.append((from_version, i))
+                stream.append(serving.SearchRequest(
+                    queries=nb, embedding_version=to_version))
+                stream_meta.append((to_version, i))
     if args.probe_every:
         router.start_health_probe(batches[0], interval=args.probe_every)
     if args.scan_budget_ms:
@@ -275,7 +363,7 @@ def main():
     t0 = time.time()
     results, swap_report = lifecycle.run_stream_with_swap(
         router, stream, controller=controller, snapshot=snapshot,
-        swap_after=args.swap_after,
+        swap_after=args.swap_after or args.upgrade_after,
         deadline_s=(args.deadline_ms / 1e3) if args.deadline_ms else None,
     )
     dt_pipe = time.time() - t0
@@ -284,10 +372,26 @@ def main():
     router.close()
     stats = router.stats()
 
-    first = results[: len(batches)]
     gt_t = jnp.asarray(gt)[:, None]
     r_float = float(jnp.mean(jnp.any(idx_f == gt_t, axis=-1)))
-    if all(r is not None for r in first):
+    if stream_meta is not None:
+        # mixed-version stream: per-version recall over every answered
+        # request across the whole migration window
+        hits = {from_version: [], to_version: []}
+        for (ver, i), r in zip(stream_meta, results):
+            if r is None:
+                continue
+            ids = np.asarray(r[1])
+            g = np.asarray(gt)[i * batch : i * batch + ids.shape[0]]
+            hits[ver].append(float(np.mean(np.any(ids == g[:, None], -1))))
+        per_ver = " ".join(
+            f"{v}={np.mean(h):.4f}" if h else f"{v}=n/a"
+            for v, h in hits.items()
+        )
+        print(f"[serve] recall@{args.k}: float={r_float:.4f} "
+              f"BEBR[{per_ver}] (across the live migration)")
+    elif all(r is not None for r in results[: len(batches)]):
+        first = results[: len(batches)]
         idx_b = jnp.concatenate([ids for _, ids in first], 0)
         r_bebr = float(jnp.mean(jnp.any(idx_b == gt_t, axis=-1)))
         print(f"[serve] recall@{args.k}: float={r_float:.4f} "
@@ -295,15 +399,20 @@ def main():
     else:
         # Deadline sheds are accounted answers, but recall needs the
         # full first replay of the stream.
+        first = results[: len(batches)]
         print(f"[serve] recall@{args.k}: float={r_float:.4f} BEBR=n/a "
               f"({sum(r is None for r in first)}/{len(first)} first-round "
               "batches missed their deadline)")
-    print(f"[serve] sequential: {1e3 * dt_seq / len(stream):.1f} ms/batch "
-          f"({n_q / dt_seq:.0f} QPS single-host CPU, warmed)")
+    print(f"[serve] sequential: {1e3 * dt_seq / (len(batches) * args.rounds):.1f} "
+          f"ms/batch ({n_q / dt_seq:.0f} QPS single-host CPU, warmed)")
+    n_q_routed = sum(
+        getattr(b, "n_queries", None) or b.shape[0] for b in stream
+    )
     shed = f", {stats['shed']} shed" if stats["shed"] else ""
     print(f"[serve] routed ({args.replicas} replica(s), {args.router}): "
           f"{1e3 * dt_pipe / len(stream):.1f} ms/batch "
-          f"({n_q / dt_pipe:.0f} QPS; p50={stats['latency_p50_ms']:.1f} ms "
+          f"({n_q_routed / dt_pipe:.0f} QPS; "
+          f"p50={stats['latency_p50_ms']:.1f} ms "
           f"p99={stats['latency_p99_ms']:.1f} ms, device idle "
           f"{100 * stats['device_idle_frac']:.0f}%{shed})")
     if args.replicas > 1:
@@ -323,6 +432,12 @@ def main():
                   f"warm {row['warm_s'] * 1e3:.0f} ms, "
                   f"probe {row['probe_s'] * 1e3:.0f} ms "
                   f"(generation {row['generation']})")
+    if to_version is not None and swap_report is not None:
+        finals = [pr["embedding_version"] for pr in stats["per_replica"]]
+        print(f"[upgrade] {from_version} -> {to_version} migration: "
+              f"{stats['compat_dispatches']} compat-encoded dispatch(es) "
+              f"covered the transition window; final replica versions "
+              f"{finals}")
     if args.probe_every:
         print(f"[probe] canary re-probe every {args.probe_every}s: "
               f"{stats['revivals']} revival(s), states {stats['states']}")

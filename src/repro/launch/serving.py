@@ -113,6 +113,119 @@ class ScanStalled(RuntimeError):
     work to the survivors."""
 
 
+class IncompatibleVersion(RuntimeError):
+    """A versioned request reached a tier with healthy replicas but no
+    replica serving the request's embedding version — natively or
+    through a registered compat encoder. NOT retryable: unlike
+    ``RequestShed`` (queue pressure, transient) this is a configuration
+    gap; retrying against the same tier cannot succeed until an index
+    swap or a ``CompatibilityMatrix.register`` changes what is
+    reachable."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchRequest:
+    """Typed request: what to search, under which embedding version.
+
+    Exactly one of ``queries`` (float embeddings [B, dim] — encoded by
+    the serving replica) or ``codes`` (pre-packed int codes [B, D] —
+    the encode stage is bypassed) must be set.
+
+    embedding_version — version tag of the model that produced the
+        queries (None = unversioned: routes anywhere, today's default).
+        The router matches it against each replica's
+        ``IndexVersion.embedding_version`` and falls back to a
+        ``CompatibilityMatrix`` encoder when no native replica is
+        routable — degrading by version before shedding.
+    k               — optional per-request truncation of the index's
+        configured top-k (k <= index k; None = index default, and the
+        bit-identity invariant vs ``serve_sequential`` holds only then).
+    deadline        — absolute ``time.perf_counter()`` instant, same
+        semantics as the ``submit(..., deadline=)`` kwarg (which wins
+        when both are given).
+    effort          — optional advisory effort-level hint (see
+        ``proxy.EffortKnob``): the router degrades the shared knob at
+        least this far before dispatch. Coarse: the knob is shared by
+        the whole tier, so a hint can speed up neighbours too.
+    encode_override — replica-internal: the compat encoder chosen by the
+        router for a cross-version dispatch. Clients leave it None.
+    """
+
+    queries: Any = None
+    codes: Any = None
+    embedding_version: Optional[str] = None
+    k: Optional[int] = None
+    deadline: Optional[float] = None
+    effort: Optional[int] = None
+    encode_override: Optional[EncodeFn] = None
+
+    def __post_init__(self):
+        if (self.queries is None) == (self.codes is None):
+            raise ValueError(
+                "SearchRequest takes exactly one of queries= or codes="
+            )
+        if self.k is not None and self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+
+    @property
+    def payload(self) -> Any:
+        return self.queries if self.queries is not None else self.codes
+
+    @property
+    def n_queries(self) -> int:
+        return int(getattr(self.payload, "shape", (1,))[0])
+
+
+def as_search_request(batch: Any, *,
+                      deadline: Optional[float] = None) -> SearchRequest:
+    """Normalize a bare query batch to a ``SearchRequest``.
+
+    The back-compat shim: every ``submit`` accepts either form, so
+    pre-existing callers (and the bit-identity tests) keep passing
+    arrays. An explicit ``deadline=`` kwarg wins over the request's own
+    field; a bare batch becomes an unversioned float-query request.
+    """
+    if isinstance(batch, SearchRequest):
+        if deadline is not None and deadline != batch.deadline:
+            return dataclasses.replace(batch, deadline=deadline)
+        return batch
+    return SearchRequest(queries=batch, deadline=deadline)
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchResult:
+    """Typed result: scores/ids plus serving provenance.
+
+    Unpacks like the legacy ``(scores, ids)`` tuple (``vals, ids =
+    result`` and ``result[0]``/``result[1]`` both work), so drivers
+    written against ``Ticket.result()`` need no changes.
+
+    served_by_version — embedding version of the index that actually
+        answered (may differ from the request's version during a compat
+        window); None when the tier is unversioned.
+    replica     — replica id that answered (None below the proxy tier).
+    generation  — that replica's index generation at dispatch.
+    compat_encoded — True when the query crossed versions through a
+        ``CompatibilityMatrix`` encoder rather than a native replica.
+    """
+
+    scores: Array
+    ids: Array
+    served_by_version: Optional[str] = None
+    replica: Optional[int] = None
+    generation: Optional[int] = None
+    compat_encoded: bool = False
+
+    def __iter__(self):
+        return iter((self.scores, self.ids))
+
+    def __getitem__(self, i):
+        return (self.scores, self.ids)[i]
+
+    def __len__(self):
+        return 2
+
+
 @dataclasses.dataclass(frozen=True)
 class ServingConfig:
     """Knobs for ``ServingPipeline`` (see module docstring).
@@ -157,22 +270,43 @@ class Ticket:
         self.deadline = deadline
         self.t_enqueue = time.perf_counter()
         self.t_reply: Optional[float] = None
+        # The typed request this ticket was admitted with (None for a
+        # bare-batch shim admit); cleared on resolve so a retained
+        # ticket does not pin the query arrays.
+        self.request: Optional[SearchRequest] = None
+        # Serving provenance, populated at dispatch (replica tier) or
+        # via the resolve's provenance argument (proxy tier, where
+        # racing failover re-dispatches mean only the winning resolve
+        # may write them).
+        self.served_by_version: Optional[str] = None
+        self.served_by_replica: Optional[int] = None
+        self.served_by_generation: Optional[int] = None
+        self.compat_encoded = False
         self._done = threading.Event()
         self._value: Any = None
         self._error: Optional[BaseException] = None
         self._resolve_lock = threading.Lock()
         self._callbacks: List[Callable[["Ticket"], None]] = []
 
-    def _resolve(self, value=None, error: Optional[BaseException] = None) -> bool:
+    def _resolve(self, value=None, error: Optional[BaseException] = None,
+                 provenance: Optional[tuple] = None) -> bool:
         # Atomic first-wins: the scan thread and a shutdown sweep may
         # race to resolve the same ticket; it never resolves twice and
         # a stored value is never clobbered. Returns True to the winner
         # (so completion stats are recorded exactly once).
+        # ``provenance`` = (replica, version, generation, compat): the
+        # proxy tier passes it here, under the same lock, because two
+        # racing inner resolutions (failover re-dispatch) must not let
+        # the loser overwrite the winner's serving provenance.
         with self._resolve_lock:
             if self._done.is_set():
                 return False
+            if provenance is not None:
+                (self.served_by_replica, self.served_by_version,
+                 self.served_by_generation, self.compat_encoded) = provenance
             self.t_reply = time.perf_counter()
             self._value, self._error = value, error
+            self.request = None
             self._done.set()
             callbacks, self._callbacks = self._callbacks, []
         # Outside the lock: a callback may re-enter ticket/router state
@@ -216,6 +350,22 @@ class Ticket:
         if self._error is not None:
             raise self._error
         return self._value
+
+    def search_result(self, timeout: Optional[float] = None) -> SearchResult:
+        """``result()`` plus serving provenance, as a ``SearchResult``.
+
+        The typed face of the same resolution: identical arrays (the
+        raw tuple path stays bit-identical for legacy callers), wrapped
+        with which version/replica/generation actually answered.
+        """
+        vals, ids = self.result(timeout)
+        return SearchResult(
+            scores=vals, ids=ids,
+            served_by_version=self.served_by_version,
+            replica=self.served_by_replica,
+            generation=self.served_by_generation,
+            compat_encoded=self.compat_encoded,
+        )
 
     @property
     def latency_s(self) -> float:
@@ -274,8 +424,13 @@ class AdmissionQueue:
                 raise PipelineClosed("submit after close")
             seq = self._seq
             self._seq += 1
-        n = int(getattr(payload, "shape", (1,))[0])
+        if isinstance(payload, SearchRequest):
+            n = payload.n_queries
+        else:
+            n = int(getattr(payload, "shape", (1,))[0])
         ticket = Ticket(seq, n, deadline=deadline)
+        if isinstance(payload, SearchRequest):
+            ticket.request = payload
         item = (ticket, payload)
         if self.policy == "shed" and not force_block:
             try:
@@ -383,6 +538,11 @@ class ServingPipeline:
         self.encode_fn = encode_fn
         self.search_fn = search_fn
         self.config = config
+        # Embedding version of the index this replica currently serves
+        # (provenance only — the ROUTING decision lives in the proxy's
+        # version map). Set by ``QueryRouter.set_version`` / the rolling
+        # swap; None = unversioned.
+        self.embedding_version: Optional[str] = None
         self._scan_gate = scan_gate
         self._admission = AdmissionQueue(
             depth=config.queue_depth, policy=config.policy
@@ -456,7 +616,15 @@ class ServingPipeline:
         ``deadline``: absolute perf_counter instant; a batch still
         queued when it passes is shed at dequeue with
         ``DeadlineExpired``, never scanned.
+
+        ``queries`` may be a bare batch (legacy shim: encoded by
+        ``encode_fn``, full index top-k — bit-identical to the
+        pre-``SearchRequest`` path) or a ``SearchRequest`` (typed path:
+        codes bypass the encode stage, ``k`` truncates, the request's
+        own deadline applies when the kwarg is None).
         """
+        if isinstance(queries, SearchRequest) and deadline is None:
+            deadline = queries.deadline
         # Reserve the in-flight slot BEFORE admission: once admit() has
         # enqueued the ticket, a concurrent quiesce() must already see
         # it, or "quiesce means quiet" has a window where an admitted
@@ -691,8 +859,21 @@ class ServingPipeline:
                 # only delay still-live work behind it.
                 self._shed_expired(ticket)
                 continue
+            req = ticket.request
             try:
-                codes = self.encode_fn(queries)
+                if req is not None and req.codes is not None:
+                    codes = req.codes  # pre-encoded: bypass the stage
+                else:
+                    enc = self.encode_fn
+                    src = queries
+                    if req is not None:
+                        # Compat hop: the router re-encodes a cross-
+                        # version query with the bc-trained encoder it
+                        # chose for THIS replica's index version.
+                        if req.encode_override is not None:
+                            enc = req.encode_override
+                        src = req.queries
+                    codes = enc(src)
             except BaseException as e:  # surfaced on the ticket
                 ticket._resolve(error=e)
                 continue
@@ -752,6 +933,14 @@ class ServingPipeline:
                 # the device.
                 self._shed_expired(ticket)
                 continue
+            # Provenance at dispatch (single scan thread; the only
+            # racing resolvers for a replica-level ticket are error
+            # paths, where provenance is moot).
+            req = ticket.request
+            ticket.served_by_generation = self.generation
+            ticket.served_by_version = self.embedding_version
+            if req is not None and req.encode_override is not None:
+                ticket.compat_encoded = True
             # Bound device concurrency BEFORE dispatching: at most
             # dispatch_ahead scans run at once (1 = strictly serial
             # device — on shared-core CPU, concurrent full-corpus scans
@@ -780,6 +969,10 @@ class ServingPipeline:
                 self._watch_end(ticket.seq)
                 ticket._resolve(error=e)
                 continue
+            if req is not None and req.k is not None:
+                # Per-request truncation of the index's top-k (a lazy
+                # slice on the async result — no extra device sync).
+                vals, ids = vals[:, : req.k], ids[:, : req.k]
             inflight.append((ticket, vals, ids))
         while inflight:
             await_oldest()

@@ -116,6 +116,19 @@ def _chaos_row(**overrides):
     return row
 
 
+def _upgrade_row(**overrides):
+    row = {
+        "mode": "upgrade", "replicas": 2, "index_kind": "flat",
+        "from_version": "v1", "to_version": "v2",
+        "swapped_replicas": 2, "swap_s": 0.1, "queries_during_swap": 128,
+        "submitted": 20, "lost": 0, "reordered": 0, "bit_identical": True,
+        "compat_dispatches": 8, "recall_v1": 0.9, "recall_v2": 0.8,
+        "recall_floor": 0.55, "final_versions": ["v2", "v2"],
+    }
+    row.update(overrides)
+    return row
+
+
 def _serving_bench(ratio: float, paired_ratio: float = 0.95):
     return {"bench": "serving", "rows": [
         {"mode": "sequential", "qps": 1000.0},
@@ -124,6 +137,7 @@ def _serving_bench(ratio: float, paired_ratio: float = 0.95):
         _replicated_row(paired_ratio=paired_ratio),
         _swap_row(),
         _chaos_row(),
+        _upgrade_row(),
     ]}
 
 
@@ -342,6 +356,104 @@ def test_serving_gate_fails_when_degradation_does_not_help(tmp_path):
     assert "did not reduce shedding" in out.stderr
 
 
+# -- live embedding-version migration (upgrade row) ---------------------------
+
+
+def test_serving_gate_requires_an_upgrade_row(tmp_path):
+    """The live v1 -> v2 migration is part of the schema now: a report
+    without it (emitter regression) must not pass green."""
+    bench = _serving_bench(1.2)
+    bench["rows"] = bench["rows"][:6]  # drop the upgrade row
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "no 'upgrade' row" in out.stderr
+
+
+def test_serving_gate_fails_on_malformed_upgrade_row(tmp_path):
+    bench = _serving_bench(1.2)
+    del bench["rows"][6]["recall_floor"]
+    del bench["rows"][6]["compat_dispatches"]
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "missing keys" in out.stderr
+    assert "recall_floor" in out.stderr and "compat_dispatches" in out.stderr
+
+
+def test_serving_gate_fails_on_lost_results_during_upgrade(tmp_path):
+    bench = _serving_bench(1.2)
+    bench["rows"][6] = _upgrade_row(lost=2)
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "lost 2 result(s) during the version migration" in out.stderr
+
+
+def test_serving_gate_fails_on_reordered_results_during_upgrade(tmp_path):
+    bench = _serving_bench(1.2)
+    bench["rows"][6] = _upgrade_row(reordered=1)
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "reordered 1 result(s)" in out.stderr
+
+
+def test_serving_gate_fails_when_upgrade_breaks_bit_identity(tmp_path):
+    bench = _serving_bench(1.2)
+    bench["rows"][6] = _upgrade_row(bit_identical=False)
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "not bit-identical" in out.stderr
+
+
+def test_serving_gate_fails_below_upgrade_recall_floor(tmp_path):
+    """Per-version recall across the migration window is a QUALITY gate:
+    degrading by version must not degrade below the row's own floor."""
+    bench = _serving_bench(1.2)
+    bench["rows"][6] = _upgrade_row(recall_v2=0.4)
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "recall_v2=0.4000 below the recall floor" in out.stderr
+
+
+def test_serving_gate_upgrade_floor_cannot_be_zeroed_out(tmp_path):
+    """An emitter shipping recall_floor=0 must not self-certify: the
+    gate floors it at --min-upgrade-recall (default 0.5) — which stays
+    configurable for deliberately tiny smoke corpora."""
+    bench = _serving_bench(1.2)
+    bench["rows"][6] = _upgrade_row(recall_floor=0.0, recall_v1=0.1,
+                                    recall_v2=0.1)
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "below the recall floor 0.5" in out.stderr
+    out = _run_gate(tmp_path, bench, "--min-upgrade-recall", "0.05")
+    assert out.returncode == 0, out.stdout + out.stderr
+
+
+def test_serving_gate_fails_without_a_compat_dispatch(tmp_path):
+    """A 'migration' whose stream never took the cross-version hop
+    proves nothing about the compat path — hard fail."""
+    bench = _serving_bench(1.2)
+    bench["rows"][6] = _upgrade_row(compat_dispatches=0)
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "no compat dispatch" in out.stderr
+
+
+def test_serving_gate_fails_on_incomplete_version_migration(tmp_path):
+    bench = _serving_bench(1.2)
+    bench["rows"][6] = _upgrade_row(swapped_replicas=1)
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "migrated only 1/2" in out.stderr
+
+
+def test_serving_gate_fails_when_a_replica_misses_the_target_version(
+        tmp_path):
+    bench = _serving_bench(1.2)
+    bench["rows"][6] = _upgrade_row(final_versions=["v2", "v1"])
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "final replica versions" in out.stderr
+
+
 # -- docs lint (scripts/check_docs_links.py) ---------------------------------
 
 DOCS_LINT = os.path.join(
@@ -431,6 +543,8 @@ def test_serving_gate_accepts_real_emitter_schema(tmp_path):
     from benchmarks.table5_search_latency import emit_serving_json
 
     path = tmp_path / "BENCH_serving.json"
+    # the upgrade row trains its own mini-world (phi_v1 + the bc-trained
+    # phi_v2), so this end-to-end run includes a real training loop
     emit_serving_json(path=str(path), n_docs=512, batch=8, n_batches=6,
                       trials=2)
     out = subprocess.run(

@@ -23,9 +23,15 @@ from repro.core import (
     bc_train_step,
     binarize_eval,
     init_train_state,
+    make_encode_fn,
     train_step,
 )
 from repro.data.synthetic import backbone_upgrade, clustered_corpus, pair_batches
+from repro.launch.lifecycle import (
+    COMPAT_RECALL_FLOOR,
+    CorpusSnapshot,
+    make_builder,
+)
 from repro.train import optim
 
 DIM, CODE, LEVELS = 64, 32, 3
@@ -84,13 +90,23 @@ def _recall_cross(cfg, q_state, d_state, q_emb, d_emb, gt, k=10):
     return float(jnp.mean(jnp.any(idx == jnp.asarray(gt)[:, None], -1)))
 
 
-def test_backward_compatible_upgrade():
+@functools.lru_cache(maxsize=1)
+def _upgrade_world():
+    """Shared backbone-upgrade world: phi_old trained on the old float
+    space, phi_bc compatibility-trained for the new one. Cached — both
+    the Table 4 ordering test and the serving recall-floor test read it."""
+    cfg = _cfg()
     docs, queries, gt = clustered_corpus(0, 3000, 64, DIM, n_clusters=128)
     new_docs = backbone_upgrade(docs, 5)
     new_queries = backbone_upgrade(queries, 5)
-    cfg = _cfg()
-
     old = _train(cfg, docs, seed=0)
+    bc = _train_bc(cfg, old, docs, new_docs)
+    return cfg, docs, queries, gt, new_docs, new_queries, old, bc
+
+
+def test_backward_compatible_upgrade():
+    cfg, docs, queries, gt, new_docs, new_queries, old, bc = _upgrade_world()
+
     baseline = _recall_cross(cfg, old, old, queries, docs, gt)
 
     # new model trained freely on the new space: incompatible with old index
@@ -101,7 +117,6 @@ def test_backward_compatible_upgrade():
     warm_only = _recall_cross(cfg, old, old, new_queries, docs, gt)
 
     # ours: BC training (Eq. 9-10 + influence)
-    bc = _train_bc(cfg, old, docs, new_docs)
     compatible = _recall_cross(cfg, bc, old, new_queries, docs, gt)
 
     assert baseline > 0.8, baseline
@@ -109,6 +124,26 @@ def test_backward_compatible_upgrade():
     assert compatible > warm_only + 0.05, (warm_only, compatible)
     assert compatible > incompatible + 0.3, (incompatible, compatible)
     assert compatible >= baseline - 0.2, (baseline, compatible)
+
+
+def test_bc_queries_meet_recall_floor_on_v1_serving_index():
+    """The serving-tier contract behind the CompatibilityMatrix hop: a
+    bc-trained v2 encoder's queries, scored through the SAME packed-SDC
+    flat index the tier serves (not the float-composed cosine of the
+    ordering test above), must hold COMPAT_RECALL_FLOOR — the floor the
+    upgrade bench row embeds and scripts/check_bench_gate.py enforces."""
+    cfg, docs, _, gt, _, new_queries, old, bc = _upgrade_world()
+
+    enc_old = make_encode_fn(old.params, old.bn_state, cfg.binarizer)
+    enc_bc = make_encode_fn(bc.params, bc.bn_state, cfg.binarizer)
+    snap = CorpusSnapshot(codes=np.asarray(enc_old(docs)), n_levels=LEVELS,
+                          embedding_version="v1")
+    search_v1 = make_builder("flat", k=10, backend="xla").build(snap)
+
+    _, idx = search_v1(enc_bc(new_queries))
+    recall = float(np.mean(np.any(
+        np.asarray(idx) == np.asarray(gt)[:, None], -1)))
+    assert recall >= COMPAT_RECALL_FLOOR, recall
 
 
 def test_bc_loss_terms_finite():

@@ -1,0 +1,351 @@
+"""Version-aware serving: SearchRequest/SearchResult, compat routing.
+
+The serving face of compatible training (paper §3.2.3): typed requests
+carry an ``embedding_version``, the router prefers native-version
+replicas and falls back through a ``CompatibilityMatrix`` encoder, and
+a tier with no path to the request's version fails typed
+(``IncompatibleVersion``), not hung or silently wrong-versioned.
+
+Encoders here are untrained random-projection binarizers
+(``make_encode_fn`` over ``hidden_dim=0`` weights) — routing semantics
+and bit-identity do not need recall; ``tests/test_compat.py`` owns the
+bc-trained recall floor.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import BinarizerConfig, init_binarizer, make_encode_fn
+from repro.launch.lifecycle import (
+    CorpusSnapshot,
+    FlatBuilder,
+    UnknownBuildParam,
+    builder_version,
+    make_builder,
+)
+from repro.launch.proxy import (
+    AllReplicasDown,
+    CompatibilityMatrix,
+    QueryRouter,
+    ReplicaSet,
+)
+from repro.launch.serving import (
+    IncompatibleVersion,
+    RequestShed,
+    SearchRequest,
+    SearchResult,
+    ServingConfig,
+    ServingPipeline,
+    serve_sequential,
+)
+
+DIM, CODE, LEVELS, K = 16, 8, 2, 5
+N_DOCS, BATCH = 64, 4
+
+
+def _encoder(seed: int):
+    cfg = BinarizerConfig(input_dim=DIM, code_dim=CODE, n_levels=LEVELS,
+                          hidden_dim=0)
+    p, s = init_binarizer(jax.random.PRNGKey(seed), cfg)
+    return make_encode_fn(p, s, cfg)
+
+
+@pytest.fixture(scope="module")
+def world():
+    rng = np.random.default_rng(0)
+    docs = rng.normal(size=(N_DOCS, DIM)).astype(np.float32)
+    queries = rng.normal(size=(BATCH, DIM)).astype(np.float32)
+    enc_v1, enc_v2, enc_compat = _encoder(1), _encoder(2), _encoder(3)
+    builder = FlatBuilder(k=K)
+    snap_v1 = CorpusSnapshot(codes=np.asarray(enc_v1(docs)),
+                             n_levels=LEVELS, embedding_version="v1")
+    snap_v2 = CorpusSnapshot(codes=np.asarray(enc_v2(docs)),
+                             n_levels=LEVELS, embedding_version="v2")
+    return dict(
+        docs=docs, queries=queries, builder=builder,
+        enc_v1=enc_v1, enc_v2=enc_v2, enc_compat=enc_compat,
+        snap_v1=snap_v1, snap_v2=snap_v2,
+        search_v1=builder.build(snap_v1), search_v2=builder.build(snap_v2),
+        ver_v1=builder_version(builder, snap_v1),
+        ver_v2=builder_version(builder, snap_v2),
+    )
+
+
+def _eq(a, b):
+    (va, ia), (vb, ib) = (a[0], a[1]), (b[0], b[1])
+    return (np.array_equal(np.asarray(ia), np.asarray(ib))
+            and np.array_equal(np.asarray(va), np.asarray(vb)))
+
+
+# ---------------------------------------------------------------------------
+# SearchRequest / SearchResult shapes
+# ---------------------------------------------------------------------------
+
+
+def test_search_request_validates():
+    with pytest.raises(ValueError):
+        SearchRequest()  # neither queries nor codes
+    with pytest.raises(ValueError):
+        SearchRequest(queries=np.zeros((1, 2)), codes=np.zeros((1, 2)))
+    with pytest.raises(ValueError):
+        SearchRequest(queries=np.zeros((1, 2)), k=0)
+    req = SearchRequest(queries=np.zeros((3, 2)))
+    assert req.n_queries == 3
+
+
+def test_search_result_unpacks_like_tuple():
+    r = SearchResult(scores=np.arange(2), ids=np.arange(2) + 10,
+                     served_by_version="v1", replica=0, generation=1)
+    vals, ids = r
+    assert np.array_equal(vals, r.scores) and np.array_equal(ids, r.ids)
+    assert np.array_equal(r[0], r.scores) and np.array_equal(r[1], r.ids)
+    assert len(r) == 2
+
+
+def test_error_taxonomy():
+    # Terminal like AllReplicasDown, NOT a retryable shed: retry loops
+    # keyed on RequestShed must not spin on a version dead-end.
+    assert issubclass(IncompatibleVersion, RuntimeError)
+    assert not issubclass(IncompatibleVersion, RequestShed)
+    assert not issubclass(IncompatibleVersion, AllReplicasDown)
+
+
+# ---------------------------------------------------------------------------
+# pipeline-level: typed path vs legacy shim
+# ---------------------------------------------------------------------------
+
+
+def test_bare_batch_and_request_paths_bit_identical(world):
+    w = world
+    ref = serve_sequential(w["enc_v1"], w["search_v1"], [w["queries"]])[0]
+    with ServingPipeline(w["enc_v1"], w["search_v1"]) as pipe:
+        legacy = pipe.submit(w["queries"]).result()
+        typed = pipe.submit(SearchRequest(queries=w["queries"])).result()
+    assert _eq(legacy, ref) and _eq(typed, ref)
+
+
+def test_codes_bypass_skips_encode(world):
+    w = world
+    codes = w["enc_v1"](w["queries"])
+
+    def poisoned_encode(_):
+        raise AssertionError("encode stage must be bypassed for codes")
+
+    with ServingPipeline(poisoned_encode, w["search_v1"]) as pipe:
+        got = pipe.submit(SearchRequest(codes=codes)).result()
+    assert _eq(got, w["search_v1"](codes))
+
+
+def test_request_k_truncates(world):
+    w = world
+    ref = serve_sequential(w["enc_v1"], w["search_v1"], [w["queries"]])[0]
+    with ServingPipeline(w["enc_v1"], w["search_v1"]) as pipe:
+        vals, ids = pipe.submit(
+            SearchRequest(queries=w["queries"], k=3)
+        ).result()
+    assert vals.shape == (BATCH, 3) and ids.shape == (BATCH, 3)
+    assert _eq((vals, ids), (ref[0][:, :3], ref[1][:, :3]))
+
+
+# ---------------------------------------------------------------------------
+# router-level: version routing, compat fallback, typed dead-end
+# ---------------------------------------------------------------------------
+
+
+def test_incompatible_version_is_typed_and_terminal(world):
+    w = world
+    router = QueryRouter(ReplicaSet([(w["enc_v1"], w["search_v1"])]))
+    router.set_version(0, w["ver_v1"])
+    try:
+        with pytest.raises(IncompatibleVersion) as exc:
+            router.submit(SearchRequest(queries=w["queries"],
+                                        embedding_version="v2"))
+        assert "v2" in str(exc.value)
+        # Unversioned and native traffic still flow.
+        assert _eq(
+            router.submit(w["queries"]).result(),
+            serve_sequential(w["enc_v1"], w["search_v1"], [w["queries"]])[0],
+        )
+    finally:
+        router.close()
+
+
+def test_compat_fallback_bit_identical_with_provenance(world):
+    w = world
+    compat = CompatibilityMatrix()
+    compat.register("v2", "v1", w["enc_compat"])
+    router = QueryRouter(ReplicaSet([(w["enc_v1"], w["search_v1"])]),
+                         compat=compat)
+    router.set_version(0, w["ver_v1"])
+    try:
+        t = router.submit(SearchRequest(queries=w["queries"],
+                                        embedding_version="v2"))
+        res = t.search_result()
+        # The compat hop re-encodes with the registered encoder and
+        # serves from the v1 index — bit-identical to that path run
+        # sequentially.
+        ref = serve_sequential(w["enc_compat"], w["search_v1"],
+                               [w["queries"]])[0]
+        assert _eq(res, ref)
+        assert res.served_by_version == "v1"
+        assert res.compat_encoded and res.replica == 0
+        stats = router.stats()
+        assert stats["compat_dispatches"] == 1
+        assert stats["per_replica"][0]["embedding_version"] == "v1"
+    finally:
+        router.close()
+
+
+def test_codes_request_cannot_take_compat_hop(world):
+    w = world
+    compat = CompatibilityMatrix()
+    compat.register("v2", "v1", w["enc_compat"])
+    router = QueryRouter(ReplicaSet([(w["enc_v1"], w["search_v1"])]),
+                         compat=compat)
+    router.set_version(0, w["ver_v1"])
+    try:
+        with pytest.raises(IncompatibleVersion):
+            router.submit(SearchRequest(codes=w["enc_v2"](w["queries"]),
+                                        embedding_version="v2"))
+    finally:
+        router.close()
+
+
+def test_native_replica_preferred_over_compat(world):
+    w = world
+    compat = CompatibilityMatrix()
+    compat.register("v2", "v1", w["enc_compat"])
+    router = QueryRouter(
+        ReplicaSet([(w["enc_v1"], w["search_v1"]),
+                    (w["enc_v2"], w["search_v2"])], share_device=True),
+        compat=compat,
+    )
+    router.set_version(0, w["ver_v1"])
+    router.set_version(1, w["ver_v2"])
+    try:
+        for _ in range(4):  # round-robin must not rotate onto compat
+            res = router.submit(SearchRequest(
+                queries=w["queries"], embedding_version="v2"
+            )).search_result()
+            assert res.served_by_version == "v2"
+            assert res.replica == 1 and not res.compat_encoded
+        assert router.stats()["compat_dispatches"] == 0
+    finally:
+        router.close()
+
+
+def test_served_by_version_correct_under_failover_mid_upgrade(world):
+    w = world
+
+    def broken_search(codes):
+        raise RuntimeError("v2 replica scan fault")
+
+    compat = CompatibilityMatrix()
+    compat.register("v2", "v1", w["enc_compat"])
+    router = QueryRouter(
+        ReplicaSet([(w["enc_v1"], w["search_v1"]),
+                    (w["enc_v2"], broken_search)], share_device=True),
+        compat=compat,
+    )
+    router.set_version(0, w["ver_v1"])
+    router.set_version(1, w["ver_v2"])
+    try:
+        # Native v2 replica is preferred, fails, and the ticket fails
+        # over THROUGH the compat encoder onto the v1 survivor — the
+        # result must carry the surviving replica's version, not the
+        # request's, and flag the compat hop.
+        t = router.submit(SearchRequest(queries=w["queries"],
+                                        embedding_version="v2"))
+        res = t.search_result(timeout=30.0)
+        ref = serve_sequential(w["enc_compat"], w["search_v1"],
+                               [w["queries"]])[0]
+        assert _eq(res, ref)
+        assert res.served_by_version == "v1"
+        assert res.replica == 0 and res.compat_encoded
+        assert router.states()[1] == "unhealthy"
+        assert router.stats()["failovers"] >= 1
+    finally:
+        router.close()
+
+
+def test_failover_dead_end_fails_typed(world):
+    w = world
+
+    def broken_search(codes):
+        raise RuntimeError("v2 replica scan fault")
+
+    # No compat matrix: once the only v2 replica dies, the v2 ticket has
+    # a healthy v1 replica it can never use — it must fail typed, not
+    # park forever on a probe that cannot change the version topology.
+    router = QueryRouter(
+        ReplicaSet([(w["enc_v1"], w["search_v1"]),
+                    (w["enc_v2"], broken_search)], share_device=True),
+    )
+    router.set_version(0, w["ver_v1"])
+    router.set_version(1, w["ver_v2"])
+    try:
+        t = router.submit(SearchRequest(queries=w["queries"],
+                                        embedding_version="v2"))
+        with pytest.raises(IncompatibleVersion):
+            t.result(timeout=30.0)
+    finally:
+        router.close()
+
+
+def test_effort_hint_pre_degrades_knob(world):
+    from repro.launch.proxy import EffortKnob
+
+    w = world
+    knob = EffortKnob(n_levels=3)
+    router = QueryRouter(ReplicaSet([(w["enc_v1"], w["search_v1"])]))
+    router.enable_degradation(knob)
+    try:
+        router.submit(SearchRequest(queries=w["queries"],
+                                    effort=1)).result()
+        assert knob.level >= 1
+    finally:
+        router.close()
+
+
+# ---------------------------------------------------------------------------
+# compatibility matrix + registry validation
+# ---------------------------------------------------------------------------
+
+
+def test_compat_matrix_validates(world):
+    m = CompatibilityMatrix()
+    with pytest.raises(ValueError):
+        m.register("v1", "v1", world["enc_v1"])
+    m.register("v2", "v1", world["enc_compat"])
+    assert m.lookup("v2", "v1") is world["enc_compat"]
+    assert m.lookup("v1", "v1") is None  # native: no encoder needed
+    assert m.lookup("v1", "v2") is None  # unregistered direction
+    assert m.compatible("v2", "v1") and m.compatible("v1", "v1")
+    assert m.compatible(None, "v1") and not m.compatible("v1", "v2")
+    assert m.pairs() == [("v2", "v1")]
+
+
+def test_make_builder_rejects_unknown_params():
+    with pytest.raises(UnknownBuildParam) as exc:
+        make_builder("flat", k=5, nprobe=7)
+    assert "nprobe" in str(exc.value) and "backend" in str(exc.value)
+    assert isinstance(exc.value, TypeError)
+    with pytest.raises(ValueError):
+        make_builder("no-such-index")
+    assert make_builder("ivf", k=5, nlist=8, nprobe=4).params["nlist"] == 8
+
+
+def test_snapshot_first_entry_point_parity(world):
+    from repro.index.flat import flat_search_from_snapshot
+
+    w = world
+    snap = w["snap_v1"]
+    q = w["enc_v1"](w["queries"])
+    via_snap = flat_search_from_snapshot(snap, k=K)(q)
+    via_raw = flat_search_from_snapshot(snap.codes, LEVELS, k=K)(q)
+    assert _eq(via_snap, via_raw)
+    with pytest.raises(ValueError):
+        flat_search_from_snapshot(snap, LEVELS + 1, k=K)
+    with pytest.raises(TypeError):
+        flat_search_from_snapshot(snap.codes, k=K)
