@@ -24,6 +24,7 @@ import numpy as np
 
 from benchmarks.common import timeit
 from repro.core.binarize_lib import (
+    coarse_codes,
     pack_bitplanes,
     pack_codes_nibbles,
     sdc_affine_epilogue,
@@ -84,6 +85,119 @@ def _scan_bytes(n_docs: int, code_dim: int, packed: bool,
     return n_docs * (code_bytes + per_doc_extra)
 
 
+def _recall_at_k(ids: np.ndarray, gt_ids: np.ndarray, k: int) -> float:
+    """Mean |top-k ∩ gt top-k| / k over the query axis."""
+    return float(np.mean([
+        len(set(ids[q, :k].tolist()) & set(gt_ids[q, :k].tolist())) / k
+        for q in range(ids.shape[0])
+    ]))
+
+
+def _serialized_doc_bytes(code_dim: int, n_levels: int) -> int:
+    """On-disk / cold-tier bytes per document: bit-packed codes + 4B
+    quantised inv-norm (the byte model ``FlatSDC.nbytes`` uses)."""
+    return (code_dim * n_levels + 7) // 8 + 4
+
+
+def _bigranular_rows(cd, cq, levels: int, m: int, k: int = 10) -> list:
+    """Coarse-levels × k_coarse sweep of the bi-granular flat mode.
+
+    Per row: wall ms, rerank recall@k and coarse-only recall@k against
+    the full-level flat scan's top-k, and the tiered byte model —
+    ``coarse_bytes_scanned`` (hot tier, every doc at ``coarse_levels``),
+    ``fine_bytes_scanned`` (cold tier, only the Q×k' survivor rows at
+    full levels), ``full_bytes_scanned`` (what a single-tier scan of
+    the same corpus reads). The CI gate enforces coarse bytes ≤ 0.6×
+    full bytes at ``coarse_levels == levels // 2`` and rerank recall ≥
+    coarse-only recall on every row.
+    """
+    from repro.index.flat import flat_search_from_snapshot
+
+    codes_np = np.asarray(cd)
+    n_docs, queries = codes_np.shape[0], int(cq.shape[0])
+    full = flat_search_from_snapshot(codes_np, levels, k=k, backend="xla")
+    gt = np.asarray(full(cq)[1])
+    full_bytes = n_docs * _serialized_doc_bytes(m, levels)
+
+    rows = []
+    for c in sorted({max(1, levels // 2), levels - 1}):
+        if not 1 <= c < levels:
+            continue
+        # coarse-only contender: same hot tier, no fine rerank
+        coarse_only = flat_search_from_snapshot(
+            np.asarray(coarse_codes(jnp.asarray(codes_np), levels, c)),
+            c, k=k, backend="xla",
+        )
+        coarse_ids = np.asarray(coarse_only(
+            coarse_codes(jnp.asarray(cq), levels, c))[1])
+        recall_coarse = _recall_at_k(coarse_ids, gt, k)
+        for kc in (4 * k, 16 * k):
+            kc = min(kc, n_docs)
+            fn = flat_search_from_snapshot(
+                codes_np, levels, k=k, backend="xla", packed=c <= 4,
+                rerank={"coarse_levels": c, "k_coarse": kc},
+            )
+            t, out = timeit(lambda: fn(cq))
+            recall = _recall_at_k(np.asarray(out[1]), gt, k)
+            rows.append({
+                "coarse_levels": c, "k_coarse": kc, "packed": c <= 4,
+                "ms": 1e3 * t,
+                "recall_rerank": recall, "recall_coarse": recall_coarse,
+                "coarse_bytes_scanned":
+                    n_docs * _serialized_doc_bytes(m, c),
+                "fine_bytes_scanned":
+                    queries * kc * _serialized_doc_bytes(m, levels),
+                "full_bytes_scanned": full_bytes,
+            })
+    return rows
+
+
+def _bits_sweep_rows(n_docs: int, queries: int, m: int, k: int = 10,
+                     levels_grid=(1, 2, 4)) -> list:
+    """Bits-per-dimension sweep: n_levels × packed → recall / ms / bytes.
+
+    The ROADMAP's "tailorable bits" knob: the same scan substrate at
+    1/2/4 residual levels. Recall is a cheap grid-quantisation proxy —
+    random unit embeddings, each dimension clipped to the level grid's
+    value range and quantised through ``values_to_codes``, scored by the
+    SDC scan against a float-cosine ground truth. The CI gate checks
+    the schema, that ``index_bytes`` grows monotonically with levels,
+    and the packed/unpacked scan-byte ratio — not recall (a synthetic
+    corpus's recall ordering is honest but noisy at smoke sizes).
+    """
+    from repro.core.binarize_lib import code_affine_constants, values_to_codes
+
+    key = jax.random.PRNGKey(1234)
+    emb_d = jax.random.normal(key, (n_docs, m))
+    emb_d = emb_d / jnp.linalg.norm(emb_d, axis=-1, keepdims=True)
+    emb_q = jax.random.normal(jax.random.fold_in(key, 1), (queries, m))
+    emb_q = emb_q / jnp.linalg.norm(emb_q, axis=-1, keepdims=True)
+    gt = np.asarray(jax.lax.top_k(emb_q @ emb_d.T, k)[1])
+
+    rows = []
+    for levels in levels_grid:
+        a, beta = code_affine_constants(levels)
+        lo, hi = beta, a * (2**levels - 1) + beta
+        # scale unit rows so per-dim values use the grid's dynamic range
+        scale = float(np.sqrt(m)) * (hi / 2.0)
+        cd = values_to_codes(jnp.clip(emb_d * scale, lo, hi), levels)
+        cq = values_to_codes(jnp.clip(emb_q * scale, lo, hi), levels)
+        inv = R.doc_inv_norms(cd, levels)
+        cd_packed = pack_codes_nibbles(cd)
+        for packed in (False, True):
+            d = cd_packed if packed else cd
+            t, out = timeit(lambda: sdc_search_xla(
+                cq, d, inv, n_levels=levels, k=k, packed=packed))
+            rows.append({
+                "n_levels": levels, "packed": packed, "ms": 1e3 * t,
+                "recall": _recall_at_k(np.asarray(out[1]), gt, k),
+                "bytes_scanned": _scan_bytes(n_docs, m, packed,
+                                             per_doc_extra=4),
+                "index_bytes": n_docs * _serialized_doc_bytes(m, levels),
+            })
+    return rows
+
+
 def emit_sdc_scan_json(path: str = BENCH_JSON, n_docs: int = 50_000,
                        queries: int = 16, levels: int = 4, m: int = 128,
                        nlist: int = 64, nprobe: int = 8) -> dict:
@@ -94,6 +208,11 @@ def emit_sdc_scan_json(path: str = BENCH_JSON, n_docs: int = 50_000,
     packed/unpacked. Cols: wall ms (this host, jit'd XLA math — kernel rows
     on real TPU come from §Roofline) and GB scanned (the HBM-traffic model
     the int4 packing halves: codes + 4B inv-norm [+4B ids for IVF lists]).
+
+    Two extra sections ride along: ``bigranular`` (coarse-scan +
+    fine-rerank sweep, ``_bigranular_rows``) and ``bits_sweep``
+    (bits-per-dimension knob, ``_bits_sweep_rows``); both are
+    schema-gated by ``scripts/check_bench_gate.py``.
     """
     key = jax.random.PRNGKey(42)
     cd = jax.random.randint(key, (n_docs, m), 0, 2**levels).astype(jnp.int8)
@@ -131,12 +250,17 @@ def emit_sdc_scan_json(path: str = BENCH_JSON, n_docs: int = 50_000,
     for r in rows:
         r["gb_scanned"] = r["bytes_scanned"] / 1e9
 
+    bigranular = _bigranular_rows(cd, cq, levels, m)
+    bits_sweep = _bits_sweep_rows(n_docs, queries, m)
+
     out = {
         "bench": "sdc_scan",
         "host_backend": jax.default_backend(),
         "n_docs": n_docs, "queries": queries, "levels": levels, "code_dim": m,
         "nlist": nlist, "nprobe": nprobe,
         "rows": rows,
+        "bigranular": bigranular,
+        "bits_sweep": bits_sweep,
     }
     path = os.path.abspath(path)
     with open(path, "w") as f:
@@ -145,12 +269,30 @@ def emit_sdc_scan_json(path: str = BENCH_JSON, n_docs: int = 50_000,
     print("variant,packed,ms,gb_scanned")
     for r in rows:
         print(f"{r['variant']},{r['packed']},{r['ms']:.2f},{r['gb_scanned']:.6f}")
+    print("bigranular: coarse_levels,k_coarse,ms,recall_rerank,"
+          "recall_coarse,coarse/full bytes")
+    for r in bigranular:
+        print(f"{r['coarse_levels']},{r['k_coarse']},{r['ms']:.2f},"
+              f"{r['recall_rerank']:.3f},{r['recall_coarse']:.3f},"
+              f"{r['coarse_bytes_scanned'] / r['full_bytes_scanned']:.3f}")
+    print("bits_sweep: n_levels,packed,ms,recall,index_mb")
+    for r in bits_sweep:
+        print(f"{r['n_levels']},{r['packed']},{r['ms']:.2f},"
+              f"{r['recall']:.3f},{r['index_bytes'] / 1e6:.2f}")
     return out
 
 
 def _swap_revival_row(encode, codes_np, levels: int, batches, pcfg,
-                      router_policy: str) -> dict:
+                      router_policy: str, builder_factory=None,
+                      mode: str = "swap") -> dict:
     """Exercise the live index lifecycle and emit its BENCH row.
+
+    ``builder_factory`` (no-arg callable returning a FRESH lifecycle
+    builder; default plain ``FlatBuilder``) picks the index the tier
+    serves — the ``bigranular_swap`` row passes a tiered
+    coarse+rerank ``FlatBuilder`` to prove bit-identity of bi-granular
+    serving vs ``serve_sequential`` through a rolling swap, and the row
+    records whether every ticket carried ``reranked`` provenance.
 
     Two phases on a fresh 2-replica tier (flat index via the lifecycle
     builder, share_device like the sweep):
@@ -174,8 +316,11 @@ def _swap_revival_row(encode, codes_np, levels: int, batches, pcfg,
 
     from repro.launch import faults, lifecycle, proxy, serving
 
+    if builder_factory is None:
+        builder_factory = lambda: lifecycle.FlatBuilder(  # noqa: E731
+            k=10, backend="xla")
     snapshot = lifecycle.CorpusSnapshot(codes=codes_np, n_levels=levels)
-    builder = lifecycle.FlatBuilder(k=10, backend="xla")
+    builder = builder_factory()
     built = builder.build(snapshot)
     # replica 1: one injected transient scan fault (the shared fault
     # vocabulary from launch/faults.py — same plan type the tests and
@@ -204,7 +349,7 @@ def _swap_revival_row(encode, codes_np, levels: int, batches, pcfg,
         # the swap the identical pre-swap SearchFn object, making the
         # bit-identity check vacuous for the rebuild path.
         controller = lifecycle.RollingSwapController(
-            router, lifecycle.FlatBuilder(k=10, backend="xla"),
+            router, builder_factory(),
             warm_batches=batches[:1], encode_fn=encode,
         )
         stream = batches * 2
@@ -255,15 +400,17 @@ def _swap_revival_row(encode, codes_np, levels: int, batches, pcfg,
             if t.t_reply is not None and t_sw0 <= t.t_reply <= t_sw1
         )
         stats = router.stats()
+        reranked_all = bool(tickets) and all(t.reranked for t in tickets)
     finally:
         router.close()
     return {
-        "mode": "swap", "replicas": 2, "index_kind": builder.kind,
+        "mode": mode, "replicas": 2, "index_kind": builder.kind,
         "swapped_replicas": report.swapped, "swap_s": report.total_s,
         "queries_during_swap": int(q_during),
         "lost": int(lost), "reordered": int(reordered),
         "bit_identical": not mismatched,
         "revivals": int(revivals),
+        "reranked": reranked_all,
         "version": report.version.tag,
         "generations": [p["generation"] for p in stats["per_replica"]],
     }
@@ -489,6 +636,11 @@ def _upgrade_row(pcfg, router_policy: str) -> dict:
     ``reordered == 0``, and per-version recall across the whole
     migration window must hold ``COMPAT_RECALL_FLOOR`` (embedded in the
     row as ``recall_floor`` for the CI gate).
+
+    Every builder in the row is **bi-granular** (coarse_levels=2 of
+    LEVELS=3, k_coarse=128): the migration path itself proves tiered
+    serving stays bit-identical to its own sequential reference under
+    mixed-version traffic — the serving half of the tentpole gate.
     """
     import threading
 
@@ -557,12 +709,13 @@ def _upgrade_row(pcfg, router_policy: str) -> dict:
         codes=np.asarray(enc_v2(new_docs)), n_levels=LEVELS,
         embedding_version="v2",
     )
-    builder = lifecycle.FlatBuilder(k=K, backend="xla")
+    tiered = dict(k=K, backend="xla", coarse_levels=2, k_coarse=128)
+    builder = lifecycle.FlatBuilder(**tiered)
     search_v1 = builder.build(snap_v1)
     # reference-only v2 build; the tier's own v2 search_fn comes from the
     # controller's FRESH builder — same snapshot, deterministic math, so
     # the bit-identity check is against an independently built index
-    search_v2 = lifecycle.FlatBuilder(k=K, backend="xla").build(snap_v2)
+    search_v2 = lifecycle.FlatBuilder(**tiered).build(snap_v2)
 
     batch = 32
     n_b = queries.shape[0] // batch
@@ -628,7 +781,7 @@ def _upgrade_row(pcfg, router_policy: str) -> dict:
         th.start()
         t_sw0 = time.perf_counter()
         report = lifecycle.RollingSwapController(
-            router, lifecycle.FlatBuilder(k=K, backend="xla"),
+            router, lifecycle.FlatBuilder(**tiered),
             warm_batches=v2_batches[:1], encode_fn=enc_v2,
         ).swap_all(snap_v2)
         t_sw1 = time.perf_counter()
@@ -672,6 +825,8 @@ def _upgrade_row(pcfg, router_policy: str) -> dict:
             t.n_queries for _, _, t in tickets
             if t.t_reply is not None and t_sw0 <= t.t_reply <= t_sw1
         )
+        reranked_all = bool(answered) and all(
+            res.reranked for _, _, res in answered)
         stats = router.stats()
     finally:
         router.close()
@@ -683,6 +838,7 @@ def _upgrade_row(pcfg, router_policy: str) -> dict:
         "queries_during_swap": int(q_during),
         "lost": int(lost), "reordered": int(reordered),
         "bit_identical": not mismatched,
+        "reranked": reranked_all,
         "compat_dispatches": int(stats["compat_dispatches"]),
         "recall_v1": float(np.mean(hits["v1"])) if hits["v1"] else 0.0,
         "recall_v2": float(np.mean(hits["v2"])) if hits["v2"] else 0.0,
@@ -881,6 +1037,14 @@ def emit_serving_json(path: str = BENCH_SERVING_JSON, n_docs: int = 50_000,
     rows.append(_swap_revival_row(
         encode, np.asarray(cd), levels, batches, pcfg, router
     ))
+    from repro.launch import lifecycle as _lc
+    rows.append(_swap_revival_row(
+        encode, np.asarray(cd), levels, batches, pcfg, router,
+        builder_factory=lambda: _lc.FlatBuilder(
+            k=10, backend="xla", coarse_levels=max(1, levels // 2),
+            k_coarse=64),
+        mode="bigranular_swap",
+    ))
     rows.append(_chaos_row(
         encode, np.asarray(cd), levels, batches, pcfg, router
     ))
@@ -917,12 +1081,19 @@ def emit_serving_json(path: str = BENCH_SERVING_JSON, n_docs: int = 50_000,
         print(f"replicated(x{n})/replicated(x1) QPS ratio: "
               f"{repl_ratio[n]:.3f} best-paired-trial "
               f"({repl_ratio_med[n]:.3f} median, {router})")
-    sw, ch, up = rows[-3], rows[-2], rows[-1]
+    sw, bg, ch, up = rows[-4], rows[-3], rows[-2], rows[-1]
     print(f"rolling swap ({sw['index_kind']}): {sw['swapped_replicas']} "
           f"replica(s) in {1e3 * sw['swap_s']:.0f} ms under traffic, "
           f"{sw['queries_during_swap']} queries served mid-swap, "
           f"lost={sw['lost']} reordered={sw['reordered']} "
           f"bit_identical={sw['bit_identical']} revivals={sw['revivals']}")
+    print(f"bi-granular swap ({bg['index_kind']}): "
+          f"{bg['swapped_replicas']} replica(s) in "
+          f"{1e3 * bg['swap_s']:.0f} ms under traffic, "
+          f"{bg['queries_during_swap']} queries served mid-swap, "
+          f"lost={bg['lost']} reordered={bg['reordered']} "
+          f"bit_identical={bg['bit_identical']} "
+          f"reranked={bg['reranked']}")
     print(f"chaos drill: stuck scan detected in "
           f"{1e3 * ch['time_to_recover_s']:.0f} ms to revival "
           f"(stalls={ch['watchdog_stalls']} failovers={ch['failovers']} "
@@ -937,7 +1108,8 @@ def emit_serving_json(path: str = BENCH_SERVING_JSON, n_docs: int = 50_000,
           f"({up['queries_during_swap']} queries mid-swap, "
           f"{up['compat_dispatches']} compat dispatches), "
           f"lost={up['lost']} reordered={up['reordered']} "
-          f"bit_identical={up['bit_identical']}, recall "
+          f"bit_identical={up['bit_identical']} "
+          f"reranked={up['reranked']}, recall "
           f"v1={up['recall_v1']:.3f} v2={up['recall_v2']:.3f} "
           f"(floor {up['recall_floor']}), final={up['final_versions']}")
     return out

@@ -73,6 +73,34 @@ shipping a zero floor), when no compat dispatch was recorded (a
 "migration" that never exercised the cross-version hop proves nothing),
 when the swap did not cover every replica, or when any replica does not
 finish on the target version.
+
+The bi-granular sweep ("bigranular" section of BENCH_sdc_scan.json,
+added with the coarse-scan + fine-rerank mode) is gated on the memory
+hierarchy actually paying off: every row must carry the full schema
+(coarse_levels, k_coarse, recall_rerank/recall_coarse, and the
+coarse/fine/full byte totals), rerank recall must never fall below the
+coarse-only recall it refines, and at ``coarse_levels = levels // 2``
+the hot coarse tier's bytes must be <= --max-coarse-ratio x the
+full-level bytes (default 0.6: half the levels plus the per-doc
+metadata packing cannot shrink). A section that is missing, empty, or
+missing its half-levels row hard-fails — a tiered mode the bench
+cannot see must not pass green.
+
+The bits-per-dimension sweep ("bits_sweep" section, same file) is
+gated on schema and byte monotonicity only — recall at a given level
+count is a modelling choice, not an invariant: every row carries
+n_levels/packed/ms/recall/bytes_scanned/index_bytes, the serialized
+``index_bytes`` must grow monotonically with n_levels within each
+packed state, and each level's packed scan must hold the same
+--max-packed-ratio byte invariant as the main rows.
+
+The tiered serving drill ("bigranular_swap" row of BENCH_serving.json)
+re-runs the rolling-swap correctness record with a coarse+rerank
+lifecycle builder serving the tier: the same lost/reordered/
+bit-identity/revival checks apply, plus ``reranked`` must be true —
+every ticket must have carried rerank provenance, proving the tier
+actually served the bi-granular path (not a silent fallback to the
+flat index).
 """
 
 from __future__ import annotations
@@ -130,6 +158,23 @@ UPGRADE_ROW_KEYS = (
     "swapped_replicas", "swap_s", "queries_during_swap",
     "lost", "reordered", "bit_identical", "compat_dispatches",
     "recall_v1", "recall_v2", "recall_floor", "final_versions",
+)
+
+# Bi-granular sweep row (BENCH_sdc_scan.json "bigranular" section,
+# added with the coarse-scan + fine-rerank mode): the tiered layout's
+# quality/traffic record. recall_rerank must refine (>=) recall_coarse
+# and the hot coarse tier must actually be small.
+BIGRANULAR_ROW_KEYS = (
+    "coarse_levels", "k_coarse", "packed", "ms",
+    "recall_rerank", "recall_coarse",
+    "coarse_bytes_scanned", "fine_bytes_scanned", "full_bytes_scanned",
+)
+
+# Bits-per-dimension sweep row (BENCH_sdc_scan.json "bits_sweep"
+# section): schema + byte monotonicity only — recall is recorded, not
+# gated (the level count is a quality/cost knob, not an invariant).
+BITS_SWEEP_ROW_KEYS = (
+    "n_levels", "packed", "ms", "recall", "bytes_scanned", "index_bytes",
 )
 
 
@@ -367,6 +412,28 @@ def check_serving(bench: dict, min_ratio: float,
                   f"recall_v1={r.get('recall_v1')},"
                   f"recall_v2={r.get('recall_v2')},"
                   f"final={r.get('final_versions')}")
+    bg_rows = [r for r in rows if r.get("mode") == "bigranular_swap"]
+    if not bg_rows:
+        print("serving gate: no 'bigranular_swap' row — the tiered "
+              "(coarse-scan + fine-rerank) serving drill must be exercised "
+              "and emitted", file=sys.stderr)
+        return 1
+    for r in bg_rows:
+        label = f"bigranular_swap row (index_kind={r.get('index_kind')})"
+        failures += _check_swap_row(r, label)
+        # the same correctness record as the plain swap, PLUS proof the
+        # tier actually served the rerank path: every resolved ticket
+        # must have carried reranked provenance.
+        if r.get("reranked") is not True:
+            print(f"serving gate: {label} reranked={r.get('reranked')} — "
+                  "the tier did not serve every query through the "
+                  "bi-granular rerank path", file=sys.stderr)
+            failures += 1
+        if "lost" in r:
+            print(f"bigranular_swap,lost={r.get('lost')},"
+                  f"reordered={r.get('reordered')},"
+                  f"bit_identical={r.get('bit_identical')},"
+                  f"reranked={r.get('reranked')}")
     for r in replicated:
         label = f"replicated row (replicas={r.get('replicas')})"
         failures += _check_replicated_schema(r, label)
@@ -391,7 +458,117 @@ def check_serving(bench: dict, min_ratio: float,
     return 1 if failures else 0
 
 
-def check(bench: dict, max_ratio: float) -> int:
+def check_bigranular(bench: dict, max_coarse_ratio: float) -> int:
+    """Gate the coarse-scan + fine-rerank sweep (returns #failures).
+
+    Three invariants per row: full schema, rerank recall >= the
+    coarse-only recall it refines, and (at coarse_levels = levels // 2,
+    the acceptance point) coarse bytes <= max_coarse_ratio x full-level
+    bytes. The half-levels row must EXIST — a sweep that skips the
+    gated operating point must not pass green.
+    """
+    section = bench.get("bigranular")
+    if not section:
+        print("bench gate: no 'bigranular' section — the coarse-scan + "
+              "fine-rerank sweep must be emitted", file=sys.stderr)
+        return 1
+    levels = bench.get("levels")
+    half = max(1, levels // 2) if isinstance(levels, int) else None
+    failures = 0
+    saw_half = False
+    print("bigranular: coarse_levels,k_coarse,recall_rerank,recall_coarse,"
+          "coarse_ratio,status")
+    for i, r in enumerate(section):
+        missing = [k for k in BIGRANULAR_ROW_KEYS
+                   if k not in r or r[k] is None]
+        if missing:
+            print(f"bench gate: bigranular[{i}] missing keys {missing}",
+                  file=sys.stderr)
+            failures += 1
+            continue
+        errs = []
+        if r["recall_rerank"] < r["recall_coarse"]:
+            errs.append(f"rerank recall {r['recall_rerank']:.4f} below "
+                        f"coarse-only recall {r['recall_coarse']:.4f}")
+        full = r["full_bytes_scanned"]
+        ratio = r["coarse_bytes_scanned"] / full if full > 0 else None
+        if ratio is None:
+            errs.append("bad full_bytes_scanned")
+        elif half is not None and r["coarse_levels"] == half:
+            saw_half = True
+            if ratio > max_coarse_ratio:
+                errs.append(f"coarse tier too large: {ratio:.4f} of "
+                            f"full-level bytes > {max_coarse_ratio} at "
+                            f"coarse_levels={half}")
+        print(f"{r['coarse_levels']},{r['k_coarse']},"
+              f"{r['recall_rerank']:.4f},{r['recall_coarse']:.4f},"
+              f"{'?' if ratio is None else f'{ratio:.4f}'},"
+              f"{'FAIL' if errs else 'ok'}")
+        for e in errs:
+            print(f"bench gate: bigranular[{i}] {e}", file=sys.stderr)
+        failures += len(errs)
+    if half is not None and not saw_half:
+        print(f"bench gate: bigranular sweep has no row at "
+              f"coarse_levels={half} (= levels // 2), the gated operating "
+              "point", file=sys.stderr)
+        failures += 1
+    return failures
+
+
+def check_bits_sweep(bench: dict, max_ratio: float) -> int:
+    """Gate the bits-per-dimension sweep (returns #failures): schema,
+    packed-byte invariant per level, and serialized index_bytes
+    monotone nondecreasing in n_levels within each packed state."""
+    section = bench.get("bits_sweep")
+    if not section:
+        print("bench gate: no 'bits_sweep' section — the bits-per-"
+              "dimension sweep must be emitted", file=sys.stderr)
+        return 1
+    failures = 0
+    by_state: dict = {}
+    for i, r in enumerate(section):
+        missing = [k for k in BITS_SWEEP_ROW_KEYS
+                   if k not in r or r[k] is None]
+        if missing:
+            print(f"bench gate: bits_sweep[{i}] missing keys {missing}",
+                  file=sys.stderr)
+            failures += 1
+            continue
+        by_state.setdefault(bool(r["packed"]), {})[int(r["n_levels"])] = r
+    print("bits_sweep: n_levels,packed_bytes,unpacked_bytes,ratio,status")
+    for n in sorted(by_state.get(False, {})):
+        pair = by_state.get(True, {}).get(n)
+        if pair is None:
+            print(f"bench gate: bits_sweep n_levels={n} has no packed row",
+                  file=sys.stderr)
+            failures += 1
+            continue
+        p, u = pair["bytes_scanned"], by_state[False][n]["bytes_scanned"]
+        if u <= 0:
+            print(f"bench gate: bits_sweep n_levels={n} bad bytes",
+                  file=sys.stderr)
+            failures += 1
+            continue
+        ratio = p / u
+        ok = ratio <= max_ratio
+        print(f"{n},{p},{u},{ratio:.4f},{'ok' if ok else 'FAIL'}")
+        if not ok:
+            print(f"bench gate: bits_sweep n_levels={n} packed scan bytes "
+                  f"ratio {ratio:.4f} > {max_ratio}", file=sys.stderr)
+            failures += 1
+    for packed, rows in sorted(by_state.items()):
+        ns = sorted(rows)
+        for a, b in zip(ns, ns[1:]):
+            if rows[b]["index_bytes"] < rows[a]["index_bytes"]:
+                print(f"bench gate: bits_sweep index_bytes not monotone in "
+                      f"n_levels (packed={packed}): {rows[b]['index_bytes']} "
+                      f"at {b} levels < {rows[a]['index_bytes']} at {a}",
+                      file=sys.stderr)
+                failures += 1
+    return failures
+
+
+def check(bench: dict, max_ratio: float, max_coarse_ratio: float = 0.6) -> int:
     rows = bench.get("rows", [])
     by_variant: dict = {}
     for r in rows:
@@ -423,6 +600,12 @@ def check(bench: dict, max_ratio: float) -> int:
     if failures:
         print(f"bench gate: {failures} variant(s) violate the packed-byte "
               f"invariant (ratio <= {max_ratio})", file=sys.stderr)
+    # The bi-granular and bits-per-dimension sections ride on the scan
+    # bench specifically; BENCH_hnsw_scan.json flows through the same
+    # pairing logic above but carries neither section.
+    if bench.get("bench") == "sdc_scan":
+        failures += check_bigranular(bench, max_coarse_ratio)
+        failures += check_bits_sweep(bench, max_ratio)
     return 1 if failures else 0
 
 
@@ -431,6 +614,11 @@ def main() -> int:
     ap.add_argument("bench_json", help="path to BENCH_sdc_scan.json")
     ap.add_argument("--max-packed-ratio", type=float, default=0.55,
                     help="max allowed packed/unpacked bytes_scanned ratio")
+    ap.add_argument("--max-coarse-ratio", type=float, default=0.6,
+                    help="max allowed coarse/full-level bytes ratio for the "
+                         "bigranular sweep at coarse_levels = levels // 2 "
+                         "(BENCH_sdc_scan.json only: half the levels plus "
+                         "per-doc metadata packing cannot shrink)")
     ap.add_argument("--min-serving-ratio", type=float, default=1.0,
                     help="min allowed overlapped/sequential QPS ratio "
                          "(BENCH_serving.json only)")
@@ -452,7 +640,7 @@ def main() -> int:
         return check_serving(bench, args.min_serving_ratio,
                              args.min_replica_ratio,
                              args.min_upgrade_recall)
-    return check(bench, args.max_packed_ratio)
+    return check(bench, args.max_packed_ratio, args.max_coarse_ratio)
 
 
 if __name__ == "__main__":

@@ -312,6 +312,28 @@ def make_encode_fn(params, state, cfg: "BinarizerConfig"):
     return lambda e: _encode(jnp.asarray(e))
 
 
+def coarse_codes(codes, n_levels: int, coarse_levels: int):
+    """Level-prefix truncation: keep the first ``coarse_levels`` residual
+    levels of an ``n_levels`` integer code.
+
+    ``pack_codes`` makes level 0 (the base vector) the MSB, so dropping
+    the trailing ``n_levels - coarse_levels`` residual levels is a right
+    shift — the result is a *valid* integer code at ``coarse_levels``
+    levels, scoreable through the same affine epilogue with no
+    re-encoding. This is what makes the bi-granular memory hierarchy
+    free at build time: the hot coarse tier is a bit-shift view of the
+    cold full-level codes. Works on numpy and jax arrays alike.
+    """
+    if not 1 <= coarse_levels <= n_levels:
+        raise ValueError(
+            f"coarse_levels must be in [1, {n_levels}], got {coarse_levels}"
+        )
+    shift = n_levels - coarse_levels
+    if shift == 0:
+        return codes
+    return (codes >> shift).astype(codes.dtype)
+
+
 def unpack_codes(codes: jax.Array, n_levels: int) -> jax.Array:
     """Integer codes [..., m] -> bits [..., n_levels, m] in {-1, +1}."""
     c = codes.astype(jnp.int32)

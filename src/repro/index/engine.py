@@ -303,16 +303,22 @@ def flat_engine_inputs_from_snapshot(
     n_levels: int,
     *,
     packed: bool = False,
+    coarse_levels: int = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Host-side shared flat-engine inputs from a snapshot's unpacked
     codes: (codes [nibble-packed when ``packed``], inverse doc norms).
     Replica-independent, so a rolling swap computes them once per
     snapshot and reuses them for every replica's device placement
-    (``launch/lifecycle.EngineBuilder``)."""
-    from repro.core.binarize_lib import pack_codes_nibbles
+    (``launch/lifecycle.EngineBuilder``). With ``coarse_levels`` the
+    inputs are the hot coarse tier of a bi-granular engine: level-prefix
+    codes and their inverse norms at ``coarse_levels`` levels."""
+    from repro.core.binarize_lib import coarse_codes, pack_codes_nibbles
     from repro.kernels.sdc import ref as _ref
 
     codes = jnp.asarray(codes)
+    if coarse_levels is not None:
+        codes = coarse_codes(codes, n_levels, coarse_levels)
+        n_levels = coarse_levels
     inv = _ref.doc_inv_norms(codes, n_levels)
     if packed:
         codes = pack_codes_nibbles(codes)
@@ -331,6 +337,8 @@ def engine_search_from_snapshot(
     block_q: int = 128,
     block_n: int = 512,
     prepared: Tuple[jax.Array, jax.Array] = None,
+    rerank: dict | None = None,
+    effort=None,
 ):
     """Fresh flat engine over ``mesh`` from a snapshot's unpacked codes.
 
@@ -345,23 +353,80 @@ def engine_search_from_snapshot(
     ``n_levels``) or raw unpacked codes plus an explicit ``n_levels``
     (legacy form); one convention across every
     ``*_search_from_snapshot`` entry point.
+
+    ``rerank={"coarse_levels": c, "k_coarse": k'}`` switches to
+    bi-granular mode: the engine leaves scan the level-prefix codes at
+    ``c`` levels and the cross-leaf merge produces the global coarse
+    top-k' survivors, which are then reranked *post-merge* against the
+    full-level codes (one fine gather over the whole corpus's cold tier
+    — a numpy / memmapped snapshot stays host-side, only survivor rows
+    are read). ``prepared`` must then come from
+    ``flat_engine_inputs_from_snapshot(..., coarse_levels=c)``. The
+    closure carries ``fn.reranked = True``. ``effort`` (int ``level``
+    attribute, 0 = full) narrows the rerank by slicing the merged
+    top-k' down to its top-``k_coarse >> level`` prefix (floored at k)
+    — an exact prefix of a sorted top-k, so no re-jit per level.
     """
-    from repro.index._snapshot import resolve_snapshot_args
+    from repro.index._snapshot import (
+        resolve_rerank_args,
+        resolve_snapshot_args,
+        split_effort,
+    )
 
     codes, n_levels = resolve_snapshot_args(codes, n_levels)
+    rr = resolve_rerank_args(rerank, n_levels)
+    if rr is None:
+        if prepared is None:
+            prepared = flat_engine_inputs_from_snapshot(codes, n_levels,
+                                                        packed=packed)
+        search = make_distributed_search(
+            mesh, n_levels=n_levels, k=k, shard_axes=shard_axes,
+            backend=backend, packed=packed, block_q=block_q, block_n=block_n,
+        )
+        qspec, *in_specs = engine_input_shardings(mesh, shard_axes)
+        ins = [jax.device_put(a, s) for a, s in zip(prepared, in_specs)]
+
+        def snapshot_search(q_codes):
+            return search(jax.device_put(q_codes, qspec), *ins)
+
+        return snapshot_search
+
+    import numpy as np
+
+    from repro.core.binarize_lib import coarse_codes
+    from repro.kernels.sdc.rerank import fine_inv_norms, sdc_rerank_backend
+
+    c_levels, k_coarse = rr
+    k_coarse = min(k_coarse, codes.shape[0])
+    packed_c = packed and c_levels <= 4
     if prepared is None:
-        prepared = flat_engine_inputs_from_snapshot(codes, n_levels,
-                                                    packed=packed)
+        prepared = flat_engine_inputs_from_snapshot(
+            codes, n_levels, packed=packed_c, coarse_levels=c_levels,
+        )
     search = make_distributed_search(
-        mesh, n_levels=n_levels, k=k, shard_axes=shard_axes,
-        backend=backend, packed=packed, block_q=block_q, block_n=block_n,
+        mesh, n_levels=c_levels, k=k_coarse, shard_axes=shard_axes,
+        backend=backend, packed=packed_c, block_q=block_q, block_n=block_n,
     )
     qspec, *in_specs = engine_input_shardings(mesh, shard_axes)
     ins = [jax.device_put(a, s) for a, s in zip(prepared, in_specs)]
+    fine_codes = codes if isinstance(codes, np.ndarray) else jnp.asarray(codes)
+    fine_inv = fine_inv_norms(fine_codes, n_levels)
 
     def snapshot_search(q_codes):
-        return search(jax.device_put(q_codes, qspec), *ins)
+        q = jnp.asarray(q_codes)
+        qc = coarse_codes(q, n_levels, c_levels)
+        _, cand = search(jax.device_put(qc, qspec), *ins)
+        if effort is not None:
+            kc_eff, _ = split_effort(effort.level, k=k, k_coarse=k_coarse)
+            cand = cand[:, :kc_eff]
+        return sdc_rerank_backend(
+            q, fine_codes, fine_inv, cand, n_levels=n_levels, k=k,
+            backend=backend,
+        )
 
+    if effort is not None:
+        snapshot_search.effort = effort
+    snapshot_search.reranked = True
     return snapshot_search
 
 

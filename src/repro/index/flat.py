@@ -9,12 +9,14 @@ Mirrors the paper's Table 5 contenders:
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.binarize_lib import (
+    coarse_codes,
     pack_bitplanes,
     pack_codes_nibbles,
     unpack_codes,
@@ -22,6 +24,7 @@ from repro.core.binarize_lib import (
 from repro.kernels.binary_dot.ops import binary_dot_search
 from repro.kernels.sdc import ref as sdc_ref
 from repro.kernels.sdc.ops import resolve_backend, sdc_search_backend
+from repro.kernels.sdc.rerank import fine_inv_norms, sdc_rerank_backend
 
 
 @dataclasses.dataclass
@@ -91,6 +94,78 @@ class FlatSDC:
         return self.codes.shape[0] * (packed_codes + 4)
 
 
+@dataclasses.dataclass
+class BiGranularFlat:
+    """Two-tier exhaustive index: hot coarse scan, cold fine rerank.
+
+    The coarse tier is a plain ``FlatSDC`` over the level-prefix codes
+    (first ``coarse_levels`` residual levels — a right shift, no
+    retraining; nibble-packed when ``coarse_levels <= 4`` and
+    ``packed``). The fine tier keeps the full-level codes exactly as
+    given: a numpy array (including ``np.memmap``) stays host-side and
+    only the per-query top-``k_coarse`` survivor rows are ever read
+    from it, so the fine tier may exceed RAM.
+
+    The rerank is bit-identical to a full-level flat scan restricted to
+    the survivors (``kernels/sdc/rerank``), so ``k_coarse >= N``
+    degenerates to exactly ``FlatSDC.search`` at full levels.
+    """
+
+    coarse: FlatSDC
+    fine_codes: Any  # [N, D] int8 full-level codes; numpy stays host-side
+    fine_inv_norm: Any  # [N] f32
+    n_levels: int
+    coarse_levels: int
+    k_coarse: int
+    backend: str = "xla"
+
+    @staticmethod
+    def build(
+        codes: Any,
+        n_levels: int,
+        *,
+        coarse_levels: int,
+        k_coarse: int,
+        packed: bool = False,
+        backend: str = "xla",
+    ) -> "BiGranularFlat":
+        host = isinstance(codes, np.ndarray)
+        c_src = jnp.asarray(np.asarray(codes)) if host else codes
+        coarse = FlatSDC.build(
+            coarse_codes(c_src, n_levels, coarse_levels), coarse_levels,
+            packed=packed and coarse_levels <= 4, backend=backend,
+        )
+        fine_inv = fine_inv_norms(codes, n_levels)
+        return BiGranularFlat(
+            coarse=coarse, fine_codes=codes, fine_inv_norm=fine_inv,
+            n_levels=n_levels, coarse_levels=coarse_levels,
+            k_coarse=k_coarse, backend=backend,
+        )
+
+    def search(
+        self, q_codes: jax.Array, k: int, block_n: int = 512,
+        k_coarse: int | None = None,
+    ) -> Tuple[jax.Array, jax.Array]:
+        kc = self.k_coarse if k_coarse is None else k_coarse
+        kc = min(kc, self.fine_codes.shape[0])
+        q = jnp.asarray(q_codes)
+        qc = coarse_codes(q, self.n_levels, self.coarse_levels)
+        _, cand = self.coarse.search(qc, kc, block_n=block_n)
+        return sdc_rerank_backend(
+            q, self.fine_codes, self.fine_inv_norm, cand,
+            n_levels=self.n_levels, k=k, backend=self.backend,
+        )
+
+    def coarse_nbytes(self) -> int:
+        return self.coarse.nbytes()
+
+    def nbytes(self) -> int:
+        fine = self.fine_codes.shape[0] * (
+            (self.fine_codes.shape[1] * self.n_levels + 7) // 8 + 4
+        )
+        return self.coarse.nbytes() + fine
+
+
 def flat_search_from_snapshot(
     codes,
     n_levels: int = None,
@@ -99,6 +174,8 @@ def flat_search_from_snapshot(
     packed: bool = False,
     backend: str = "xla",
     block_n: int = 512,
+    rerank: dict | None = None,
+    effort=None,
 ):
     """Rebuild-from-snapshot entry point (live index lifecycle).
 
@@ -113,14 +190,48 @@ def flat_search_from_snapshot(
     ``n_levels``) or raw unpacked codes plus an explicit ``n_levels``
     (legacy form). Same convention across every
     ``*_search_from_snapshot`` entry point.
+
+    ``rerank={"coarse_levels": c, "k_coarse": k'}`` switches the
+    closure to bi-granular mode (``BiGranularFlat``): packed hot coarse
+    scan at ``c`` levels for k' survivors, full-level fine rerank of
+    exactly those rows. The closure carries ``fn.reranked = True`` so
+    the serving tier can stamp result provenance. A numpy / memmapped
+    snapshot keeps its fine tier host-side (cold). ``effort`` (any
+    object with an int ``level`` attribute, 0 = full —
+    ``launch.proxy.EffortKnob``) is read per call and shrinks
+    ``k_coarse`` by halving (floored at k); level 0 is bit-identical to
+    ``effort=None``. A flat index has no other cost knob, so ``effort``
+    without ``rerank`` is ignored.
     """
-    from repro.index._snapshot import resolve_snapshot_args
+    from repro.index._snapshot import (
+        resolve_rerank_args,
+        resolve_snapshot_args,
+        split_effort,
+    )
 
     codes, n_levels = resolve_snapshot_args(codes, n_levels)
-    index = FlatSDC.build(
-        jnp.asarray(codes), n_levels, packed=packed, backend=backend
+    rr = resolve_rerank_args(rerank, n_levels)
+    if rr is None:
+        index = FlatSDC.build(
+            jnp.asarray(codes), n_levels, packed=packed, backend=backend
+        )
+        return lambda q: index.search(q, k, block_n=block_n)
+
+    c_levels, k_coarse = rr
+    bigr = BiGranularFlat.build(
+        codes, n_levels, coarse_levels=c_levels, k_coarse=k_coarse,
+        packed=packed, backend=backend,
     )
-    return lambda q: index.search(q, k, block_n=block_n)
+    if effort is None:
+        fn = lambda q: bigr.search(q, k, block_n=block_n)  # noqa: E731
+    else:
+        def fn(q):
+            kc_eff, _ = split_effort(effort.level, k=k, k_coarse=k_coarse)
+            return bigr.search(q, k, block_n=block_n, k_coarse=kc_eff)
+
+        fn.effort = effort
+    fn.reranked = True
+    return fn
 
 
 @dataclasses.dataclass

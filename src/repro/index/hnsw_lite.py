@@ -541,6 +541,7 @@ def hnsw_search_from_snapshot(
     packed: bool = False,
     backend: str = "xla",
     effort=None,
+    rerank: dict | None = None,
 ):
     """Rebuild-from-snapshot entry point (live index lifecycle).
 
@@ -563,32 +564,88 @@ def hnsw_search_from_snapshot(
     ``n_levels``) or raw unpacked codes plus an explicit ``n_levels``
     (legacy form); one convention across every
     ``*_search_from_snapshot`` entry point.
+
+    ``rerank={"coarse_levels": c, "k_coarse": k'}`` switches to
+    bi-granular mode: the NSW graph is built and walked over the
+    level-prefix codes at ``c`` levels (hot tier, cheaper neighbor
+    tables), its top-k' survivors are reranked against the full-level
+    codes (cold tier — a numpy / memmapped snapshot stays host-side,
+    only survivor rows are read). The closure carries
+    ``fn.reranked = True``. Under pressure, ``effort`` first halves
+    ``k_coarse`` (floored at k) and only residual levels halve ef/beam.
     """
-    from repro.index._snapshot import resolve_snapshot_args
+    from repro.index._snapshot import (
+        resolve_rerank_args,
+        resolve_snapshot_args,
+        split_effort,
+    )
     from repro.kernels.sdc import ref as _ref  # lazy: ref is build-time only
+    from repro.kernels.sdc.rerank import fine_inv_norms, sdc_rerank_backend
 
     codes, n_levels = resolve_snapshot_args(codes, n_levels)
-    codes = np.asarray(codes)
-    inv = np.asarray(_ref.doc_inv_norms(jnp.asarray(codes), n_levels))
+    rr = resolve_rerank_args(rerank, n_levels)
+    if rr is None:
+        codes = np.asarray(codes)
+        inv = np.asarray(_ref.doc_inv_norms(jnp.asarray(codes), n_levels))
+        graph = build_hnsw(
+            codes, inv, n_levels=n_levels, M=M,
+            ef_construction=ef_construction, seed=seed, packed=packed,
+        )
+        tables = prepare_batched(graph)
+        if effort is None:
+            return lambda q: search_hnsw_batched(
+                tables, q, k=k, ef=ef, beam=beam, max_hops=max_hops,
+                backend=backend,
+            )
+
+        def fn(q):
+            level = max(0, int(effort.level))
+            return search_hnsw_batched(
+                tables, q, k=k, ef=max(k, ef >> level),
+                beam=max(1, beam >> level), max_hops=max_hops,
+                backend=backend,
+            )
+
+        fn.effort = effort
+        return fn
+
+    from repro.core.binarize_lib import coarse_codes
+
+    c_levels, k_coarse = rr
+    fine_codes = codes  # numpy (possibly memmapped) stays host-side
+    codes_c = np.asarray(
+        coarse_codes(jnp.asarray(np.asarray(codes)), n_levels, c_levels)
+    )
+    inv_c = np.asarray(_ref.doc_inv_norms(jnp.asarray(codes_c), c_levels))
     graph = build_hnsw(
-        codes, inv, n_levels=n_levels, M=M,
-        ef_construction=ef_construction, seed=seed, packed=packed,
+        codes_c, inv_c, n_levels=c_levels, M=M,
+        ef_construction=ef_construction, seed=seed,
+        packed=packed and c_levels <= 4,
     )
     tables = prepare_batched(graph)
-    if effort is None:
-        return lambda q: search_hnsw_batched(
-            tables, q, k=k, ef=ef, beam=beam, max_hops=max_hops,
+    fine_inv = fine_inv_norms(fine_codes, n_levels)
+    k_coarse = min(k_coarse, codes_c.shape[0])
+
+    def fn(q):
+        kc_eff, residual = (
+            split_effort(effort.level, k=k, k_coarse=k_coarse)
+            if effort is not None else (k_coarse, 0)
+        )
+        q = jnp.asarray(q)
+        qc = coarse_codes(q, n_levels, c_levels)
+        _, cand = search_hnsw_batched(
+            tables, qc, k=kc_eff, ef=max(kc_eff, ef >> residual),
+            beam=max(1, beam >> residual), max_hops=max_hops,
+            backend=backend,
+        )
+        return sdc_rerank_backend(
+            q, fine_codes, fine_inv, cand, n_levels=n_levels, k=k,
             backend=backend,
         )
 
-    def fn(q):
-        level = max(0, int(effort.level))
-        return search_hnsw_batched(
-            tables, q, k=k, ef=max(k, ef >> level),
-            beam=max(1, beam >> level), max_hops=max_hops, backend=backend,
-        )
-
-    fn.effort = effort
+    if effort is not None:
+        fn.effort = effort
+    fn.reranked = True
     return fn
 
 

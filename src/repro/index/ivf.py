@@ -216,6 +216,7 @@ def ivf_search_from_snapshot(
     backend: str = "xla",
     coarse_sdc: bool = False,
     effort=None,
+    rerank: dict | None = None,
 ):
     """Rebuild-from-snapshot entry point (live index lifecycle).
 
@@ -238,29 +239,82 @@ def ivf_search_from_snapshot(
     Each distinct effective nprobe is its own jit program (nprobe is
     static): warm the degraded levels or the first degraded batch pays
     a compile.
+
+    ``rerank={"coarse_levels": c, "k_coarse": k'}`` switches to
+    bi-granular mode: the IVF is clustered and scanned over the
+    level-prefix codes at ``c`` levels (hot tier), its top-k' survivors
+    are reranked against the full-level codes (cold tier — a numpy /
+    memmapped snapshot stays host-side and only survivor rows are
+    read). The closure carries ``fn.reranked = True``. Under pressure,
+    ``effort`` first halves ``k_coarse`` (floored at k — the cheap
+    axis) and only residual levels halve nprobe.
     """
-    from repro.index._snapshot import resolve_snapshot_args
+    from repro.index._snapshot import (
+        resolve_rerank_args,
+        resolve_snapshot_args,
+        split_effort,
+    )
+    from repro.kernels.sdc.rerank import fine_inv_norms, sdc_rerank_backend
 
     codes, n_levels = resolve_snapshot_args(codes, n_levels)
+    rr = resolve_rerank_args(rerank, n_levels)
+    if rr is None:
+        index = build_ivf(
+            jax.random.PRNGKey(seed), jnp.asarray(codes), n_levels=n_levels,
+            nlist=nlist, kmeans_iters=kmeans_iters, max_len=max_len,
+            headroom=headroom, packed=packed,
+        )
+        if effort is None:
+            return lambda q: search(
+                index, q, nprobe=nprobe, k=k, coarse_sdc=coarse_sdc,
+                backend=backend,
+            )
+
+        def fn(q):
+            level = max(0, int(effort.level))
+            return search(
+                index, q, nprobe=max(1, nprobe >> level), k=k,
+                coarse_sdc=coarse_sdc, backend=backend,
+            )
+
+        fn.effort = effort
+        return fn
+
+    import numpy as np
+
+    from repro.core.binarize_lib import coarse_codes
+
+    c_levels, k_coarse = rr
+    host = isinstance(codes, np.ndarray)
+    c_src = jnp.asarray(np.asarray(codes)) if host else codes
     index = build_ivf(
-        jax.random.PRNGKey(seed), jnp.asarray(codes), n_levels=n_levels,
-        nlist=nlist, kmeans_iters=kmeans_iters, max_len=max_len,
-        headroom=headroom, packed=packed,
+        jax.random.PRNGKey(seed), coarse_codes(c_src, n_levels, c_levels),
+        n_levels=c_levels, nlist=nlist, kmeans_iters=kmeans_iters,
+        max_len=max_len, headroom=headroom,
+        packed=packed and c_levels <= 4,
     )
-    if effort is None:
-        return lambda q: search(
-            index, q, nprobe=nprobe, k=k, coarse_sdc=coarse_sdc,
+    fine_inv = fine_inv_norms(codes, n_levels)
+    k_coarse = min(k_coarse, c_src.shape[0])
+
+    def fn(q):
+        kc_eff, residual = (
+            split_effort(effort.level, k=k, k_coarse=k_coarse)
+            if effort is not None else (k_coarse, 0)
+        )
+        q = jnp.asarray(q)
+        qc = coarse_codes(q, n_levels, c_levels)
+        _, cand = search(
+            index, qc, nprobe=max(1, nprobe >> residual), k=kc_eff,
+            coarse_sdc=coarse_sdc, backend=backend,
+        )
+        return sdc_rerank_backend(
+            q, codes, fine_inv, cand, n_levels=n_levels, k=k,
             backend=backend,
         )
 
-    def fn(q):
-        level = max(0, int(effort.level))
-        return search(
-            index, q, nprobe=max(1, nprobe >> level), k=k,
-            coarse_sdc=coarse_sdc, backend=backend,
-        )
-
-    fn.effort = effort
+    if effort is not None:
+        fn.effort = effort
+    fn.reranked = True
     return fn
 
 

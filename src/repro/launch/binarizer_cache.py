@@ -1,0 +1,148 @@
+"""Train-once binarizer checkpoints, cached under a content digest.
+
+The serve drivers each need a recurrent-MLP binarizer before they can
+build an index, and training one is deterministic for a fixed (corpus,
+config, steps, batch, seed) tuple: re-running the emb2emb loop on every
+launch buys nothing but wall clock, and skipping it entirely (the old
+``hidden_dim=0`` random-projection shortcut in the demo) costs recall.
+This module gives both drivers the same middle path — train the real
+binarizer once, checkpoint it keyed by a digest of everything that
+shaped it, and reload on every later launch with the identical inputs.
+
+The digest covers the corpus bytes plus the full ``TrainConfig`` repr
+(it is a frozen dataclass of scalars, so the repr is stable) plus the
+loop knobs; any change to any of them lands on a different cache file,
+so a hit is always safe to trust. Checkpoints are plain ``np.savez``
+archives of the flattened (params, bn_state) pytree — no pickle — and
+are written atomically (tmp + rename) so a crashed run never leaves a
+half-written file that a later launch would try to load.
+
+Cache location: ``--ckpt-cache`` / the ``cache_dir`` argument, else the
+``REPRO_BEBR_CACHE`` environment variable, else ``~/.cache/repro-bebr``.
+"""
+
+from __future__ import annotations
+
+import functools
+import hashlib
+import os
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    TrainConfig,
+    init_binarizer,
+    init_train_state,
+    train_step,
+)
+from repro.data import synthetic
+
+CACHE_ENV = "REPRO_BEBR_CACHE"
+_DEFAULT_CACHE = os.path.join("~", ".cache", "repro-bebr")
+
+
+class BinarizerCheckpoint(NamedTuple):
+    """A trained binarizer, plus where it came from.
+
+    ``params``/``bn_state`` are drop-in for the same fields of a full
+    ``TrainState`` — ``encode_codes``, ``make_encode_fn`` and the
+    ``old`` argument of ``bc_train_binarizer`` read nothing else.
+    ``trained`` is False when the checkpoint was loaded from cache.
+    """
+
+    params: Any
+    bn_state: Any
+    digest: str
+    path: str | None
+    trained: bool
+
+
+def resolve_cache_dir(cache_dir: str | None = None) -> str:
+    """Explicit argument, else $REPRO_BEBR_CACHE, else ~/.cache."""
+    if cache_dir:
+        return os.path.expanduser(cache_dir)
+    return os.path.expanduser(os.environ.get(CACHE_ENV) or _DEFAULT_CACHE)
+
+
+def checkpoint_digest(
+    docs: np.ndarray, cfg: TrainConfig, *, steps: int, batch: int, seed: int
+) -> str:
+    """Digest of everything that determines the trained weights."""
+    h = hashlib.sha1()
+    arr = np.ascontiguousarray(np.asarray(docs))
+    h.update(str((arr.shape, str(arr.dtype))).encode())
+    h.update(arr.tobytes())
+    h.update(repr(cfg).encode())
+    h.update(str((steps, batch, seed)).encode())
+    return h.hexdigest()[:20]
+
+
+def _template(cfg: TrainConfig, seed: int):
+    params, bn_state = init_binarizer(jax.random.PRNGKey(seed), cfg.binarizer)
+    return jax.tree_util.tree_flatten((params, bn_state))
+
+
+def _load(path: str, cfg: TrainConfig, seed: int):
+    tpl_leaves, treedef = _template(cfg, seed)
+    with np.load(path) as z:
+        if len(z.files) != len(tpl_leaves):
+            raise ValueError("leaf count mismatch")
+        leaves = []
+        for i, tpl in enumerate(tpl_leaves):
+            leaf = z[f"leaf_{i:03d}"]
+            if leaf.shape != tpl.shape:
+                raise ValueError("leaf shape mismatch")
+            leaves.append(jnp.asarray(leaf))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _save(path: str, params, bn_state) -> None:
+    leaves, _ = jax.tree_util.tree_flatten((params, bn_state))
+    # np.savez appends ".npz" to names missing it — keep it on the tmp
+    # file so the rename target is what was actually written.
+    tmp = f"{path}.{os.getpid()}.tmp.npz"
+    np.savez(
+        tmp, **{f"leaf_{i:03d}": np.asarray(x) for i, x in enumerate(leaves)}
+    )
+    os.replace(tmp, path)
+
+
+def trained_binarizer(
+    docs: np.ndarray,
+    cfg: TrainConfig,
+    *,
+    steps: int = 300,
+    batch: int = 256,
+    seed: int = 0,
+    cache_dir: str | None = None,
+) -> BinarizerCheckpoint:
+    """Train a recurrent-MLP binarizer, or reload the cached weights.
+
+    On a cache hit the returned params are bit-identical to the run
+    that wrote the checkpoint; a stale or corrupt file (wrong leaf
+    count/shape after a config drift that somehow digested equal, or a
+    truncated archive) is treated as a miss and overwritten.
+    """
+    digest = checkpoint_digest(docs, cfg, steps=steps, batch=batch, seed=seed)
+    root = resolve_cache_dir(cache_dir)
+    path = os.path.join(root, f"binarizer-{digest}.npz")
+    if os.path.exists(path):
+        try:
+            params, bn_state = _load(path, cfg, seed)
+            return BinarizerCheckpoint(params, bn_state, digest, path, False)
+        except Exception:
+            pass  # fall through to retrain
+
+    state = init_train_state(jax.random.PRNGKey(seed), cfg)
+    step = jax.jit(functools.partial(train_step, cfg=cfg))
+    gen = synthetic.pair_batches(docs, seed + 1, batch)
+    for _ in range(steps):
+        a, p = next(gen)
+        state, _ = step(state, a, p)
+
+    os.makedirs(root, exist_ok=True)
+    _save(path, state.params, state.bn_state)
+    return BinarizerCheckpoint(state.params, state.bn_state, digest, path, True)

@@ -189,6 +189,25 @@ class FaultInjector:
             "encode": random.Random(plan.seed * 2 + 1),
             "search": random.Random(plan.seed * 2 + 2),
         }
+        self.encode = self._wrap("encode")
+        self.search = self._wrap("search")
+
+    def _wrap(self, stage: str) -> Callable:
+        inner = self._fns[stage]
+
+        def call(x: Any):
+            self._enter(stage)
+            return inner(x)
+
+        # The serving tier reads metadata off the stage callable itself
+        # (``search_fn.reranked`` for result provenance, the shared
+        # ``search_fn.effort`` knob for degradation) — injecting faults
+        # must not strip it. The effort knob is copied by REFERENCE so
+        # the proxy's level changes reach the wrapped closure.
+        for attr in ("reranked", "effort"):
+            if hasattr(inner, attr):
+                setattr(call, attr, getattr(inner, attr))
+        return call
 
     @property
     def pair(self) -> Tuple[Callable, Callable]:
@@ -223,14 +242,6 @@ class FaultInjector:
                 raise InjectedFault(
                     f"injected {ev.kind} ({self.name}.{stage} call {i})"
                 )
-
-    def encode(self, queries: Any):
-        self._enter("encode")
-        return self._fns["encode"](queries)
-
-    def search(self, codes: Any):
-        self._enter("search")
-        return self._fns["search"](codes)
 
 
 def wrap_replicas(

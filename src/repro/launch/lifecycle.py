@@ -93,7 +93,7 @@ class CorpusSnapshot:
     ``==`` and dict keys too.
     """
 
-    codes: Any  # [N, D] int8 (np or jax array)
+    codes: Any  # [N, D] int8 (np or jax array, or np.memmap for cold tiers)
     n_levels: int
     embedding_version: str = "v0"
 
@@ -105,6 +105,26 @@ class CorpusSnapshot:
 
     def __hash__(self) -> int:
         return hash((self.digest, self.n_levels, self.embedding_version))
+
+    def spilled(self, path) -> "CorpusSnapshot":
+        """A content-equal snapshot whose codes live in a read-only
+        ``np.memmap`` at ``path``.
+
+        This is the cold-tier handoff for bi-granular serving: builders
+        keep numpy fine codes host-side and read only the per-query
+        survivor rows, so a spilled snapshot lets the full-level tier
+        exceed RAM while the packed coarse tier stays hot. Same bytes,
+        same ``digest`` — swapping a replica between the in-memory and
+        spilled forms of one corpus is version-equivalent, so the
+        rolling swap's bit-identity guarantee carries over.
+        """
+        arr = np.ascontiguousarray(np.asarray(self.codes))
+        mm = np.memmap(path, dtype=arr.dtype, mode="w+", shape=arr.shape)
+        mm[:] = arr
+        mm.flush()
+        ro = np.memmap(path, dtype=arr.dtype, mode="r", shape=arr.shape)
+        return CorpusSnapshot(codes=ro, n_levels=self.n_levels,
+                              embedding_version=self.embedding_version)
 
     @functools.cached_property
     def digest(self) -> str:
@@ -175,6 +195,27 @@ def builder_version(builder: "IndexBuilder",
     )
 
 
+def _rerank_params(coarse_levels, k_coarse):
+    """Validate a builder's scalar bi-granular knobs; dict-or-None.
+
+    Builders take the two scalars (not the ``rerank={...}`` dict) so the
+    knobs flow through ``builder_version``'s scalar filter and show up
+    in the ``IndexVersion`` — a tiered and a single-tier build of the
+    same snapshot must never be considered version-equivalent. Range
+    checks against ``n_levels`` happen in the entry points
+    (``_snapshot.resolve_rerank_args``); here only the pairing is
+    enforced, at construction time.
+    """
+    if (coarse_levels is None) != (k_coarse is None):
+        raise ValueError(
+            "coarse_levels and k_coarse must be set together "
+            f"(got coarse_levels={coarse_levels}, k_coarse={k_coarse})"
+        )
+    if coarse_levels is None:
+        return None
+    return {"coarse_levels": int(coarse_levels), "k_coarse": int(k_coarse)}
+
+
 class _SnapshotCachingBuilder:
     """Digest-keyed one-entry build cache shared by the single-host
     builders: replicas on one host share index arrays (exactly like the
@@ -195,20 +236,30 @@ class _SnapshotCachingBuilder:
 
 
 class FlatBuilder(_SnapshotCachingBuilder):
-    """Exhaustive flat index (``flat.flat_search_from_snapshot``)."""
+    """Exhaustive flat index (``flat.flat_search_from_snapshot``).
+
+    ``coarse_levels``/``k_coarse`` (set together) switch the build to
+    bi-granular mode: packed hot coarse scan + cold fine rerank — same
+    convention on every builder; see the entry point's docstring.
+    """
 
     kind = "flat"
 
     def __init__(self, *, k: int = 10, packed: bool = False,
-                 backend: str = "xla", block_n: int = 512):
+                 backend: str = "xla", block_n: int = 512,
+                 coarse_levels: int = None, k_coarse: int = None):
         super().__init__()
+        self._rerank = _rerank_params(coarse_levels, k_coarse)
         self.params = dict(k=k, packed=packed, backend=backend,
-                           block_n=block_n)
+                           block_n=block_n, coarse_levels=coarse_levels,
+                           k_coarse=k_coarse)
 
     def _build(self, snapshot: CorpusSnapshot) -> SearchFn:
         from repro.index.flat import flat_search_from_snapshot
 
-        return flat_search_from_snapshot(snapshot, **self.params)
+        p = {k: v for k, v in self.params.items()
+             if k not in ("coarse_levels", "k_coarse")}
+        return flat_search_from_snapshot(snapshot, rerank=self._rerank, **p)
 
 
 class IVFBuilder(_SnapshotCachingBuilder):
@@ -218,16 +269,21 @@ class IVFBuilder(_SnapshotCachingBuilder):
 
     def __init__(self, *, k: int = 10, nlist: int = 64, nprobe: int = 32,
                  seed: int = 0, kmeans_iters: int = 20,
-                 packed: bool = False, backend: str = "xla"):
+                 packed: bool = False, backend: str = "xla",
+                 coarse_levels: int = None, k_coarse: int = None):
         super().__init__()
+        self._rerank = _rerank_params(coarse_levels, k_coarse)
         self.params = dict(k=k, nlist=nlist, nprobe=nprobe, seed=seed,
                            kmeans_iters=kmeans_iters, packed=packed,
-                           backend=backend)
+                           backend=backend, coarse_levels=coarse_levels,
+                           k_coarse=k_coarse)
 
     def _build(self, snapshot: CorpusSnapshot) -> SearchFn:
         from repro.index.ivf import ivf_search_from_snapshot
 
-        return ivf_search_from_snapshot(snapshot, **self.params)
+        p = {k: v for k, v in self.params.items()
+             if k not in ("coarse_levels", "k_coarse")}
+        return ivf_search_from_snapshot(snapshot, rerank=self._rerank, **p)
 
 
 class HNSWBuilder(_SnapshotCachingBuilder):
@@ -241,16 +297,21 @@ class HNSWBuilder(_SnapshotCachingBuilder):
     def __init__(self, *, k: int = 10, M: int = 16,
                  ef_construction: int = 64, ef: int = 64, beam: int = 8,
                  max_hops: int = 64, seed: int = 0, packed: bool = False,
-                 backend: str = "xla"):
+                 backend: str = "xla",
+                 coarse_levels: int = None, k_coarse: int = None):
         super().__init__()
+        self._rerank = _rerank_params(coarse_levels, k_coarse)
         self.params = dict(k=k, M=M, ef_construction=ef_construction,
                            ef=ef, beam=beam, max_hops=max_hops, seed=seed,
-                           packed=packed, backend=backend)
+                           packed=packed, backend=backend,
+                           coarse_levels=coarse_levels, k_coarse=k_coarse)
 
     def _build(self, snapshot: CorpusSnapshot) -> SearchFn:
         from repro.index.hnsw_lite import hnsw_search_from_snapshot
 
-        return hnsw_search_from_snapshot(snapshot, **self.params)
+        p = {k: v for k, v in self.params.items()
+             if k not in ("coarse_levels", "k_coarse")}
+        return hnsw_search_from_snapshot(snapshot, rerank=self._rerank, **p)
 
 
 class EngineBuilder:
@@ -269,17 +330,26 @@ class EngineBuilder:
                  n_levels: int, k: int = 10, backend: str = "auto",
                  packed: bool = False, shard_axes=("data", "model"),
                  M: int = 16, ef_construction: int = 48, ef: int = 64,
-                 beam: int = 16, max_hops: int = 64, seed: int = 0):
+                 beam: int = 16, max_hops: int = 64, seed: int = 0,
+                 coarse_levels: int = None, k_coarse: int = None):
         if index not in ("flat", "hnsw"):
             raise ValueError(f"EngineBuilder index must be flat|hnsw, "
                              f"got {index!r}")
+        self._rerank = _rerank_params(coarse_levels, k_coarse)
+        if self._rerank is not None and index != "flat":
+            raise ValueError(
+                "bi-granular rerank is only supported for the flat "
+                "engine (per-leaf coarse scan + post-merge fine rerank); "
+                f"got index={index!r}"
+            )
         self.meshes = list(meshes)
         self.kind = f"engine-{index}"
         self.index = index
         self.params = dict(n_levels=n_levels, k=k, backend=backend,
                            packed=packed, M=M,
                            ef_construction=ef_construction, ef=ef,
-                           beam=beam, max_hops=max_hops, seed=seed)
+                           beam=beam, max_hops=max_hops, seed=seed,
+                           coarse_levels=coarse_levels, k_coarse=k_coarse)
         self.shard_axes = tuple(shard_axes)
         # Digest-keyed host-side artifacts shared by every replica: the
         # per-leaf NSW graphs (hnsw) / packed codes + inv norms (flat).
@@ -304,12 +374,14 @@ class EngineBuilder:
     def _flat_inputs(self, snapshot: CorpusSnapshot):
         from repro.index.engine import flat_engine_inputs_from_snapshot
 
-        key = snapshot.digest
+        c = self._rerank["coarse_levels"] if self._rerank else None
+        packed = self.params["packed"] and (c is None or c <= 4)
+        key = f"{snapshot.digest}:{c}"
         if key not in self._flat_cache:
             self._flat_cache.clear()
             self._flat_cache[key] = flat_engine_inputs_from_snapshot(
                 snapshot.codes, snapshot.n_levels,
-                packed=self.params["packed"],
+                packed=packed, coarse_levels=c,
             )
         return self._flat_cache[key]
 
@@ -323,6 +395,7 @@ class EngineBuilder:
                 mesh, snapshot, k=p["k"],
                 shard_axes=self.shard_axes, backend=p["backend"],
                 packed=p["packed"], prepared=self._flat_inputs(snapshot),
+                rerank=self._rerank,
             )
         n_leaves = 1
         for ax in self.shard_axes:

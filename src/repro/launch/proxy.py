@@ -179,8 +179,13 @@ class EffortKnob:
     snapshot(..., effort=knob)`` halves nprobe per level;
     ``hnsw_search_from_snapshot`` halves ef and beam), and the router
     steps the SAME knob object down under pressure and back up when it
-    clears — degrade-before-shed. Thread-safe; reads are a bare int
-    load so the hot search path pays nothing.
+    clears — degrade-before-shed. Bi-granular closures (``rerank=``)
+    spend levels on a cheaper axis first: each level halves ``k_coarse``
+    (floored at k — narrowing the fine rerank costs far less recall
+    than shrinking the candidate pool) and only the residual levels fall
+    through to nprobe/ef/beam (``index._snapshot.split_effort``).
+    Thread-safe; reads are a bare int load so the hot search path pays
+    nothing.
 
     Each effort level is its own jit program shape (nprobe/ef/beam are
     static), so the first batch served at a fresh level pays a compile;
@@ -820,7 +825,8 @@ class QueryRouter:
             if ticket._resolve(
                 value=inner.result(),
                 provenance=(replica, served_v,
-                            inner.served_by_generation, compat),
+                            inner.served_by_generation, compat,
+                            inner.reranked),
             ):
                 self._stats.record(ticket)
             return

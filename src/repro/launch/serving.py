@@ -207,6 +207,8 @@ class SearchResult:
     generation  — that replica's index generation at dispatch.
     compat_encoded — True when the query crossed versions through a
         ``CompatibilityMatrix`` encoder rather than a native replica.
+    reranked    — True when the answering index served in bi-granular
+        mode (coarse scan + fine rerank) rather than a single-tier scan.
     """
 
     scores: Array
@@ -215,6 +217,7 @@ class SearchResult:
     replica: Optional[int] = None
     generation: Optional[int] = None
     compat_encoded: bool = False
+    reranked: bool = False
 
     def __iter__(self):
         return iter((self.scores, self.ids))
@@ -282,6 +285,7 @@ class Ticket:
         self.served_by_replica: Optional[int] = None
         self.served_by_generation: Optional[int] = None
         self.compat_encoded = False
+        self.reranked = False
         self._done = threading.Event()
         self._value: Any = None
         self._error: Optional[BaseException] = None
@@ -294,16 +298,18 @@ class Ticket:
         # race to resolve the same ticket; it never resolves twice and
         # a stored value is never clobbered. Returns True to the winner
         # (so completion stats are recorded exactly once).
-        # ``provenance`` = (replica, version, generation, compat): the
-        # proxy tier passes it here, under the same lock, because two
-        # racing inner resolutions (failover re-dispatch) must not let
-        # the loser overwrite the winner's serving provenance.
+        # ``provenance`` = (replica, version, generation, compat,
+        # reranked): the proxy tier passes it here, under the same lock,
+        # because two racing inner resolutions (failover re-dispatch)
+        # must not let the loser overwrite the winner's serving
+        # provenance.
         with self._resolve_lock:
             if self._done.is_set():
                 return False
             if provenance is not None:
                 (self.served_by_replica, self.served_by_version,
-                 self.served_by_generation, self.compat_encoded) = provenance
+                 self.served_by_generation, self.compat_encoded,
+                 self.reranked) = provenance
             self.t_reply = time.perf_counter()
             self._value, self._error = value, error
             self.request = None
@@ -365,6 +371,7 @@ class Ticket:
             replica=self.served_by_replica,
             generation=self.served_by_generation,
             compat_encoded=self.compat_encoded,
+            reranked=self.reranked,
         )
 
     @property
@@ -939,6 +946,8 @@ class ServingPipeline:
             req = ticket.request
             ticket.served_by_generation = self.generation
             ticket.served_by_version = self.embedding_version
+            ticket.reranked = bool(getattr(self.search_fn, "reranked",
+                                           False))
             if req is not None and req.encode_override is not None:
                 ticket.compat_encoded = True
             # Bound device concurrency BEFORE dispatching: at most

@@ -1,0 +1,115 @@
+"""Digest-cached binarizer checkpoints (launch/binarizer_cache.py).
+
+The serve drivers train their recurrent-MLP binarizer once per
+(corpus, config, steps, batch, seed) digest and reload the checkpoint
+on every later launch — a hit must be bit-identical to the run that
+wrote it, anything that shaped the weights must move the digest, and a
+corrupt file must be treated as a miss, never trusted.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BinarizerConfig, TrainConfig
+import repro.core.losses as losses_lib
+from repro.launch import binarizer_cache
+from repro.train import optim
+
+DIM, CODE, LEVELS = 16, 8, 2
+
+
+def _cfg(hidden=16):
+    return TrainConfig(
+        binarizer=BinarizerConfig(input_dim=DIM, code_dim=CODE,
+                                  n_levels=LEVELS, hidden_dim=hidden),
+        queue=losses_lib.QueueConfig(length=64, dim=CODE, top_k=4),
+        adam=optim.AdamConfig(lr=2e-3, clip_norm=5.0),
+    )
+
+
+def _docs(seed=0, n=64):
+    return np.random.default_rng(seed).normal(size=(n, DIM)).astype(
+        np.float32
+    )
+
+
+def _leaves(ckpt):
+    return jax.tree_util.tree_flatten((ckpt.params, ckpt.bn_state))[0]
+
+
+def test_second_call_is_a_bit_identical_cache_hit(tmp_path):
+    docs, cfg = _docs(), _cfg()
+    first = binarizer_cache.trained_binarizer(
+        docs, cfg, steps=3, batch=16, cache_dir=str(tmp_path)
+    )
+    assert first.trained is True
+    second = binarizer_cache.trained_binarizer(
+        docs, cfg, steps=3, batch=16, cache_dir=str(tmp_path)
+    )
+    assert second.trained is False
+    assert second.digest == first.digest
+    assert second.path == first.path
+    for a, b in zip(_leaves(first), _leaves(second)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_encodes_like_the_training_run(tmp_path):
+    from repro.core import make_encode_fn
+
+    docs, cfg = _docs(), _cfg()
+    binarizer_cache.trained_binarizer(
+        docs, cfg, steps=3, batch=16, cache_dir=str(tmp_path)
+    )
+    loaded = binarizer_cache.trained_binarizer(
+        docs, cfg, steps=3, batch=16, cache_dir=str(tmp_path)
+    )
+    enc = make_encode_fn(loaded.params, loaded.bn_state, cfg.binarizer)
+    codes = np.asarray(enc(jnp.asarray(docs[:8])))
+    assert codes.shape[0] == 8
+
+
+def test_every_training_knob_moves_the_digest():
+    docs, cfg = _docs(), _cfg()
+    base = dict(steps=3, batch=16, seed=0)
+    d0 = binarizer_cache.checkpoint_digest(docs, cfg, **base)
+    assert binarizer_cache.checkpoint_digest(docs, cfg, **base) == d0
+    for var in (
+        dict(base, steps=4),
+        dict(base, batch=8),
+        dict(base, seed=1),
+    ):
+        assert binarizer_cache.checkpoint_digest(docs, cfg, **var) != d0
+    assert binarizer_cache.checkpoint_digest(_docs(1), cfg, **base) != d0
+    assert binarizer_cache.checkpoint_digest(docs, _cfg(hidden=8),
+                                             **base) != d0
+
+
+def test_corrupt_checkpoint_is_retrained_not_trusted(tmp_path):
+    docs, cfg = _docs(), _cfg()
+    first = binarizer_cache.trained_binarizer(
+        docs, cfg, steps=3, batch=16, cache_dir=str(tmp_path)
+    )
+    with open(first.path, "wb") as f:
+        f.write(b"not an npz archive")
+    again = binarizer_cache.trained_binarizer(
+        docs, cfg, steps=3, batch=16, cache_dir=str(tmp_path)
+    )
+    assert again.trained is True
+    for a, b in zip(_leaves(first), _leaves(again)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_serve_driver_trainer_routes_through_the_cache(tmp_path):
+    from repro.launch import serve
+
+    docs, cfg = _docs(), _cfg()
+    state = serve.train_binarizer(docs, cfg, steps=3, batch=16,
+                                  cache_dir=str(tmp_path))
+    assert state.trained is True
+    assert state.path is not None
+    again = serve.train_binarizer(docs, cfg, steps=3, batch=16,
+                                  cache_dir=str(tmp_path))
+    assert again.trained is False
+    codes = serve.encode_codes(state, docs[:4], cfg.binarizer)
+    assert np.asarray(codes).shape[0] == 4

@@ -62,6 +62,144 @@ def test_gate_fails_on_empty_report(tmp_path):
     assert out.returncode != 0
 
 
+# -- bi-granular + bits-per-dimension sections (scan bench) ------------------
+
+
+def _bigranular_section(levels=4):
+    def row(c, ratio):
+        return {"coarse_levels": c, "k_coarse": 40, "packed": True,
+                "ms": 1.0, "recall_rerank": 0.95, "recall_coarse": 0.7,
+                "coarse_bytes_scanned": int(100_000 * ratio),
+                "fine_bytes_scanned": 5_000,
+                "full_bytes_scanned": 100_000}
+    return [row(levels // 2, 0.53), row(levels - 1, 0.78)]
+
+
+def _bits_sweep_section():
+    return [
+        {"n_levels": n, "packed": packed, "ms": 1.0, "recall": 0.5,
+         "bytes_scanned": 66_000 if packed else 132_000,
+         "index_bytes": 20_000 * n}
+        for n in (1, 2, 4) for packed in (False, True)
+    ]
+
+
+def _scan_bench(**overrides):
+    bench = {"bench": "sdc_scan", "levels": 4, "rows": _rows(0.53),
+             "bigranular": _bigranular_section(),
+             "bits_sweep": _bits_sweep_section()}
+    bench.update(overrides)
+    return bench
+
+
+def test_gate_passes_full_scan_bench(tmp_path):
+    out = _run_gate(tmp_path, _scan_bench())
+    assert out.returncode == 0, out.stdout + out.stderr
+
+
+def test_gate_requires_a_bigranular_section(tmp_path):
+    """A scan report without the coarse+rerank sweep (emitter regression)
+    must not pass green; plain row-only reports without the sdc_scan
+    bench tag (e.g. hnsw_scan) stay exempt."""
+    out = _run_gate(tmp_path, _scan_bench(bigranular=[]))
+    assert out.returncode != 0
+    assert "no 'bigranular' section" in out.stderr
+
+
+def test_gate_fails_on_malformed_bigranular_row(tmp_path):
+    bench = _scan_bench()
+    del bench["bigranular"][0]["recall_rerank"]
+    del bench["bigranular"][0]["coarse_bytes_scanned"]
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "missing keys" in out.stderr
+    assert "recall_rerank" in out.stderr
+    assert "coarse_bytes_scanned" in out.stderr
+
+
+def test_gate_fails_when_rerank_loses_recall(tmp_path):
+    """The fine rerank refines the coarse scan; a row where rerank recall
+    drops below the coarse-only recall means the rerank is broken."""
+    bench = _scan_bench()
+    bench["bigranular"][0]["recall_rerank"] = 0.6
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "below" in out.stderr and "coarse-only recall" in out.stderr
+
+
+def test_gate_fails_on_oversized_coarse_tier(tmp_path):
+    """At coarse_levels = levels // 2 the hot tier must hold <= 0.6x the
+    full-level bytes — the acceptance point of the tiered layout."""
+    bench = _scan_bench()
+    bench["bigranular"][0]["coarse_bytes_scanned"] = 70_000
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "coarse tier too large" in out.stderr
+
+
+def test_gate_coarse_ratio_is_configurable(tmp_path):
+    bench = _scan_bench()
+    bench["bigranular"][0]["coarse_bytes_scanned"] = 70_000
+    out = _run_gate(tmp_path, bench, "--max-coarse-ratio", "0.75")
+    assert out.returncode == 0, out.stdout + out.stderr
+
+
+def test_gate_fails_without_the_half_levels_row(tmp_path):
+    """The sweep must COVER the gated operating point: dropping the
+    coarse_levels = levels // 2 row must not dodge the byte check."""
+    bench = _scan_bench()
+    bench["bigranular"] = bench["bigranular"][1:]  # only levels-1 row
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "no row at coarse_levels=2" in out.stderr
+
+
+def test_gate_requires_a_bits_sweep_section(tmp_path):
+    out = _run_gate(tmp_path, _scan_bench(bits_sweep=[]))
+    assert out.returncode != 0
+    assert "no 'bits_sweep' section" in out.stderr
+
+
+def test_gate_fails_on_malformed_bits_sweep_row(tmp_path):
+    bench = _scan_bench()
+    del bench["bits_sweep"][0]["index_bytes"]
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "missing keys" in out.stderr and "index_bytes" in out.stderr
+
+
+def test_gate_fails_on_bits_sweep_missing_packed_row(tmp_path):
+    bench = _scan_bench()
+    bench["bits_sweep"] = [r for r in bench["bits_sweep"]
+                           if not (r["n_levels"] == 2 and r["packed"])]
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "n_levels=2 has no packed row" in out.stderr
+
+
+def test_gate_fails_on_bits_sweep_packed_ratio(tmp_path):
+    bench = _scan_bench()
+    for r in bench["bits_sweep"]:
+        if r["n_levels"] == 4 and r["packed"]:
+            r["bytes_scanned"] = 80_000  # 0.606x unpacked > 0.55
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "packed scan bytes ratio" in out.stderr
+
+
+def test_gate_fails_on_nonmonotone_index_bytes(tmp_path):
+    """Serialized bytes per doc must GROW with the level count — a
+    sweep where more levels serialize smaller is measuring the wrong
+    thing (or the layout silently dropped levels)."""
+    bench = _scan_bench()
+    for r in bench["bits_sweep"]:
+        if r["n_levels"] == 4:
+            r["index_bytes"] = 10_000  # below the 2-level rows
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "not monotone" in out.stderr
+
+
 def test_gate_understands_hnsw_schema(tmp_path):
     """BENCH_hnsw_scan rows carry table_bytes and no variant key; the
     gate must pair them by the bench name and apply the same invariant."""
@@ -129,6 +267,12 @@ def _upgrade_row(**overrides):
     return row
 
 
+def _bigranular_swap_row(**overrides):
+    row = _swap_row(mode="bigranular_swap", reranked=True)
+    row.update(overrides)
+    return row
+
+
 def _serving_bench(ratio: float, paired_ratio: float = 0.95):
     return {"bench": "serving", "rows": [
         {"mode": "sequential", "qps": 1000.0},
@@ -138,6 +282,7 @@ def _serving_bench(ratio: float, paired_ratio: float = 0.95):
         _swap_row(),
         _chaos_row(),
         _upgrade_row(),
+        _bigranular_swap_row(),
     ]}
 
 
@@ -452,6 +597,48 @@ def test_serving_gate_fails_when_a_replica_misses_the_target_version(
     out = _run_gate(tmp_path, bench)
     assert out.returncode != 0
     assert "final replica versions" in out.stderr
+
+
+# -- tiered serving drill (bigranular_swap row) -------------------------------
+
+
+def test_serving_gate_requires_a_bigranular_swap_row(tmp_path):
+    """The tiered (coarse+rerank) rolling-swap drill is part of the
+    schema now: a report without it must not pass green."""
+    bench = _serving_bench(1.2)
+    bench["rows"] = bench["rows"][:7]  # drop the bigranular_swap row
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "no 'bigranular_swap' row" in out.stderr
+
+
+def test_serving_gate_fails_without_rerank_provenance(tmp_path):
+    """bit-identical results alone do not prove the tier served the
+    bi-granular path — a silent fallback to the flat index would also
+    be bit-identical. Every ticket must carry reranked provenance."""
+    bench = _serving_bench(1.2)
+    bench["rows"][7] = _bigranular_swap_row(reranked=False)
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "did not serve every query through the bi-granular rerank" \
+        in out.stderr
+
+
+def test_serving_gate_fails_on_lost_results_during_bigranular_swap(tmp_path):
+    bench = _serving_bench(1.2)
+    bench["rows"][7] = _bigranular_swap_row(lost=2)
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "lost 2 result(s) during the rolling swap" in out.stderr
+
+
+def test_serving_gate_fails_when_bigranular_swap_breaks_bit_identity(
+        tmp_path):
+    bench = _serving_bench(1.2)
+    bench["rows"][7] = _bigranular_swap_row(bit_identical=False)
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "not bit-identical" in out.stderr
 
 
 # -- docs lint (scripts/check_docs_links.py) ---------------------------------
