@@ -198,6 +198,150 @@ def _bits_sweep_rows(n_docs: int, queries: int, m: int, k: int = 10,
     return rows
 
 
+def _autotune_rows(n_docs: int, queries: int, levels: int, m: int,
+                   k: int = 10, cache_dir: str | None = None) -> list:
+    """Block-plan autotuner record: default vs tuned ms per kernel kind.
+
+    One row per kernel kind (scan / gather / rerank), tuned through
+    ``launch/autotune.tuned_block_plan`` on the kernel backend ("pallas"
+    on TPU, "interpret" elsewhere — the interpreter's per-grid-step
+    Python cost gives a real structural signal: fewer, larger tiles =
+    fewer steps; the jnp fallback has no tiles and would only measure
+    noise). The timings come from the tuner's own sweep payload, where
+    the default plan is timed as a candidate on the same operands as
+    every challenger — so ``tuned_ms <= default_ms`` holds by
+    construction (the tuner keeps the default unless a candidate is
+    strictly faster), and the gated ratio cannot flake on host noise.
+    Un-sweepable kinds (gather: corpus-fixed geometry) emit the default
+    plan with a ratio of exactly 1.0 and no timings.
+
+    The sweep persists its winner in the tune cache (``cache_dir`` /
+    ``$REPRO_BEBR_CACHE``): a re-run of the bench is a cache hit and
+    re-reports the stored sweep timings unchanged.
+    """
+    from repro.kernels.sdc.defaults import default_plan
+    from repro.launch.autotune import tuned_block_plan
+
+    kb = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    kp = min(64, n_docs)  # rerank signature: survivors rescored per query
+    rows = []
+    for kind in ("scan", "gather", "rerank"):
+        tp = tuned_block_plan(
+            kind, code_dim=m, n_shard=n_docs, k=(k if kind == "scan" else kp),
+            n_levels=levels, backend=kb, cache_dir=cache_dir,
+            sample_q=max(1, min(8, queries)),
+        )
+        base = default_plan(kind)
+        default_ms = tuned_ms = None
+        if tp.path is not None:
+            with open(tp.path) as f:
+                payload = json.load(f)
+            default_ms = payload.get("default_ms")
+            tuned_ms = payload.get("tuned_ms")
+        if default_ms is not None and tuned_ms is not None:
+            ratio = tuned_ms / default_ms if default_ms > 0 else None
+        elif tp.plan.blocks() == base.blocks():
+            ratio = 1.0  # nothing swept, nothing changed
+        else:
+            ratio = None  # a swept kind without timings must fail the gate
+        rows.append({
+            "kind": kind, "backend": kb,
+            "block_q_default": base.block_q, "block_n_default": base.block_n,
+            "block_q": tp.plan.block_q, "block_n": tp.plan.block_n,
+            "source": tp.plan.source,
+            "default_ms": default_ms, "tuned_ms": tuned_ms,
+            "ms_ratio_tuned_vs_default": ratio,
+        })
+    return rows
+
+
+def _probe_budget_corpus(n_docs: int, queries: int, levels: int, m: int,
+                         nlist: int, seed: int = 11):
+    """Skewed-occupancy corpus for the probe-budget sweep.
+
+    Cluster sizes follow a 1/rank law (heaviest first) and queries are
+    noisy copies of documents drawn from the heavy head of the corpus —
+    the regime occupancy-weighted allocation exists for: most answers
+    live in a few fat inverted lists, so surplus probe slots spent on
+    heavy lists recover more of the true top-k than slots sprayed
+    uniformly. The uniform random corpus the main rows use has *flat*
+    occupancy by construction and would show nothing.
+    """
+    rng = np.random.default_rng(seed)
+    n_clusters = max(4, 2 * nlist)
+    w = 1.0 / np.arange(1, n_clusters + 1)
+    sizes = np.maximum(1, np.round(n_docs * w / w.sum()).astype(int))
+    sizes[0] += n_docs - sizes.sum()  # rounding drift lands on the head
+    hi = 2 ** levels
+    centers = rng.integers(0, hi, size=(n_clusters, m))
+    parts = []
+    for c in range(n_clusters):
+        s = int(sizes[c])
+        rows = np.repeat(centers[c][None, :], s, 0)
+        flip = rng.random((s, m)) < 0.08
+        parts.append(np.where(flip, rng.integers(0, hi, size=(s, m)), rows))
+    cd = np.concatenate(parts).astype(np.int8)
+    # heaviest clusters come first, so the head indices are heavy docs
+    src = rng.integers(0, max(1, n_docs // 4), size=queries)
+    q = cd[src].astype(np.int64)
+    flip = rng.random(q.shape) < 0.15
+    cq = np.where(flip, rng.integers(0, hi, size=q.shape), q).astype(np.int8)
+    return jnp.asarray(cd), jnp.asarray(cq)
+
+
+def _probe_budget_rows(n_docs: int, queries: int, levels: int, m: int,
+                       nlist: int, nprobe: int, k: int = 10) -> list:
+    """Occupancy-weighted vs flat probe allocation at equal budget.
+
+    Per row (one per global budget B): recall@k against the full
+    exhaustive scan for the occupancy-weighted allocation
+    (``index.ivf.search_budget``) and for the flat comparator (same
+    budget machinery, equal per-centroid weights) — same B, same total
+    scan work, only the *placement* of the surplus rank slots differs.
+    The budget grid deliberately includes non-multiples of ``nlist``
+    (where the allocations actually diverge) and the exact-multiple
+    parity point ``B = nprobe * nlist``, whose row also records
+    ``bit_identical``: at exact multiples the thresholds are uniform
+    and ``search_budget`` must reproduce the flat-nprobe search
+    bit-for-bit. The CI gate enforces weighted >= flat on every row
+    (ties pass — both recalls are deterministic, seeded scans) and
+    parity bit-identity.
+    """
+    cd, cq = _probe_budget_corpus(n_docs, queries, levels, m, nlist)
+    inv = R.doc_inv_norms(cd, levels)
+    gt = np.asarray(sdc_search_xla(cq, cd, inv, n_levels=levels, k=k)[1])
+    index = ivf_lib.build_ivf(jax.random.PRNGKey(9), cd, n_levels=levels,
+                              nlist=nlist, kmeans_iters=5)
+    parity_budget = nprobe * nlist
+    budgets = sorted({max(1, nlist // 2), nlist + nlist // 2, parity_budget})
+
+    rows = []
+    for budget in budgets:
+        out = {}
+        for weighted in (True, False):
+            s, i = ivf_lib.search_budget(index, cq, probe_budget=budget,
+                                         k=k, weighted=weighted,
+                                         backend="xla")
+            out[weighted] = (np.asarray(s), np.asarray(i))
+        row = {
+            "probe_budget": budget,
+            "avg_probes_per_query": budget / nlist,
+            "recall_weighted": _recall_at_k(out[True][1], gt, k),
+            "recall_flat": _recall_at_k(out[False][1], gt, k),
+        }
+        if budget == parity_budget:
+            s0, i0 = ivf_lib.search(index, cq, nprobe=nprobe, k=k,
+                                    backend="xla")
+            row["bit_identical"] = bool(
+                np.array_equal(out[True][1], np.asarray(i0))
+                and np.array_equal(out[True][0], np.asarray(s0))
+                and np.array_equal(out[False][1], np.asarray(i0))
+                and np.array_equal(out[False][0], np.asarray(s0))
+            )
+        rows.append(row)
+    return rows
+
+
 def emit_sdc_scan_json(path: str = BENCH_JSON, n_docs: int = 50_000,
                        queries: int = 16, levels: int = 4, m: int = 128,
                        nlist: int = 64, nprobe: int = 8) -> dict:
@@ -252,6 +396,9 @@ def emit_sdc_scan_json(path: str = BENCH_JSON, n_docs: int = 50_000,
 
     bigranular = _bigranular_rows(cd, cq, levels, m)
     bits_sweep = _bits_sweep_rows(n_docs, queries, m)
+    autotune = _autotune_rows(n_docs, queries, levels, m)
+    probe_budget = _probe_budget_rows(n_docs, queries, levels, m,
+                                      nlist, nprobe)
 
     out = {
         "bench": "sdc_scan",
@@ -261,6 +408,8 @@ def emit_sdc_scan_json(path: str = BENCH_JSON, n_docs: int = 50_000,
         "rows": rows,
         "bigranular": bigranular,
         "bits_sweep": bits_sweep,
+        "autotune": autotune,
+        "probe_budget": probe_budget,
     }
     path = os.path.abspath(path)
     with open(path, "w") as f:
@@ -279,6 +428,20 @@ def emit_sdc_scan_json(path: str = BENCH_JSON, n_docs: int = 50_000,
     for r in bits_sweep:
         print(f"{r['n_levels']},{r['packed']},{r['ms']:.2f},"
               f"{r['recall']:.3f},{r['index_bytes'] / 1e6:.2f}")
+    print("autotune: kind,backend,default,tuned,ratio,source")
+    for r in autotune:
+        ratio = r["ms_ratio_tuned_vs_default"]
+        print(f"{r['kind']},{r['backend']},"
+              f"({r['block_q_default']},{r['block_n_default']}),"
+              f"({r['block_q']},{r['block_n']}),"
+              f"{ratio if ratio is None else f'{ratio:.3f}'},{r['source']}")
+    print("probe_budget: budget,avg_probes,recall_weighted,recall_flat"
+          "[,bit_identical]")
+    for r in probe_budget:
+        tail = (f",bit_identical={r['bit_identical']}"
+                if "bit_identical" in r else "")
+        print(f"{r['probe_budget']},{r['avg_probes_per_query']:.2f},"
+              f"{r['recall_weighted']:.3f},{r['recall_flat']:.3f}{tail}")
     return out
 
 

@@ -94,6 +94,29 @@ n_levels/packed/ms/recall/bytes_scanned/index_bytes, the serialized
 packed state, and each level's packed scan must hold the same
 --max-packed-ratio byte invariant as the main rows.
 
+The block-plan autotuner record ("autotune" section of
+BENCH_sdc_scan.json, added with the adaptive query execution PR) is
+gated on the tuner never LOSING to the shipped defaults: one row per
+kernel kind (scan / gather / rerank) with the default and tuned launch
+geometry plus the sweep's own paired timings (the default plan is timed
+as a candidate on the same operands as every challenger, so the ratio
+is noise-immune by construction). Every kind must be present, and
+``ms_ratio_tuned_vs_default`` must be <= --max-autotune-ratio (default
+1.0). A swept kind with no timings (ratio null) hard-fails —
+un-sweepable kinds (gather's corpus-fixed geometry) must report the
+default plan with ratio exactly 1.0 instead.
+
+The probe-budget sweep ("probe_budget" section, same file) gates the
+occupancy-weighted IVF probe allocation: per global budget B, recall@k
+for the weighted allocation and for the flat comparator (equal weights,
+same budget machinery, same total scan work). Weighted recall must
+never fall below flat recall at equal budget (both are deterministic
+seeded scans, so ties pass and the check cannot flake), and the sweep
+must include the exact-multiple parity row ``B = nprobe * nlist`` with
+``bit_identical`` true — at exact multiples the per-centroid thresholds
+are uniform and the budgeted search must reproduce the flat-nprobe
+search bit-for-bit (ids AND scores, weighted and flat alike).
+
 The tiered serving drill ("bigranular_swap" row of BENCH_serving.json)
 re-runs the rolling-swap correctness record with a coarse+rerank
 lifecycle builder serving the tier: the same lost/reordered/
@@ -175,6 +198,26 @@ BIGRANULAR_ROW_KEYS = (
 # gated (the level count is a quality/cost knob, not an invariant).
 BITS_SWEEP_ROW_KEYS = (
     "n_levels", "packed", "ms", "recall", "bytes_scanned", "index_bytes",
+)
+
+# Block-plan autotuner row (BENCH_sdc_scan.json "autotune" section):
+# one row per kernel kind. The timings come from the tuner's own sweep
+# (default timed as a candidate alongside every challenger), so the
+# gated ratio is paired-by-construction. default_ms/tuned_ms are
+# nullable (un-sweepable kinds), so they are not in the hard-key set —
+# a swept kind with a null RATIO still fails below.
+AUTOTUNE_ROW_KEYS = (
+    "kind", "backend", "block_q_default", "block_n_default",
+    "block_q", "block_n", "source",
+)
+AUTOTUNE_KINDS = ("scan", "gather", "rerank")
+
+# Probe-budget sweep row (BENCH_sdc_scan.json "probe_budget" section):
+# occupancy-weighted vs flat allocation at equal global budget. The
+# parity row (budget == nprobe * nlist) additionally carries
+# ``bit_identical``.
+PROBE_BUDGET_ROW_KEYS = (
+    "probe_budget", "avg_probes_per_query", "recall_weighted", "recall_flat",
 )
 
 
@@ -568,7 +611,101 @@ def check_bits_sweep(bench: dict, max_ratio: float) -> int:
     return failures
 
 
-def check(bench: dict, max_ratio: float, max_coarse_ratio: float = 0.6) -> int:
+def check_autotune(bench: dict, max_autotune_ratio: float) -> int:
+    """Gate the block-plan autotuner record (returns #failures): schema,
+    every kernel kind present, and the tuned plan never losing to the
+    default in the tuner's own paired sweep (ratio <= max ratio; a
+    swept kind with no ratio is a hard fail — a tuner that cannot show
+    its timings must not pass green)."""
+    section = bench.get("autotune")
+    if not section:
+        print("bench gate: no 'autotune' section — the block-plan "
+              "autotuner record must be emitted", file=sys.stderr)
+        return 1
+    failures = 0
+    seen = set()
+    print("autotune: kind,default,tuned,ratio,limit,status")
+    for i, r in enumerate(section):
+        missing = [k for k in AUTOTUNE_ROW_KEYS if k not in r or r[k] is None]
+        if missing:
+            print(f"bench gate: autotune[{i}] missing keys {missing}",
+                  file=sys.stderr)
+            failures += 1
+            continue
+        seen.add(r["kind"])
+        ratio = r.get("ms_ratio_tuned_vs_default")
+        if ratio is None:
+            print(f"bench gate: autotune[{i}] (kind={r['kind']}) has no "
+                  "tuned-vs-default timing ratio — the sweep must time the "
+                  "default as a candidate", file=sys.stderr)
+            failures += 1
+            continue
+        ok = ratio <= max_autotune_ratio + 1e-9
+        print(f"{r['kind']},({r['block_q_default']},{r['block_n_default']}),"
+              f"({r['block_q']},{r['block_n']}),{ratio:.4f},"
+              f"<={max_autotune_ratio},{'ok' if ok else 'FAIL'}")
+        if not ok:
+            print(f"bench gate: autotune kind={r['kind']} tuned plan LOST "
+                  f"to the default in its own paired sweep (ratio "
+                  f"{ratio:.4f} > {max_autotune_ratio})", file=sys.stderr)
+            failures += 1
+    absent = [k for k in AUTOTUNE_KINDS if k not in seen]
+    if absent:
+        print(f"bench gate: autotune section missing kernel kind(s) "
+              f"{absent}", file=sys.stderr)
+        failures += 1
+    return failures
+
+
+def check_probe_budget(bench: dict) -> int:
+    """Gate the occupancy-weighted probe-budget sweep (returns
+    #failures): schema, weighted recall >= flat recall at every budget,
+    and the exact-multiple parity row present with bit_identical true."""
+    section = bench.get("probe_budget")
+    if not section:
+        print("bench gate: no 'probe_budget' section — the occupancy-"
+              "weighted probe allocation sweep must be emitted",
+              file=sys.stderr)
+        return 1
+    nlist, nprobe = bench.get("nlist"), bench.get("nprobe")
+    parity = (nprobe * nlist
+              if isinstance(nlist, int) and isinstance(nprobe, int) else None)
+    failures = 0
+    saw_parity = False
+    print("probe_budget: budget,recall_weighted,recall_flat,status")
+    for i, r in enumerate(section):
+        missing = [k for k in PROBE_BUDGET_ROW_KEYS
+                   if k not in r or r[k] is None]
+        if missing:
+            print(f"bench gate: probe_budget[{i}] missing keys {missing}",
+                  file=sys.stderr)
+            failures += 1
+            continue
+        errs = []
+        if r["recall_weighted"] < r["recall_flat"] - 1e-9:
+            errs.append(f"weighted recall {r['recall_weighted']:.4f} below "
+                        f"flat recall {r['recall_flat']:.4f} at equal "
+                        f"budget {r['probe_budget']}")
+        if parity is not None and r["probe_budget"] == parity:
+            saw_parity = True
+            if r.get("bit_identical") is not True:
+                errs.append(f"parity row (budget={parity} = nprobe*nlist) "
+                            "not bit-identical to the flat-nprobe search")
+        print(f"{r['probe_budget']},{r['recall_weighted']:.4f},"
+              f"{r['recall_flat']:.4f},{'FAIL' if errs else 'ok'}")
+        for e in errs:
+            print(f"bench gate: probe_budget[{i}] {e}", file=sys.stderr)
+        failures += len(errs)
+    if parity is not None and not saw_parity:
+        print(f"bench gate: probe_budget sweep has no parity row at "
+              f"budget={parity} (= nprobe * nlist), the bit-identity "
+              "operating point", file=sys.stderr)
+        failures += 1
+    return failures
+
+
+def check(bench: dict, max_ratio: float, max_coarse_ratio: float = 0.6,
+          max_autotune_ratio: float = 1.0) -> int:
     rows = bench.get("rows", [])
     by_variant: dict = {}
     for r in rows:
@@ -600,12 +737,14 @@ def check(bench: dict, max_ratio: float, max_coarse_ratio: float = 0.6) -> int:
     if failures:
         print(f"bench gate: {failures} variant(s) violate the packed-byte "
               f"invariant (ratio <= {max_ratio})", file=sys.stderr)
-    # The bi-granular and bits-per-dimension sections ride on the scan
-    # bench specifically; BENCH_hnsw_scan.json flows through the same
-    # pairing logic above but carries neither section.
+    # The bi-granular, bits-per-dimension, autotune and probe-budget
+    # sections ride on the scan bench specifically; BENCH_hnsw_scan.json
+    # flows through the same pairing logic above but carries none of them.
     if bench.get("bench") == "sdc_scan":
         failures += check_bigranular(bench, max_coarse_ratio)
         failures += check_bits_sweep(bench, max_ratio)
+        failures += check_autotune(bench, max_autotune_ratio)
+        failures += check_probe_budget(bench)
     return 1 if failures else 0
 
 
@@ -619,6 +758,11 @@ def main() -> int:
                          "bigranular sweep at coarse_levels = levels // 2 "
                          "(BENCH_sdc_scan.json only: half the levels plus "
                          "per-doc metadata packing cannot shrink)")
+    ap.add_argument("--max-autotune-ratio", type=float, default=1.0,
+                    help="max allowed tuned/default ms ratio in the "
+                         "autotune section (BENCH_sdc_scan.json only; the "
+                         "sweep times the default as a candidate, so the "
+                         "tuned plan can never honestly lose — default 1.0)")
     ap.add_argument("--min-serving-ratio", type=float, default=1.0,
                     help="min allowed overlapped/sequential QPS ratio "
                          "(BENCH_serving.json only)")
@@ -640,7 +784,8 @@ def main() -> int:
         return check_serving(bench, args.min_serving_ratio,
                              args.min_replica_ratio,
                              args.min_upgrade_recall)
-    return check(bench, args.max_packed_ratio, args.max_coarse_ratio)
+    return check(bench, args.max_packed_ratio, args.max_coarse_ratio,
+                 args.max_autotune_ratio)
 
 
 if __name__ == "__main__":

@@ -38,6 +38,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.index.hnsw_lite import ShardedHNSW, hnsw_frontier_search
+from repro.kernels.sdc.defaults import BLOCK_N, BLOCK_Q, plan_for
 from repro.kernels.sdc.ops import resolve_backend, sdc_search, sdc_search_xla
 
 
@@ -51,8 +52,8 @@ def _leaf_scan(
     k: int,
     backend: str = "xla",
     packed: bool = False,
-    block_q: int = 128,
-    block_n: int = 512,
+    block_q: int = BLOCK_Q,
+    block_n: int = BLOCK_N,
 ) -> Tuple[jax.Array, jax.Array]:
     """Local exhaustive SDC scan + top-k on one leaf.
 
@@ -144,8 +145,9 @@ def make_distributed_search(
     shard_axes: Tuple[str, ...] = ("data", "model"),
     backend: str = "auto",
     packed: bool = False,
-    block_q: int = 128,
-    block_n: int = 512,
+    block_q: int = BLOCK_Q,
+    block_n: int = BLOCK_N,
+    block_plan=None,
 ):
     """Build a pjit-able global search fn over a mesh.
 
@@ -154,7 +156,14 @@ def make_distributed_search(
       nibble-packed uint8 [N, D//2] with ``packed=True`` — sharded on
       axis 0 across shard_axes, d_inv [N] f32 (same sharding).
     Output: (scores [Q, k], global ids [Q, k]) replicated.
+
+    ``block_plan`` (kind "scan", from ``launch/autotune``) overrides
+    ``block_q``/``block_n`` for every leaf's fused scan — tuned once
+    for the per-leaf shard size, applied mesh-wide.
     """
+    plan = plan_for(block_plan, "scan")
+    if plan is not None:
+        block_q, block_n = plan.block_q, plan.block_n
     return _make_search(
         mesh, n_levels=n_levels, k=k, shard_axes=shard_axes,
         backend=backend, packed=packed, block_q=block_q, block_n=block_n,
@@ -179,8 +188,9 @@ def make_failover_search(
     shard_axes: Tuple[str, ...] = ("data", "model"),
     backend: str = "auto",
     packed: bool = False,
-    block_q: int = 128,
-    block_n: int = 512,
+    block_q: int = BLOCK_Q,
+    block_n: int = BLOCK_N,
+    block_plan=None,
 ):
     """Distributed search with leaf failover (straggler/failure tolerance).
 
@@ -192,6 +202,9 @@ def make_failover_search(
     is a runtime input), giving graceful degradation instead of a stalled
     query: recall drops by ~|dead|/|leaves| of the corpus, latency does not.
     """
+    plan = plan_for(block_plan, "scan")
+    if plan is not None:
+        block_q, block_n = plan.block_q, plan.block_n
     return _make_search(
         mesh, n_levels=n_levels, k=k, shard_axes=shard_axes,
         backend=backend, packed=packed, block_q=block_q, block_n=block_n,
@@ -334,11 +347,12 @@ def engine_search_from_snapshot(
     shard_axes: Tuple[str, ...] = ("data", "model"),
     backend: str = "auto",
     packed: bool = False,
-    block_q: int = 128,
-    block_n: int = 512,
+    block_q: int = BLOCK_Q,
+    block_n: int = BLOCK_N,
     prepared: Tuple[jax.Array, jax.Array] = None,
     rerank: dict | None = None,
     effort=None,
+    block_plan=None,
 ):
     """Fresh flat engine over ``mesh`` from a snapshot's unpacked codes.
 
@@ -366,6 +380,12 @@ def engine_search_from_snapshot(
     attribute, 0 = full) narrows the rerank by slicing the merged
     top-k' down to its top-``k_coarse >> level`` prefix (floored at k)
     — an exact prefix of a sorted top-k, so no re-jit per level.
+
+    ``block_plan`` — a single ``BlockPlan`` or a ``{kind: plan}``
+    mapping (``launch/autotune``) — sets the per-leaf scan tiles
+    (kind "scan" overrides ``block_q``/``block_n``) and, in bi-granular
+    mode, the post-merge rerank group size (kind "rerank"). Plans never
+    change scores, only launch shapes.
     """
     from repro.index._snapshot import (
         resolve_rerank_args,
@@ -375,6 +395,10 @@ def engine_search_from_snapshot(
 
     codes, n_levels = resolve_snapshot_args(codes, n_levels)
     rr = resolve_rerank_args(rerank, n_levels)
+    scan_plan = plan_for(block_plan, "scan")
+    if scan_plan is not None:
+        block_q, block_n = scan_plan.block_q, scan_plan.block_n
+    rerank_plan = plan_for(block_plan, "rerank")
     if rr is None:
         if prepared is None:
             prepared = flat_engine_inputs_from_snapshot(codes, n_levels,
@@ -421,7 +445,7 @@ def engine_search_from_snapshot(
             cand = cand[:, :kc_eff]
         return sdc_rerank_backend(
             q, fine_codes, fine_inv, cand, n_levels=n_levels, k=k,
-            backend=backend,
+            backend=backend, block_plan=rerank_plan,
         )
 
     if effort is not None:
@@ -474,6 +498,7 @@ def hnsw_engine_search_from_snapshot(
     backend: str = "auto",
     packed: bool = False,
     sharded: ShardedHNSW = None,
+    block_plan=None,
 ):
     """Fresh HNSW engine over ``mesh`` from a snapshot's unpacked codes.
 
@@ -487,7 +512,14 @@ def hnsw_engine_search_from_snapshot(
     ``n_levels``) or raw unpacked codes plus an explicit ``n_levels``
     (legacy form); one convention across every
     ``*_search_from_snapshot`` entry point.
+
+    ``block_plan`` is accepted for signature parity with the other
+    entry points but inert here: the graph walk's gather geometry is
+    fixed by the beam/neighborhood layout (kind "gather"), so there is
+    no tunable tile. A mapping containing only inert kinds is fine; a
+    plan is never an error.
     """
+    plan_for(block_plan, "gather")  # validate mapping keys early
     from repro.index._snapshot import resolve_snapshot_args
 
     codes, n_levels = resolve_snapshot_args(codes, n_levels)

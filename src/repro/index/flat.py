@@ -23,6 +23,7 @@ from repro.core.binarize_lib import (
 )
 from repro.kernels.binary_dot.ops import binary_dot_search
 from repro.kernels.sdc import ref as sdc_ref
+from repro.kernels.sdc.defaults import BLOCK_N, FLAT_BLOCK_Q, BlockPlan, plan_for
 from repro.kernels.sdc.ops import resolve_backend, sdc_search_backend
 from repro.kernels.sdc.rerank import fine_inv_norms, sdc_rerank_backend
 
@@ -74,7 +75,10 @@ class FlatSDC:
         m = self.codes.shape[1]
         return m * 2 if self.packed else m
 
-    def search(self, q_codes: jax.Array, k: int, block_n: int = 512):
+    def search(
+        self, q_codes: jax.Array, k: int, block_n: int = BLOCK_N,
+        block_q: int = FLAT_BLOCK_Q, block_plan: BlockPlan | None = None,
+    ):
         backend = self.backend or ("interpret" if self.interpret else "pallas")
         return sdc_search_backend(
             q_codes,
@@ -83,9 +87,10 @@ class FlatSDC:
             n_levels=self.n_levels,
             k=k,
             backend=resolve_backend(backend),
-            block_q=8,
+            block_q=block_q,
             block_n=block_n,
             packed=self.packed,
+            block_plan=block_plan,
         )
 
     def nbytes(self) -> int:
@@ -143,17 +148,21 @@ class BiGranularFlat:
         )
 
     def search(
-        self, q_codes: jax.Array, k: int, block_n: int = 512,
+        self, q_codes: jax.Array, k: int, block_n: int = BLOCK_N,
         k_coarse: int | None = None,
+        scan_plan: BlockPlan | None = None,
+        rerank_plan: BlockPlan | None = None,
     ) -> Tuple[jax.Array, jax.Array]:
         kc = self.k_coarse if k_coarse is None else k_coarse
         kc = min(kc, self.fine_codes.shape[0])
         q = jnp.asarray(q_codes)
         qc = coarse_codes(q, self.n_levels, self.coarse_levels)
-        _, cand = self.coarse.search(qc, kc, block_n=block_n)
+        _, cand = self.coarse.search(qc, kc, block_n=block_n,
+                                     block_plan=scan_plan)
         return sdc_rerank_backend(
             q, self.fine_codes, self.fine_inv_norm, cand,
             n_levels=self.n_levels, k=k, backend=self.backend,
+            block_plan=rerank_plan,
         )
 
     def coarse_nbytes(self) -> int:
@@ -173,9 +182,10 @@ def flat_search_from_snapshot(
     k: int,
     packed: bool = False,
     backend: str = "xla",
-    block_n: int = 512,
+    block_n: int = BLOCK_N,
     rerank: dict | None = None,
     effort=None,
+    block_plan=None,
 ):
     """Rebuild-from-snapshot entry point (live index lifecycle).
 
@@ -202,6 +212,11 @@ def flat_search_from_snapshot(
     ``k_coarse`` by halving (floored at k); level 0 is bit-identical to
     ``effort=None``. A flat index has no other cost knob, so ``effort``
     without ``rerank`` is ignored.
+
+    ``block_plan`` — a single ``BlockPlan`` or a ``{kind: plan}``
+    mapping (``launch/autotune``) — sets the scan tiles and, in
+    bi-granular mode, the rerank group size. Plans never change scores,
+    only launch shapes.
     """
     from repro.index._snapshot import (
         resolve_rerank_args,
@@ -211,11 +226,14 @@ def flat_search_from_snapshot(
 
     codes, n_levels = resolve_snapshot_args(codes, n_levels)
     rr = resolve_rerank_args(rerank, n_levels)
+    scan_plan = plan_for(block_plan, "scan")
+    rerank_plan = plan_for(block_plan, "rerank")
     if rr is None:
         index = FlatSDC.build(
             jnp.asarray(codes), n_levels, packed=packed, backend=backend
         )
-        return lambda q: index.search(q, k, block_n=block_n)
+        return lambda q: index.search(q, k, block_n=block_n,
+                                      block_plan=scan_plan)
 
     c_levels, k_coarse = rr
     bigr = BiGranularFlat.build(
@@ -223,11 +241,17 @@ def flat_search_from_snapshot(
         packed=packed, backend=backend,
     )
     if effort is None:
-        fn = lambda q: bigr.search(q, k, block_n=block_n)  # noqa: E731
+        fn = lambda q: bigr.search(  # noqa: E731
+            q, k, block_n=block_n, scan_plan=scan_plan,
+            rerank_plan=rerank_plan,
+        )
     else:
         def fn(q):
             kc_eff, _ = split_effort(effort.level, k=k, k_coarse=k_coarse)
-            return bigr.search(q, k, block_n=block_n, k_coarse=kc_eff)
+            return bigr.search(
+                q, k, block_n=block_n, k_coarse=kc_eff,
+                scan_plan=scan_plan, rerank_plan=rerank_plan,
+            )
 
         fn.effort = effort
     fn.reranked = True

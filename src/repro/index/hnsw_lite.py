@@ -542,6 +542,7 @@ def hnsw_search_from_snapshot(
     backend: str = "xla",
     effort=None,
     rerank: dict | None = None,
+    block_plan=None,
 ):
     """Rebuild-from-snapshot entry point (live index lifecycle).
 
@@ -573,6 +574,12 @@ def hnsw_search_from_snapshot(
     only survivor rows are read). The closure carries
     ``fn.reranked = True``. Under pressure, ``effort`` first halves
     ``k_coarse`` (floored at k) and only residual levels halve ef/beam.
+
+    ``block_plan`` — a single ``BlockPlan`` or a ``{kind: plan}``
+    mapping (``launch/autotune``) — only the "rerank" plan applies here
+    (the survivor group size of the bi-granular rerank); the graph
+    walk's gather geometry is fixed by the beam/neighborhood layout, so
+    scan/gather plans are inert. Plans never change scores.
     """
     from repro.index._snapshot import (
         resolve_rerank_args,
@@ -580,10 +587,12 @@ def hnsw_search_from_snapshot(
         split_effort,
     )
     from repro.kernels.sdc import ref as _ref  # lazy: ref is build-time only
+    from repro.kernels.sdc.defaults import plan_for
     from repro.kernels.sdc.rerank import fine_inv_norms, sdc_rerank_backend
 
     codes, n_levels = resolve_snapshot_args(codes, n_levels)
     rr = resolve_rerank_args(rerank, n_levels)
+    rerank_plan = plan_for(block_plan, "rerank")
     if rr is None:
         codes = np.asarray(codes)
         inv = np.asarray(_ref.doc_inv_norms(jnp.asarray(codes), n_levels))
@@ -640,7 +649,7 @@ def hnsw_search_from_snapshot(
         )
         return sdc_rerank_backend(
             q, fine_codes, fine_inv, cand, n_levels=n_levels, k=k,
-            backend=backend,
+            backend=backend, block_plan=rerank_plan,
         )
 
     if effort is not None:

@@ -23,6 +23,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.binarize_lib import (
     codes_to_values,
@@ -31,6 +32,7 @@ from repro.core.binarize_lib import (
 )
 from repro.index.kmeans import kmeans
 from repro.kernels.sdc import ref as sdc_ref
+from repro.kernels.sdc.defaults import plan_for
 from repro.kernels.sdc.gather import sdc_gather_topk, sdc_gather_topk_xla
 from repro.kernels.sdc.ops import resolve_backend
 
@@ -44,6 +46,11 @@ class IVFIndex:
     lists_ids: jax.Array  # [nlist, max_len] int32 (-1 for padding)
     n_levels: int
     packed: bool = False  # nibble-packed list storage (2 dims/byte)
+    # [nlist] int32 stored entries per list, captured at build time — the
+    # occupancy stats the budgeted probe allocator spends against. None on
+    # indexes built before this field existed (allocation then degrades to
+    # uniform; it is also recoverable as (lists_ids >= 0).sum(-1)).
+    list_occupancy: object = None
 
     @property
     def nlist(self) -> int:
@@ -85,8 +92,6 @@ def build_ivf(
     any drop is counted and reported through ``warnings.warn`` with the
     dropped fraction, since a silent drop is invisible at search time.
     """
-    import numpy as np
-
     if packed and n_levels > 4:
         raise ValueError(
             f"packed IVF lists need codes < 16 (n_levels <= 4), got {n_levels}"
@@ -138,6 +143,7 @@ def build_ivf(
         lists_ids=jnp.asarray(li),
         n_levels=n_levels,
         packed=packed,
+        list_occupancy=np.asarray(fill, np.int32),
     )
 
 
@@ -201,6 +207,166 @@ def ivf_search(
     )
 
 
+def probe_rank_thresholds(
+    occupancy,
+    *,
+    probe_budget: int,
+    nlist: int,
+    weighted: bool = True,
+):
+    """Per-centroid coarse-rank thresholds spending ``probe_budget``.
+
+    The budget is a total of per-centroid rank slots: a query probes
+    list ``c`` iff ``c`` sits within that query's top-``r[c]`` coarse
+    scores, so ``sum(r) == probe_budget`` and the *average* number of
+    lists scanned per query is ``probe_budget / nlist`` (the coarse
+    ranking is a permutation). Flat nprobe is the uniform special case
+    ``r[c] == nprobe`` for all c, i.e. ``probe_budget == nprobe *
+    nlist``.
+
+    Allocation: every centroid gets the uniform floor ``probe_budget //
+    nlist`` (the flat part), and the surplus ``probe_budget % nlist``
+    rank slots are apportioned by largest remainder — proportional to
+    list occupancy when ``weighted`` (heavy lists stay probed deeper
+    into the coarse ranking, where the corpus mass actually sits), over
+    equal weights otherwise (+1 to the lowest-index centroids: the
+    equal-budget flat comparator). A budget that is an exact multiple
+    of ``nlist`` therefore has zero surplus and reproduces flat nprobe
+    exactly, occupancy-weighted or not — that is the parity case the
+    tests pin. Thresholds are clipped to ``nlist`` (a rank past the end
+    of the ranking buys nothing), which can strand surplus only when a
+    single list's share exceeds the whole rank range.
+    """
+    B = int(probe_budget)
+    n = int(nlist)
+    if B < 1:
+        raise ValueError(f"probe_budget must be >= 1, got {probe_budget}")
+    base, surplus = divmod(B, n)
+    r = np.full(n, min(base, n), np.int64)
+    if surplus and base < n:
+        if weighted and occupancy is not None:
+            occ = np.asarray(occupancy, np.float64).reshape(-1)
+            if occ.shape[0] != n:
+                raise ValueError(
+                    f"occupancy has {occ.shape[0]} entries for nlist={n}"
+                )
+            if occ.sum() <= 0:
+                occ = np.ones(n)
+        else:
+            occ = np.ones(n)
+        quota = surplus * occ / occ.sum()
+        fl = np.floor(quota).astype(np.int64)
+        r += fl
+        rem = surplus - int(fl.sum())
+        if rem > 0:
+            # Largest fractional part first; ties break to the lower index
+            # so the allocation is deterministic across replicas.
+            order = np.lexsort((np.arange(n), -(quota - fl)))
+            r[order[:rem]] += 1
+    return np.minimum(r, n).astype(np.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "nprobe_max", "k", "n_levels", "coarse_sdc", "backend", "packed",
+    ),
+)
+def ivf_search_budget(
+    index_centroids: jax.Array,
+    index_centroid_codes: jax.Array,
+    lists_codes: jax.Array,
+    lists_inv_norm: jax.Array,
+    lists_ids: jax.Array,
+    rank_limits: jax.Array,
+    q_codes: jax.Array,
+    *,
+    nprobe_max: int,
+    k: int,
+    n_levels: int,
+    coarse_sdc: bool = False,
+    backend: str = "xla",
+    packed: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Budgeted probe search: per-centroid coarse-rank thresholds.
+
+    ``rank_limits`` is the [nlist] int32 threshold vector from
+    ``probe_rank_thresholds``; ``nprobe_max`` must equal its max (it
+    sizes the static probe table). Probe column j of query q is live
+    iff ``j < rank_limits[probes[q, j]]`` — dead columns ride the
+    gather kernel's candidate mask, exactly like HNSW's visited-set
+    exclusion, so their lists never enter the running top-k.
+    """
+    vq = codes_to_values(q_codes, n_levels)
+    if coarse_sdc:
+        cv = codes_to_values(index_centroid_codes, n_levels)
+    else:
+        cv = index_centroids
+    coarse = vq @ cv.T
+    _, probes = jax.lax.top_k(coarse, nprobe_max)  # [Q, nprobe_max]
+    limits = jnp.asarray(rank_limits, jnp.int32)
+    live = jnp.arange(nprobe_max, dtype=jnp.int32)[None, :] < limits[probes]
+    L = lists_ids.shape[1]
+    mask = jnp.broadcast_to(
+        live[:, :, None], probes.shape + (L,)
+    ).astype(jnp.float32)
+    if backend in ("pallas", "interpret"):
+        return sdc_gather_topk(
+            q_codes, lists_codes, lists_inv_norm, lists_ids, probes,
+            n_levels=n_levels, k=k, interpret=(backend == "interpret"),
+            packed=packed, cand_mask=mask,
+        )
+    return sdc_gather_topk_xla(
+        q_codes, lists_codes, lists_inv_norm, lists_ids, probes,
+        n_levels=n_levels, k=k, packed=packed, cand_mask=mask,
+    )
+
+
+def search_budget(
+    index: IVFIndex,
+    q_codes: jax.Array,
+    *,
+    probe_budget: int,
+    k: int,
+    weighted: bool = True,
+    coarse_sdc: bool = False,
+    backend: str = "auto",
+):
+    """Search under a global probe budget instead of a flat nprobe.
+
+    Uniform thresholds (every exact-multiple budget, or uniform
+    occupancy) delegate to the flat ``search`` path with ``nprobe =
+    probe_budget // nlist`` — the same jit program, so ``probe_budget
+    == nprobe * nlist`` is bit-identical to flat nprobe by
+    construction. Non-uniform thresholds take the masked-probe path.
+    """
+    r = probe_rank_thresholds(
+        index.list_occupancy if weighted else None,
+        probe_budget=probe_budget, nlist=index.nlist, weighted=weighted,
+    )
+    lo, hi = int(r.min()), int(r.max())
+    if lo == hi:
+        return search(
+            index, q_codes, nprobe=max(1, lo), k=k, coarse_sdc=coarse_sdc,
+            backend=backend,
+        )
+    return ivf_search_budget(
+        index.centroids,
+        index.centroid_codes,
+        index.lists_codes,
+        index.lists_inv_norm,
+        index.lists_ids,
+        jnp.asarray(r),
+        q_codes,
+        nprobe_max=hi,
+        k=k,
+        n_levels=index.n_levels,
+        coarse_sdc=coarse_sdc,
+        backend=resolve_backend(backend),
+        packed=index.packed,
+    )
+
+
 def ivf_search_from_snapshot(
     codes,
     n_levels: int = None,
@@ -217,6 +383,8 @@ def ivf_search_from_snapshot(
     coarse_sdc: bool = False,
     effort=None,
     rerank: dict | None = None,
+    probe_budget: int | None = None,
+    block_plan=None,
 ):
     """Rebuild-from-snapshot entry point (live index lifecycle).
 
@@ -248,6 +416,21 @@ def ivf_search_from_snapshot(
     read). The closure carries ``fn.reranked = True``. Under pressure,
     ``effort`` first halves ``k_coarse`` (floored at k — the cheap
     axis) and only residual levels halve nprobe.
+
+    ``probe_budget`` switches probe selection from flat nprobe to the
+    occupancy-weighted budget allocator (``search_budget``): the
+    build-time list-occupancy stats decide how deep into each query's
+    coarse ranking every centroid stays probed, spending ``probe_budget
+    / nlist`` lists per query on average. ``effort`` then halves the
+    *budget* per level (``max(1, probe_budget >> level)``) instead of
+    per-level nprobe; ``probe_budget == nprobe * nlist`` serves
+    bit-identically to the flat path it replaces. ``nprobe`` is ignored
+    while a budget is set.
+
+    ``block_plan`` (``kernels.sdc.defaults.BlockPlan``, e.g. from
+    ``launch/autotune``) reaches the bi-granular rerank stage; the IVF
+    scan itself runs on the gather substrate, whose geometry is fixed
+    by the list layout.
     """
     from repro.index._snapshot import (
         resolve_rerank_args,
@@ -264,6 +447,22 @@ def ivf_search_from_snapshot(
             nlist=nlist, kmeans_iters=kmeans_iters, max_len=max_len,
             headroom=headroom, packed=packed,
         )
+        if probe_budget is not None:
+            if effort is None:
+                return lambda q: search_budget(
+                    index, q, probe_budget=probe_budget, k=k,
+                    coarse_sdc=coarse_sdc, backend=backend,
+                )
+
+            def fn(q):
+                level = max(0, int(effort.level))
+                return search_budget(
+                    index, q, probe_budget=max(1, probe_budget >> level),
+                    k=k, coarse_sdc=coarse_sdc, backend=backend,
+                )
+
+            fn.effort = effort
+            return fn
         if effort is None:
             return lambda q: search(
                 index, q, nprobe=nprobe, k=k, coarse_sdc=coarse_sdc,
@@ -279,8 +478,6 @@ def ivf_search_from_snapshot(
 
         fn.effort = effort
         return fn
-
-    import numpy as np
 
     from repro.core.binarize_lib import coarse_codes
 
@@ -303,13 +500,19 @@ def ivf_search_from_snapshot(
         )
         q = jnp.asarray(q)
         qc = coarse_codes(q, n_levels, c_levels)
-        _, cand = search(
-            index, qc, nprobe=max(1, nprobe >> residual), k=kc_eff,
-            coarse_sdc=coarse_sdc, backend=backend,
-        )
+        if probe_budget is not None:
+            _, cand = search_budget(
+                index, qc, probe_budget=max(1, probe_budget >> residual),
+                k=kc_eff, coarse_sdc=coarse_sdc, backend=backend,
+            )
+        else:
+            _, cand = search(
+                index, qc, nprobe=max(1, nprobe >> residual), k=kc_eff,
+                coarse_sdc=coarse_sdc, backend=backend,
+            )
         return sdc_rerank_backend(
             q, codes, fine_inv, cand, n_levels=n_levels, k=k,
-            backend=backend,
+            backend=backend, block_plan=plan_for(block_plan, "rerank"),
         )
 
     if effort is not None:

@@ -1,0 +1,112 @@
+"""Single source of truth for SDC kernel launch-shape defaults.
+
+Before this table existed the block sizes had quietly diverged:
+``sdc.py`` scanned with ``block_n=512`` while the fused ``sdc_topk``
+defaulted to 1024, and ``FlatSDC`` hard-coded a ``block_q=8`` query
+tile. Every un-tuned path now reads the same constants from here, and
+the block-plan autotuner (``launch/autotune.py``) uses this table as
+its fallback plan — a kernel signature that has never been tuned runs
+with exactly these shapes.
+
+``BlockPlan`` lives here (not in ``launch/``) so the kernel layer can
+accept plans without importing the launch layer. A plan is a plain
+NamedTuple of scalars; ``kind`` selects which knobs apply:
+
+  * ``scan``   — ``block_q``/``block_n`` are the tile shapes of the
+    fused scan+top-k kernel (``ops.sdc_search``).
+  * ``gather`` — the gather-then-scan kernel's geometry is fixed by the
+    index layout (one probed list per grid step, the list length is the
+    tile); a plan records provenance but pins the defaults.
+  * ``rerank`` — ``block_n`` is the candidate *group* size of the
+    host-gather rerank path (``rerank.sdc_rerank_gathered``): survivor
+    rows are regrouped into lists of ``block_n`` entries so the gather
+    substrate runs ``k'/block_n`` steps per query instead of ``k'``.
+    ``block_q`` is recorded but inert (the gather kernel scores one
+    query row per step).
+
+Roofline constants for the hillclimb cost model (``launch/hillclimb.py``)
+live here too, so the tt_retrieval variants and the autotuner price
+kernels off one table.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+
+class BlockPlan(NamedTuple):
+    """Launch shapes for one kernel kind, plus where they came from.
+
+    ``source`` is provenance only (never part of equality-for-execution):
+    "default" (this table), "tuned" (fresh sweep), "cache" (reloaded from
+    the tune cache), "inert-backend" (xla — blocks don't reach the
+    kernel), "fixed-geometry" (gather — nothing to sweep).
+    """
+
+    kind: str
+    block_q: int
+    block_n: int
+    source: str = "default"
+
+    def blocks(self) -> tuple[int, int]:
+        return (self.block_q, self.block_n)
+
+
+# Canonical scan tiles: MXU-aligned (multiples of (8, 128) f32 / int8
+# lanes); TQ=128, TN=512 keeps a (TN, D<=2048) int8 tile under 1 MiB of
+# VMEM. The fused top-k kernel historically defaulted to TN=1024 — that
+# divergence is gone; anything wanting 1024 now asks the autotuner.
+BLOCK_Q = 128
+BLOCK_N = 512
+
+# FlatSDC serves small online query batches; a full 128-row query tile
+# would be >90% padding at serving batch sizes, so its per-call default
+# query tile is one f32 sublane.
+FLAT_BLOCK_Q = 8
+
+# Host-gather rerank: one survivor row per gather step (the pre-plan
+# behavior; grouping is strictly a tuned upgrade).
+RERANK_GROUP = 1
+
+DEFAULT_PLANS = {
+    "scan": BlockPlan("scan", BLOCK_Q, BLOCK_N, "default"),
+    "gather": BlockPlan("gather", 1, 0, "default"),
+    "rerank": BlockPlan("rerank", 1, RERANK_GROUP, "default"),
+}
+
+KERNEL_KINDS = tuple(DEFAULT_PLANS)
+
+
+def default_plan(kind: str) -> BlockPlan:
+    """The fallback plan for a kernel kind (KeyError on unknown kinds)."""
+    if kind not in DEFAULT_PLANS:
+        raise KeyError(f"unknown kernel kind {kind!r}; want one of {KERNEL_KINDS}")
+    return DEFAULT_PLANS[kind]
+
+
+def plan_for(block_plan, kind: str) -> BlockPlan | None:
+    """Select the plan for one kernel kind from a caller-supplied plan.
+
+    The ``*_search_from_snapshot`` entry points accept either a single
+    ``BlockPlan`` (applied only where its ``kind`` matches) or a
+    ``{kind: BlockPlan}`` mapping (one tuned plan per kernel kind, the
+    shape ``launch/autotune`` produces for a whole serving tier).
+    Returns None when no plan targets ``kind`` — the defaults then
+    apply.
+    """
+    if block_plan is None:
+        return None
+    if isinstance(block_plan, BlockPlan):
+        return block_plan if block_plan.kind == kind else None
+    plan = block_plan.get(kind)
+    if plan is not None and plan.kind != kind:
+        raise ValueError(f"plan under key {kind!r} has kind {plan.kind!r}")
+    return plan
+
+
+# Roofline constants (single TPU v5e-class core) for the hillclimb cost
+# model. launch/hillclimb.py used to carry its own copies.
+PEAK_FLOPS = 197e12  # int8 MXU peak, ops/s
+HBM_BW = 819e9  # bytes/s
+LINK_BW = 50e9  # bytes/s per ICI link
+N_LINKS = 4

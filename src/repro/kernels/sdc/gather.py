@@ -43,6 +43,7 @@ from repro.core.binarize_lib import (
     unpack_nibble_planes,
 )
 from repro.kernels.sdc.sdc import (
+    _check_code_dim,
     _merge_running_topk,
     _split_queries,
     _tile_scores,
@@ -112,7 +113,7 @@ def sdc_gather_topk(
     nlist, L = lists_ids.shape
     nprobe = probes.shape[1]
     Dc = lists_codes.shape[-1]
-    assert Dc == (D // 2 if packed else D), (lists_codes.shape, D, packed)
+    _check_code_dim(lists_codes, D, packed)
     probes = jnp.clip(probes.astype(jnp.int32), 0, nlist - 1)
     has_mask = cand_mask is not None
 

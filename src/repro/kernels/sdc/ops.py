@@ -25,6 +25,7 @@ from repro.core.binarize_lib import (
     unpack_nibble_planes,
 )
 from repro.kernels.sdc import ref as sdc_ref_mod
+from repro.kernels.sdc.defaults import BLOCK_N, BLOCK_Q, BlockPlan
 from repro.kernels.sdc.sdc import sdc_scores, sdc_topk
 
 NEG_INF = SDC_NEG_INF
@@ -66,8 +67,8 @@ def sdc_search(
     *,
     n_levels: int,
     k: int,
-    block_q: int = 128,
-    block_n: int = 512,
+    block_q: int = BLOCK_Q,
+    block_n: int = BLOCK_N,
     interpret: bool = False,
     fused: bool = True,
     packed: bool = False,
@@ -173,10 +174,20 @@ def sdc_search_xla(
 
 def sdc_search_backend(
     q_codes, d_codes, d_inv_norm, *, n_levels, k, backend="auto",
-    block_q=128, block_n=512, packed=False,
+    block_q=BLOCK_Q, block_n=BLOCK_N, packed=False,
+    block_plan: BlockPlan | None = None,
 ):
-    """Dispatch a top-k SDC search to the resolved backend."""
+    """Dispatch a top-k SDC search to the resolved backend.
+
+    ``block_plan`` (a ``defaults.BlockPlan``, e.g. from the
+    ``launch/autotune`` sweep) overrides ``block_q``/``block_n`` when
+    given. Blocks only shape the kernel launch — scores and ids are
+    bit-identical across every block choice — so a plan is always safe
+    to apply. The "xla" backend has no tiles; plans are inert there.
+    """
     backend = resolve_backend(backend)
+    if block_plan is not None:
+        block_q, block_n = block_plan.block_q, block_plan.block_n
     if backend == "xla":
         return sdc_search_xla(
             q_codes, d_codes, d_inv_norm, n_levels=n_levels, k=k, packed=packed

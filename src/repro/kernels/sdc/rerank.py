@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.sdc.defaults import RERANK_GROUP, BlockPlan
 from repro.kernels.sdc.gather import sdc_gather_topk, sdc_gather_topk_xla
 from repro.kernels.sdc.ops import resolve_backend
 
@@ -158,35 +159,60 @@ def sdc_rerank_gathered(
     n_levels: int,
     k: int,
     packed: bool = False,
+    group: int = RERANK_GROUP,
+    backend: str = "xla",
 ):
     """Cold-tier rerank: host-gather the survivor rows, score on device.
 
     For a memory-mapped fine tier (``np.memmap``), this is the only
     path that touches k' rows per query instead of paging the whole
     corpus through ``jnp.asarray``. The gathered block is scored as
-    Q*k' single-entry lists with an identity probe table, so the float
-    op order — and therefore every score and tie-break — matches
+    fixed-width candidate lists with an identity probe table, so the
+    float op order — and therefore every score and tie-break — matches
     ``sdc_rerank`` / ``sdc_rerank_xla`` exactly.
+
+    ``group`` (the rerank axis of a ``BlockPlan``; default 1) is the
+    number of gathered survivor rows per list: the gather substrate
+    then runs ceil(k'/group) steps per query instead of k'. Because
+    scores are elementwise per (query, candidate) and the running
+    top-k merge is a stable selection over ascending-id candidates,
+    every group size returns bit-identical results — the knob only
+    moves launch overhead, which is what the autotuner sweeps.
+    Grouping also gives the kernel backends sublane-aligned tiles, so
+    ``backend="pallas"/"interpret"`` routes the grouped layout through
+    ``sdc_gather_topk`` instead of the jnp twin.
     """
     cand = np.asarray(cand_ids, np.int32)
     key = np.sort(np.where(cand < 0, _INT32_MAX, cand), axis=-1)
     cand = np.where(key == _INT32_MAX, -1, key)
     Q, kp = cand.shape
+    g = max(1, min(int(group), kp))
+    pad = (-kp) % g
+    if pad:
+        cand = np.concatenate([cand, -np.ones((Q, pad), np.int32)], axis=1)
+        kp += pad
     N = fine_codes.shape[0]
     safe = np.clip(cand, 0, N - 1)
     g_codes = np.asarray(fine_codes)[safe]  # [Q, k', D(/2)] cold-tier reads
     g_inv = np.where(
         cand >= 0, np.asarray(fine_inv_norm)[safe], 0.0
     ).astype(np.float32)
-    lists_codes = g_codes.reshape(Q * kp, 1, g_codes.shape[-1])
-    lists_inv = g_inv.reshape(Q * kp, 1)
-    lists_ids = cand.reshape(Q * kp, 1)
-    probes = np.arange(Q * kp, dtype=np.int32).reshape(Q, kp)
-    return sdc_gather_topk_xla(
+    n_lists = Q * kp // g
+    lists_codes = g_codes.reshape(n_lists, g, g_codes.shape[-1])
+    lists_inv = g_inv.reshape(n_lists, g)
+    lists_ids = cand.reshape(n_lists, g)
+    probes = np.arange(n_lists, dtype=np.int32).reshape(Q, kp // g)
+    backend = resolve_backend(backend)
+    args = (
         jnp.asarray(q_codes), jnp.asarray(lists_codes),
-        jnp.asarray(lists_inv), jnp.asarray(lists_ids),
-        jnp.asarray(probes), n_levels=n_levels, k=k, packed=packed,
+        jnp.asarray(lists_inv), jnp.asarray(lists_ids), jnp.asarray(probes),
     )
+    if backend in ("pallas", "interpret"):
+        return sdc_gather_topk(
+            *args, n_levels=n_levels, k=k,
+            interpret=(backend == "interpret"), packed=packed,
+        )
+    return sdc_gather_topk_xla(*args, n_levels=n_levels, k=k, packed=packed)
 
 
 def sdc_rerank_backend(
@@ -199,6 +225,7 @@ def sdc_rerank_backend(
     k: int,
     backend: str = "auto",
     packed: bool = False,
+    block_plan: BlockPlan | None = None,
 ):
     """Dispatch a fine rerank to the resolved backend.
 
@@ -206,12 +233,24 @@ def sdc_rerank_backend(
     takes the host-gather path regardless of backend — moving the whole
     corpus on device would defeat the tiering. Device-resident fine
     codes go through the Pallas gather kernel or its jnp twin.
+
+    ``block_plan`` (kind "rerank") sets the host-gather candidate group
+    size; results are bit-identical across plans (see
+    ``sdc_rerank_gathered``). Device-resident fine tiers gather by DMA
+    index map — there is no regrouping to tune — so the plan is inert
+    for them.
     """
     backend = resolve_backend(backend)
     if isinstance(fine_codes, np.ndarray):
+        group = (
+            block_plan.block_n
+            if block_plan is not None and block_plan.kind == "rerank"
+            else RERANK_GROUP
+        )
         return sdc_rerank_gathered(
             q_codes, fine_codes, fine_inv_norm, cand_ids,
-            n_levels=n_levels, k=k, packed=packed,
+            n_levels=n_levels, k=k, packed=packed, group=group,
+            backend=backend,
         )
     if backend == "xla":
         return sdc_rerank_xla(

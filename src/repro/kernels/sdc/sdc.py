@@ -48,6 +48,25 @@ from repro.core.binarize_lib import (
     sdc_affine_epilogue,
     unpack_nibble_planes,
 )
+from repro.kernels.sdc.defaults import BLOCK_N, BLOCK_Q
+
+
+def _check_code_dim(d_codes, D: int, packed: bool) -> None:
+    want = D // 2 if packed else D
+    if d_codes.shape[-1] != want:
+        raise ValueError(
+            f"document code dim {d_codes.shape[-1]} (shape {d_codes.shape}) "
+            f"!= expected {want} for query dim D={D}, packed={packed}"
+        )
+
+
+def _check_block_tiling(Q: int, N: int, block_q: int, block_n: int) -> None:
+    if Q % block_q != 0 or N % block_n != 0:
+        raise ValueError(
+            f"grid does not tile: Q={Q} % block_q={block_q} = {Q % block_q}, "
+            f"N={N} % block_n={block_n} = {N % block_n}; pad Q/N to the "
+            "block multiples (ops.sdc_search does) or pick dividing blocks"
+        )
 
 
 def _unpack_nibbles_tile(p: jax.Array):
@@ -134,8 +153,8 @@ def sdc_scores(
     d_inv_norm: jax.Array,
     *,
     n_levels: int,
-    block_q: int = 128,
-    block_n: int = 512,
+    block_q: int = BLOCK_Q,
+    block_n: int = BLOCK_N,
     interpret: bool = False,
     packed: bool = False,
 ) -> jax.Array:
@@ -148,8 +167,8 @@ def sdc_scores(
     """
     Q, D = q_codes.shape
     N = d_codes.shape[0]
-    assert d_codes.shape[1] == (D // 2 if packed else D), (d_codes.shape, D, packed)
-    assert Q % block_q == 0 and N % block_n == 0, (Q, N, block_q, block_n)
+    _check_code_dim(d_codes, D, packed)
+    _check_block_tiling(Q, N, block_q, block_n)
 
     grid = (Q // block_q, N // block_n)
     Dc = d_codes.shape[1]
@@ -245,8 +264,8 @@ def sdc_topk(
     *,
     n_levels: int,
     k: int,
-    block_q: int = 128,
-    block_n: int = 1024,
+    block_q: int = BLOCK_Q,
+    block_n: int = BLOCK_N,
     interpret: bool = False,
     packed: bool = False,
 ):
@@ -258,10 +277,15 @@ def sdc_topk(
     """
     Q, D = q_codes.shape
     N = d_codes.shape[0]
-    assert Q % block_q == 0 and N % block_n == 0 and k <= block_n
+    _check_block_tiling(Q, N, block_q, block_n)
+    if k > block_n:
+        raise ValueError(
+            f"fused top-k needs k <= block_n, got k={k}, block_n={block_n} "
+            "(ops.sdc_search widens the effective block for large k)"
+        )
     grid = (Q // block_q, N // block_n)
     Dc = d_codes.shape[1]
-    assert Dc == (D // 2 if packed else D), (d_codes.shape, D, packed)
+    _check_code_dim(d_codes, D, packed)
     d_specs = [
         pl.BlockSpec((block_n, Dc), lambda i, j: (j, 0)),
         pl.BlockSpec((block_n,), lambda i, j: (j,)),

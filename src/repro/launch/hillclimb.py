@@ -26,10 +26,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-LINK_BW = 50e9
-N_LINKS = 4
+# Roofline constants shared with the block-plan autotuner: one table
+# (kernels/sdc/defaults.py) prices kernels for both the cost model here
+# and the launch-shape sweeps.
+from repro.kernels.sdc.defaults import HBM_BW, LINK_BW, N_LINKS, PEAK_FLOPS
 
 
 def _measure(fn, in_shardings, args, mesh, n_dev):
@@ -171,15 +171,12 @@ def tt_retrieval_bebr_merge(mesh, code_dim=64, n_levels=4):
     from repro.configs.registry import get_arch
     from repro.models.recsys import two_tower as tt
     from repro.parallel import sharding as shd
-    from repro.train import steps as steps_mod
 
     cfg = get_arch("two-tower-retrieval").config
     fn_base, (param_sh, batch_sh), (params_s, batch_s) = tt_retrieval_bebr(mesh)
     dp = shd.dp_axes(mesh)
     a, beta = code_affine_constants(n_levels)
     k = 100
-    base_step = steps_mod.tt_retrieval_bebr_step(cfg, k=k, code_dim=code_dim,
-                                                 n_levels=n_levels)
 
     def leaf(q_code8, cand_codes, cand_inv):
         dot = jax.lax.dot_general(
@@ -211,9 +208,6 @@ def tt_retrieval_bebr_merge(mesh, code_dim=64, n_levels=4):
 
     def step(params, batch):
         q = tt.query_embed(params, batch["hist_ids"], batch["hist_mask"], cfg)
-        # reuse the linear recurrent binarizer from the base step via a
-        # tiny closure — recompute codes here to keep one entry point
-        from repro.train.steps import tt_retrieval_bebr_step as _unused  # noqa
 
         def sign(x):
             return jnp.where(x > 0, 1.0, -1.0)

@@ -241,18 +241,25 @@ class FlatBuilder(_SnapshotCachingBuilder):
     ``coarse_levels``/``k_coarse`` (set together) switch the build to
     bi-granular mode: packed hot coarse scan + cold fine rerank — same
     convention on every builder; see the entry point's docstring.
+
+    ``block_plan`` (a ``BlockPlan`` or ``{kind: plan}`` mapping from
+    ``launch/autotune``) sets tuned launch shapes on every builder that
+    takes it. Plans never change scores, and being non-scalar they stay
+    out of ``builder_version`` — a tuned and an untuned build of the
+    same snapshot ARE version-equivalent, by design.
     """
 
     kind = "flat"
 
     def __init__(self, *, k: int = 10, packed: bool = False,
                  backend: str = "xla", block_n: int = 512,
-                 coarse_levels: int = None, k_coarse: int = None):
+                 coarse_levels: int = None, k_coarse: int = None,
+                 block_plan=None):
         super().__init__()
         self._rerank = _rerank_params(coarse_levels, k_coarse)
         self.params = dict(k=k, packed=packed, backend=backend,
                            block_n=block_n, coarse_levels=coarse_levels,
-                           k_coarse=k_coarse)
+                           k_coarse=k_coarse, block_plan=block_plan)
 
     def _build(self, snapshot: CorpusSnapshot) -> SearchFn:
         from repro.index.flat import flat_search_from_snapshot
@@ -263,20 +270,29 @@ class FlatBuilder(_SnapshotCachingBuilder):
 
 
 class IVFBuilder(_SnapshotCachingBuilder):
-    """IVF index, re-clustered per snapshot (``ivf_search_from_snapshot``)."""
+    """IVF index, re-clustered per snapshot (``ivf_search_from_snapshot``).
+
+    ``probe_budget`` switches the served closure to occupancy-weighted
+    probe allocation (a global budget of per-centroid rank slots instead
+    of a flat per-query ``nprobe``; see ``index.ivf.search_budget``).
+    It is a scalar, so it flows through ``builder_version`` — a budgeted
+    and a flat-nprobe build are never version-equivalent.
+    """
 
     kind = "ivf"
 
     def __init__(self, *, k: int = 10, nlist: int = 64, nprobe: int = 32,
                  seed: int = 0, kmeans_iters: int = 20,
                  packed: bool = False, backend: str = "xla",
-                 coarse_levels: int = None, k_coarse: int = None):
+                 coarse_levels: int = None, k_coarse: int = None,
+                 probe_budget: int = None, block_plan=None):
         super().__init__()
         self._rerank = _rerank_params(coarse_levels, k_coarse)
         self.params = dict(k=k, nlist=nlist, nprobe=nprobe, seed=seed,
                            kmeans_iters=kmeans_iters, packed=packed,
                            backend=backend, coarse_levels=coarse_levels,
-                           k_coarse=k_coarse)
+                           k_coarse=k_coarse, probe_budget=probe_budget,
+                           block_plan=block_plan)
 
     def _build(self, snapshot: CorpusSnapshot) -> SearchFn:
         from repro.index.ivf import ivf_search_from_snapshot
@@ -298,13 +314,15 @@ class HNSWBuilder(_SnapshotCachingBuilder):
                  ef_construction: int = 64, ef: int = 64, beam: int = 8,
                  max_hops: int = 64, seed: int = 0, packed: bool = False,
                  backend: str = "xla",
-                 coarse_levels: int = None, k_coarse: int = None):
+                 coarse_levels: int = None, k_coarse: int = None,
+                 block_plan=None):
         super().__init__()
         self._rerank = _rerank_params(coarse_levels, k_coarse)
         self.params = dict(k=k, M=M, ef_construction=ef_construction,
                            ef=ef, beam=beam, max_hops=max_hops, seed=seed,
                            packed=packed, backend=backend,
-                           coarse_levels=coarse_levels, k_coarse=k_coarse)
+                           coarse_levels=coarse_levels, k_coarse=k_coarse,
+                           block_plan=block_plan)
 
     def _build(self, snapshot: CorpusSnapshot) -> SearchFn:
         from repro.index.hnsw_lite import hnsw_search_from_snapshot
@@ -331,7 +349,8 @@ class EngineBuilder:
                  packed: bool = False, shard_axes=("data", "model"),
                  M: int = 16, ef_construction: int = 48, ef: int = 64,
                  beam: int = 16, max_hops: int = 64, seed: int = 0,
-                 coarse_levels: int = None, k_coarse: int = None):
+                 coarse_levels: int = None, k_coarse: int = None,
+                 block_plan=None):
         if index not in ("flat", "hnsw"):
             raise ValueError(f"EngineBuilder index must be flat|hnsw, "
                              f"got {index!r}")
@@ -350,6 +369,7 @@ class EngineBuilder:
                            ef_construction=ef_construction, ef=ef,
                            beam=beam, max_hops=max_hops, seed=seed,
                            coarse_levels=coarse_levels, k_coarse=k_coarse)
+        self.block_plan = block_plan
         self.shard_axes = tuple(shard_axes)
         # Digest-keyed host-side artifacts shared by every replica: the
         # per-leaf NSW graphs (hnsw) / packed codes + inv norms (flat).
@@ -395,7 +415,7 @@ class EngineBuilder:
                 mesh, snapshot, k=p["k"],
                 shard_axes=self.shard_axes, backend=p["backend"],
                 packed=p["packed"], prepared=self._flat_inputs(snapshot),
-                rerank=self._rerank,
+                rerank=self._rerank, block_plan=self.block_plan,
             )
         n_leaves = 1
         for ax in self.shard_axes:

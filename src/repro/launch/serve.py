@@ -133,6 +133,26 @@ def main():
                     choices=["auto", "pallas", "interpret", "xla"],
                     help="SDC scoring backend (auto: Pallas kernel on TPU, "
                          "jnp fallback elsewhere)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="sweep (block_q, block_n) launch shapes for the "
+                         "live corpus/kernel signatures on startup and "
+                         "serve with the winners; winners persist in the "
+                         "tune cache so replicas and later launches share "
+                         "one plan (launch/autotune.py); scores are "
+                         "bit-identical with or without this flag")
+    ap.add_argument("--tune-cache", default=None, metavar="DIR",
+                    help="block-plan tune cache dir (default: "
+                         "$REPRO_BEBR_CACHE, else ~/.cache/repro-bebr); "
+                         "the first launch to tune a signature pays the "
+                         "sweep, everyone else loads its winner")
+    ap.add_argument("--probe-budget", type=int, default=0, metavar="B",
+                    help="ivf: occupancy-weighted probe allocation — B "
+                         "per-centroid rank slots are split across the "
+                         "coarse centroids in proportion to list "
+                         "occupancy instead of a flat per-query "
+                         "--nprobe; B = nprobe*nlist costs the same "
+                         "scans as flat nprobe (and is bit-identical at "
+                         "exact multiples); 0 disables")
     ap.add_argument("--batch", type=int, default=0,
                     help="serving batch size (0: all queries in one batch)")
     ap.add_argument("--rounds", type=int, default=4,
@@ -202,6 +222,8 @@ def main():
     if args.coarse_levels and not 0 < args.coarse_levels < args.levels:
         ap.error(f"--coarse-levels must be in [1, {args.levels - 1}] "
                  f"(got {args.coarse_levels} of --levels {args.levels})")
+    if args.probe_budget and args.index != "ivf":
+        ap.error("--probe-budget only applies to --index ivf")
 
     print(f"[data] {args.docs} docs, {args.queries} queries, dim={args.dim}")
     docs, queries, gt = synthetic.clustered_corpus(
@@ -238,21 +260,42 @@ def main():
     flat_float = FlatFloat.build(jnp.asarray(docs))
     cl = args.coarse_levels or None
     kc = args.k_coarse or None
+
+    # Adaptive execution: tune (or reload) a block plan per kernel kind
+    # for the live corpus shapes. Plans only move launch geometry —
+    # every score below is bit-identical with block_plan=None.
+    block_plan = None
+    if args.autotune:
+        from repro.launch import autotune
+
+        block_plan = {}
+        for kind in ("scan", "rerank"):
+            tp = autotune.tuned_block_plan(
+                kind, code_dim=args.code_dim, n_shard=args.docs,
+                packed=args.packed, k=(kc or args.k), n_levels=args.levels,
+                backend=args.backend, cache_dir=args.tune_cache,
+            )
+            block_plan[kind] = tp.plan
+            print(f"[tune] {kind}: block_q={tp.plan.block_q} "
+                  f"block_n={tp.plan.block_n} ({tp.plan.source}"
+                  f"{', swept now' if tp.tuned else ''})")
+
     if args.index == "flat":
         builder = lifecycle.FlatBuilder(
             k=args.k, packed=args.packed, backend=args.backend,
-            coarse_levels=cl, k_coarse=kc,
+            coarse_levels=cl, k_coarse=kc, block_plan=block_plan,
         )
     elif args.index == "ivf":
         builder = lifecycle.IVFBuilder(
             k=args.k, nlist=64, nprobe=32, seed=1, packed=args.packed,
             backend=args.backend, coarse_levels=cl, k_coarse=kc,
+            probe_budget=args.probe_budget or None, block_plan=block_plan,
         )
     else:
         builder = lifecycle.HNSWBuilder(
             k=args.k, M=16, ef_construction=64, ef=args.ef, beam=args.beam,
             packed=args.packed, backend=args.backend,
-            coarse_levels=cl, k_coarse=kc,
+            coarse_levels=cl, k_coarse=kc, block_plan=block_plan,
         )
     p = builder.params
 
@@ -278,10 +321,13 @@ def main():
               f"levels), fine {fine_b/2**20:.2f} MiB (cold), "
               f"rerank k'={kc}")
     elif args.index == "flat":
+        from repro.kernels.sdc.defaults import plan_for
+
         index = FlatSDC.build(
             d_codes, bcfg.n_levels, packed=p["packed"], backend=p["backend"]
         )
-        search = lambda q: index.search(q, p["k"])
+        scan_plan = plan_for(block_plan, "scan")
+        search = lambda q: index.search(q, p["k"], block_plan=scan_plan)
         nbytes = index.nbytes()
     elif args.index == "ivf":
         index = ivf_lib.build_ivf(
@@ -289,9 +335,15 @@ def main():
             nlist=p["nlist"], kmeans_iters=p["kmeans_iters"],
             packed=p["packed"],
         )
-        search = lambda q: ivf_lib.search(
-            index, q, nprobe=p["nprobe"], k=p["k"], backend=p["backend"]
-        )
+        if p["probe_budget"]:
+            search = lambda q: ivf_lib.search_budget(
+                index, q, probe_budget=p["probe_budget"], k=p["k"],
+                backend=p["backend"],
+            )
+        else:
+            search = lambda q: ivf_lib.search(
+                index, q, nprobe=p["nprobe"], k=p["k"], backend=p["backend"]
+            )
         nbytes = index.nbytes()
     else:  # hnsw: batched-frontier graph search on the gather kernel
         inv = np.asarray(sdc_ref.doc_inv_norms(d_codes, bcfg.n_levels))

@@ -84,10 +84,36 @@ def _bits_sweep_section():
     ]
 
 
+def _autotune_section():
+    def row(kind, dq, dn, tq, tn, ratio, source):
+        return {"kind": kind, "backend": "interpret",
+                "block_q_default": dq, "block_n_default": dn,
+                "block_q": tq, "block_n": tn, "source": source,
+                "default_ms": None if ratio is None else 10.0,
+                "tuned_ms": None if ratio is None else 10.0 * ratio,
+                "ms_ratio_tuned_vs_default": ratio}
+    return [row("scan", 128, 512, 32, 1024, 0.7, "tuned"),
+            row("gather", 1, 0, 1, 0, 1.0, "fixed-geometry"),
+            row("rerank", 1, 1, 1, 8, 0.5, "tuned")]
+
+
+def _probe_budget_section(nlist=64, nprobe=8):
+    def row(budget, rw, rf, **extra):
+        return {"probe_budget": budget,
+                "avg_probes_per_query": budget / nlist,
+                "recall_weighted": rw, "recall_flat": rf, **extra}
+    return [row(nlist // 2, 0.7, 0.5),
+            row(nlist + nlist // 2, 0.9, 0.85),
+            row(nprobe * nlist, 0.99, 0.99, bit_identical=True)]
+
+
 def _scan_bench(**overrides):
-    bench = {"bench": "sdc_scan", "levels": 4, "rows": _rows(0.53),
+    bench = {"bench": "sdc_scan", "levels": 4, "nlist": 64, "nprobe": 8,
+             "rows": _rows(0.53),
              "bigranular": _bigranular_section(),
-             "bits_sweep": _bits_sweep_section()}
+             "bits_sweep": _bits_sweep_section(),
+             "autotune": _autotune_section(),
+             "probe_budget": _probe_budget_section()}
     bench.update(overrides)
     return bench
 
@@ -198,6 +224,109 @@ def test_gate_fails_on_nonmonotone_index_bytes(tmp_path):
     out = _run_gate(tmp_path, bench)
     assert out.returncode != 0
     assert "not monotone" in out.stderr
+
+
+# -- autotune + probe-budget sections (scan bench) ---------------------------
+
+
+def test_gate_requires_an_autotune_section(tmp_path):
+    """A scan report without the block-plan autotuner record (emitter
+    regression) must not pass green."""
+    out = _run_gate(tmp_path, _scan_bench(autotune=[]))
+    assert out.returncode != 0
+    assert "no 'autotune' section" in out.stderr
+
+
+def test_gate_fails_on_malformed_autotune_row(tmp_path):
+    bench = _scan_bench()
+    del bench["autotune"][0]["block_q"]
+    del bench["autotune"][0]["source"]
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "missing keys" in out.stderr
+    assert "block_q" in out.stderr and "source" in out.stderr
+
+
+def test_gate_fails_when_tuned_plan_loses_to_default(tmp_path):
+    """The sweep times the default as a candidate on the same operands,
+    so an honest tuner can never lose — a ratio above 1 means the tuner
+    shipped a plan it never beat the default with."""
+    bench = _scan_bench()
+    bench["autotune"][0]["ms_ratio_tuned_vs_default"] = 1.3
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "LOST to the default" in out.stderr
+
+
+def test_gate_fails_on_swept_kind_without_timings(tmp_path):
+    """Only un-sweepable kinds may skip timings; a swept kind with a
+    null ratio is a tuner that cannot show its work."""
+    bench = _scan_bench()
+    bench["autotune"][0]["ms_ratio_tuned_vs_default"] = None
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "no tuned-vs-default timing ratio" in out.stderr
+
+
+def test_gate_fails_on_missing_kernel_kind(tmp_path):
+    bench = _scan_bench()
+    bench["autotune"] = [r for r in bench["autotune"]
+                         if r["kind"] != "rerank"]
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "missing kernel kind" in out.stderr and "rerank" in out.stderr
+
+
+def test_gate_autotune_ratio_is_configurable(tmp_path):
+    bench = _scan_bench()
+    bench["autotune"][0]["ms_ratio_tuned_vs_default"] = 1.3
+    out = _run_gate(tmp_path, bench, "--max-autotune-ratio", "1.5")
+    assert out.returncode == 0, out.stdout + out.stderr
+
+
+def test_gate_requires_a_probe_budget_section(tmp_path):
+    out = _run_gate(tmp_path, _scan_bench(probe_budget=[]))
+    assert out.returncode != 0
+    assert "no 'probe_budget' section" in out.stderr
+
+
+def test_gate_fails_on_malformed_probe_budget_row(tmp_path):
+    bench = _scan_bench()
+    del bench["probe_budget"][0]["recall_weighted"]
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "missing keys" in out.stderr and "recall_weighted" in out.stderr
+
+
+def test_gate_fails_when_weighted_loses_to_flat(tmp_path):
+    """Occupancy-weighted allocation must never cost recall at equal
+    budget — losing to the flat comparator means the surplus slots went
+    to the wrong lists."""
+    bench = _scan_bench()
+    bench["probe_budget"][0]["recall_weighted"] = 0.4  # flat is 0.5
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "below" in out.stderr and "flat recall" in out.stderr
+
+
+def test_gate_fails_when_parity_row_is_not_bit_identical(tmp_path):
+    """budget == nprobe * nlist must reproduce flat nprobe bit-for-bit
+    (same jit program); anything else means the budget path diverged."""
+    bench = _scan_bench()
+    bench["probe_budget"][-1]["bit_identical"] = False
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "not bit-identical to the flat-nprobe search" in out.stderr
+
+
+def test_gate_fails_without_the_parity_row(tmp_path):
+    """The sweep must COVER the bit-identity operating point: dropping
+    the exact-multiple budget row must not dodge the parity check."""
+    bench = _scan_bench()
+    bench["probe_budget"] = bench["probe_budget"][:-1]
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "no parity row at budget=512" in out.stderr
 
 
 def test_gate_understands_hnsw_schema(tmp_path):
@@ -704,13 +833,15 @@ def test_docs_lint_passes_this_repo(tmp_path):
     assert out.returncode == 0, out.stderr
 
 
-def test_gate_accepts_real_emitter_output(tmp_path):
+def test_gate_accepts_real_emitter_output(tmp_path, monkeypatch):
     """End-to-end: the actual tiny-corpus emitter satisfies the gate."""
     repo_root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
     if repo_root not in sys.path:  # bare `pytest` does not add the cwd
         sys.path.insert(0, repo_root)
     from benchmarks.table5_search_latency import emit_sdc_scan_json
 
+    # keep the emitter's autotune sweep out of the user's real tune cache
+    monkeypatch.setenv("REPRO_BEBR_CACHE", str(tmp_path / "tune-cache"))
     path = tmp_path / "BENCH_sdc_scan.json"
     emit_sdc_scan_json(path=str(path), n_docs=1024, queries=4)
     out = subprocess.run(

@@ -1,0 +1,208 @@
+"""Occupancy-weighted IVF probe budgets (index/ivf.py).
+
+A global ``probe_budget`` of per-centroid rank slots replaces the flat
+``nprobe``. The load-bearing invariants: the allocation spends exactly
+the budget, exact multiples of ``nlist`` are bit-identical to flat
+nprobe (same jit program, not just same answers), surplus slots follow
+list occupancy, and the effort knob halves the budget instead of the
+probe count.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.binarize_lib import codes_to_values
+from repro.index import ivf as ivf_lib
+from repro.kernels.sdc import ref as R
+from repro.kernels.sdc.ops import sdc_search_xla
+
+M, LEVELS, NLIST = 16, 2, 8
+
+
+def _clustered_corpus(seed=0, n=512, skew=True):
+    """Cluster sizes ~ 1/rank (heaviest first) when skewed, else equal."""
+    rng = np.random.default_rng(seed)
+    n_clusters = 2 * NLIST
+    if skew:
+        w = 1.0 / np.arange(1, n_clusters + 1)
+    else:
+        w = np.ones(n_clusters)
+    sizes = np.maximum(1, np.round(n * w / w.sum()).astype(int))
+    sizes[0] += n - sizes.sum()
+    hi = 2 ** LEVELS
+    centers = rng.integers(0, hi, size=(n_clusters, M))
+    parts = []
+    for c in range(n_clusters):
+        rows = np.repeat(centers[c][None, :], sizes[c], 0)
+        flip = rng.random(rows.shape) < 0.08
+        parts.append(np.where(flip, rng.integers(0, hi, size=rows.shape),
+                              rows))
+    return jnp.asarray(np.concatenate(parts).astype(np.int8))
+
+
+def _queries(cd, seed=1, q=8, head=None):
+    rng = np.random.default_rng(seed)
+    n = cd.shape[0]
+    src = rng.integers(0, head or n, size=q)
+    base = np.asarray(cd)[src].astype(np.int64)
+    flip = rng.random(base.shape) < 0.15
+    hi = 2 ** LEVELS
+    return jnp.asarray(
+        np.where(flip, rng.integers(0, hi, size=base.shape),
+                 base).astype(np.int8)
+    )
+
+
+def _index(cd, **kw):
+    return ivf_lib.build_ivf(jax.random.PRNGKey(3), cd, n_levels=LEVELS,
+                             nlist=NLIST, kmeans_iters=4, **kw)
+
+
+def test_thresholds_spend_exactly_the_budget():
+    occ = np.array([100, 50, 25, 12, 6, 3, 2, 1], np.float64)
+    for budget in (1, 3, NLIST, NLIST + 3, 3 * NLIST, 3 * NLIST + 5):
+        r = ivf_lib.probe_rank_thresholds(occ, probe_budget=budget,
+                                          nlist=NLIST)
+        assert r.sum() == budget
+        assert r.min() >= budget // NLIST  # uniform floor for every list
+        assert r.max() <= NLIST
+
+
+def test_surplus_goes_to_heavy_lists():
+    occ = np.array([100, 50, 25, 12, 6, 3, 2, 1], np.float64)
+    r = ivf_lib.probe_rank_thresholds(occ, probe_budget=NLIST + 3,
+                                      nlist=NLIST)
+    # floor of 1 everywhere; the 3 surplus slots follow the mass by
+    # largest remainder: list 0 holds ~half the corpus and earns two.
+    assert list(r) == [3, 2, 1, 1, 1, 1, 1, 1]
+    assert all(r[i] >= r[i + 1] for i in range(NLIST - 1))
+    flat = ivf_lib.probe_rank_thresholds(occ, probe_budget=NLIST + 3,
+                                         nlist=NLIST, weighted=False)
+    assert flat.sum() == NLIST + 3  # same spend, different placement
+    assert list(flat) == [2, 2, 2, 1, 1, 1, 1, 1]  # lowest-index tiebreak
+
+
+def test_exact_multiple_budget_is_uniform():
+    occ = np.array([100, 50, 25, 12, 6, 3, 2, 1], np.float64)
+    for nprobe in (1, 2, 4):
+        r = ivf_lib.probe_rank_thresholds(occ, probe_budget=nprobe * NLIST,
+                                          nlist=NLIST)
+        assert list(r) == [nprobe] * NLIST
+
+
+def test_threshold_validation():
+    with pytest.raises(ValueError, match="probe_budget"):
+        ivf_lib.probe_rank_thresholds(None, probe_budget=0, nlist=NLIST)
+    with pytest.raises(ValueError, match="occupancy"):
+        ivf_lib.probe_rank_thresholds(np.ones(3), probe_budget=NLIST + 1,
+                                      nlist=NLIST)
+
+
+def test_build_captures_list_occupancy():
+    cd = _clustered_corpus()
+    index = _index(cd)
+    occ = np.asarray(index.list_occupancy)
+    assert occ.shape == (NLIST,)
+    assert occ.sum() == cd.shape[0]
+
+
+def test_exact_multiple_budget_is_bit_identical_to_flat_nprobe():
+    cd = _clustered_corpus()
+    cq = _queries(cd)
+    index = _index(cd)
+    for nprobe in (1, 2, 4):
+        ref_s, ref_i = ivf_lib.search(index, cq, nprobe=nprobe, k=5,
+                                      backend="xla")
+        for weighted in (True, False):
+            s, i = ivf_lib.search_budget(index, cq,
+                                         probe_budget=nprobe * NLIST, k=5,
+                                         weighted=weighted, backend="xla")
+            np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i))
+            np.testing.assert_array_equal(np.asarray(s), np.asarray(ref_s))
+
+
+def test_budgeted_search_matches_masked_reference():
+    # Non-uniform thresholds: list c is probed iff it ranks within
+    # r[c] in the query's coarse ordering. Check against a per-query
+    # numpy reconstruction of exactly that probe set.
+    cd = _clustered_corpus(seed=2)
+    cq = _queries(cd, seed=4, q=4)
+    index = _index(cd)
+    budget = NLIST + 3
+    r = ivf_lib.probe_rank_thresholds(index.list_occupancy,
+                                      probe_budget=budget, nlist=NLIST)
+    s, ids = ivf_lib.search_budget(index, cq, probe_budget=budget, k=5,
+                                   backend="xla")
+    vq = np.asarray(codes_to_values(cq, LEVELS))
+    cv = np.asarray(index.centroids)
+    order = np.argsort(-(vq @ cv.T), axis=1, kind="stable")
+    ids = np.asarray(ids)
+    lists_ids = np.asarray(index.lists_ids)
+    for qi in range(cq.shape[0]):
+        probed = {int(c) for rank, c in enumerate(order[qi])
+                  if rank < r[c]}
+        allowed = {int(d) for c in probed for d in lists_ids[c] if d >= 0}
+        found = {int(d) for d in ids[qi] if d >= 0}
+        assert found <= allowed
+
+
+def test_weighted_beats_flat_on_skewed_occupancy():
+    cd = _clustered_corpus(seed=6, n=768)
+    # queries from the heavy head, where weighted surplus goes
+    cq = _queries(cd, seed=7, q=16, head=cd.shape[0] // 4)
+    index = _index(cd)
+    inv = R.doc_inv_norms(cd, LEVELS)
+    gt = np.asarray(sdc_search_xla(cq, cd, inv, n_levels=LEVELS, k=5)[1])
+
+    def recall(weighted):
+        _, i = ivf_lib.search_budget(index, cq, probe_budget=NLIST + 4,
+                                     k=5, weighted=weighted, backend="xla")
+        i = np.asarray(i)
+        return np.mean([
+            len(set(i[q]) & set(gt[q])) / 5 for q in range(cq.shape[0])
+        ])
+
+    assert recall(True) >= recall(False)
+
+
+def test_snapshot_closure_serves_a_probe_budget():
+    cd = _clustered_corpus(seed=8)
+    cq = _queries(cd, seed=9, q=4)
+    index = _index(cd)
+    fn = ivf_lib.ivf_search_from_snapshot(
+        cd, LEVELS, k=5, nlist=NLIST, nprobe=1, seed=3, kmeans_iters=4,
+        backend="xla", probe_budget=NLIST + 3,
+    )
+    s, i = fn(cq)
+    ref_s, ref_i = ivf_lib.search_budget(index, cq, probe_budget=NLIST + 3,
+                                         k=5, backend="xla")
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(ref_s))
+
+
+def test_effort_knob_halves_the_budget():
+    from repro.launch.proxy import EffortKnob
+
+    cd = _clustered_corpus(seed=10)
+    cq = _queries(cd, seed=11, q=4)
+    index = _index(cd)
+    knob = EffortKnob(n_levels=3)
+    budget = 4 * NLIST + 3
+    fn = ivf_lib.ivf_search_from_snapshot(
+        cd, LEVELS, k=5, nlist=NLIST, nprobe=1, seed=3, kmeans_iters=4,
+        backend="xla", probe_budget=budget, effort=knob,
+    )
+    full_s, full_i = fn(cq)
+    ref_s, ref_i = ivf_lib.search_budget(index, cq, probe_budget=budget,
+                                         k=5, backend="xla")
+    np.testing.assert_array_equal(np.asarray(full_i), np.asarray(ref_i))
+    np.testing.assert_array_equal(np.asarray(full_s), np.asarray(ref_s))
+    assert knob.degrade() and knob.degrade()  # level 2: budget >> 2
+    deg_s, deg_i = fn(cq)
+    ref_s, ref_i = ivf_lib.search_budget(index, cq,
+                                         probe_budget=max(1, budget >> 2),
+                                         k=5, backend="xla")
+    np.testing.assert_array_equal(np.asarray(deg_i), np.asarray(ref_i))
+    np.testing.assert_array_equal(np.asarray(deg_s), np.asarray(ref_s))
