@@ -769,6 +769,152 @@ def _chaos_row(encode, codes_np, levels: int, batches, pcfg,
     }
 
 
+def _autoscale_row(encode, codes_np, levels: int, batches, pcfg,
+                   router_policy: str) -> dict:
+    """Autoscaled vs fixed tier under one bursty open-loop trace.
+
+    The same arrival trace — steady trickle, a burst arriving ~4x
+    faster than one replica can serve, steady again — runs twice
+    against tiers that are identical at steady state (1 replica, shed
+    policy, bounded queue):
+
+      fixed       1 replica forever.
+      autoscaled  TierSpec [1, 3]: the shed-pressure autoscaler
+                  (launch/autoscale.py) watches queue occupancy + shed
+                  deltas, scales up through warm + canary-probe during
+                  the burst, and drains back down to 1 after it.
+
+    Service time is a synthetic per-batch delay wrapped around the real
+    flat search (arrivals outpace one replica DETERMINISTICALLY; real
+    scan latency on a noisy shared host would not saturate
+    reproducibly), so answered results stay bit-identical to
+    serve_sequential. The CI gate requires: autoscaled shed rate
+    strictly below fixed, zero lost / reordered, the replica count
+    inside the spec bounds the whole run, and a steady-state tier no
+    larger than the fixed one.
+    """
+    import dataclasses
+
+    from repro.launch import autoscale, lifecycle, proxy, serving
+
+    snapshot = lifecycle.CorpusSnapshot(codes=codes_np, n_levels=levels)
+    built = lifecycle.FlatBuilder(k=10, backend="xla").build(snapshot)
+    serving.warmup_replicas([(encode, built)], batches)
+    reference = serving.serve_sequential(encode, built, batches)
+    n_b = len(batches)
+
+    service_s = 0.004  # synthetic per-batch service time (see docstring)
+
+    def make_replica():
+        def slow_search(q):
+            time.sleep(service_s)
+            return built(q)
+        return encode, slow_search
+
+    # (spacing_s, n_batches): steady, burst (~4x one replica's service
+    # rate), steady tail long enough for the scale-downs to complete.
+    trace = [(0.008, 50), (0.0015, 300), (0.008, 150)]
+    n_total = sum(n for _, n in trace)
+    cfg = dataclasses.replace(pcfg, queue_depth=2, policy="shed")
+    spec = autoscale.TierSpec(
+        min_replicas=1, max_replicas=3, index="flat",
+        build_params={"k": 10, "backend": "xla"},
+        router=router_policy, policy="shed", queue_depth=cfg.queue_depth,
+        high_water=0.6, low_water=0.15,
+        cooldown_s=0.15, window_s=0.1, tick_s=0.05,
+    )
+
+    def run_tier(autoscaled: bool):
+        # share_device=False: the synthetic sleep models per-replica
+        # service capacity, which is the thing scaling adds.
+        router = proxy.QueryRouter(
+            proxy.ReplicaSet([make_replica()], config=cfg,
+                             share_device=False),
+            policy=router_policy,
+        )
+        scaler = None
+        if autoscaled:
+            scaler = autoscale.Autoscaler(
+                router, spec,
+                replica_factory=lambda slot: make_replica(),
+                warm_batches=batches[:1],
+            )
+            scaler.start()
+        shed = lost = 0
+        pending = []
+        i = 0
+        try:
+            for spacing, n in trace:
+                for _ in range(n):
+                    try:
+                        pending.append((i, router.submit(batches[i % n_b])))
+                    except serving.RequestShed:
+                        shed += 1
+                    i += 1
+                    time.sleep(spacing)
+            results = {}
+            for j, t in pending:
+                try:
+                    results[j] = t.result(timeout=120)
+                except BaseException:
+                    lost += 1
+            if scaler is not None:
+                # Idle tail: let the scale-downs finish so the tier
+                # settles back to its steady-state size.
+                for _ in range(80):
+                    if len(router.active_replicas()) <= spec.min_replicas:
+                        break
+                    time.sleep(0.05)
+                scaler.stop()
+            steady = len(router.active_replicas())
+        finally:
+            if scaler is not None:
+                scaler.stop()
+            router.close()
+
+        def eq(r, ref):
+            return (r is not None
+                    and np.array_equal(np.asarray(r[1]), np.asarray(ref[1]))
+                    and np.array_equal(np.asarray(r[0]), np.asarray(ref[0])))
+
+        mismatched = [j for j, r in results.items()
+                      if not eq(r, reference[j % n_b])]
+        reordered = sum(
+            1 for j in mismatched
+            if any(eq(results[j], reference[k]) for k in range(n_b)
+                   if k != j % n_b)
+        )
+        return {
+            "shed": shed, "lost": lost, "reordered": reordered,
+            "bit_identical": not mismatched, "steady": steady,
+            "summary": scaler.summary() if scaler is not None else None,
+        }
+
+    fixed = run_tier(autoscaled=False)
+    auto = run_tier(autoscaled=True)
+    sm = auto["summary"]
+    return {
+        "mode": "autoscale", "index_kind": "flat",
+        "replicas_min": spec.min_replicas,
+        "replicas_max": spec.max_replicas,
+        "fixed_replicas": 1,
+        "steady_state_replicas": int(auto["steady"]),
+        "submitted": int(n_total),
+        "lost": int(fixed["lost"] + auto["lost"]),
+        "reordered": int(fixed["reordered"] + auto["reordered"]),
+        "bit_identical": bool(fixed["bit_identical"]
+                              and auto["bit_identical"]),
+        "shed_fixed": int(fixed["shed"]),
+        "shed_autoscaled": int(auto["shed"]),
+        "shed_rate_fixed": fixed["shed"] / n_total,
+        "shed_rate_autoscaled": auto["shed"] / n_total,
+        "scale_ups": int(sm["scale_ups"]),
+        "scale_downs": int(sm["scale_downs"]),
+        "max_replicas_seen": int(sm["max_replicas_seen"]),
+        "min_replicas_seen": int(sm["min_replicas_seen"]),
+    }
+
+
 def _upgrade_row(pcfg, router_policy: str) -> dict:
     """Live v1 -> v2 embedding-version migration, one BENCH row.
 
@@ -1212,6 +1358,9 @@ def emit_serving_json(path: str = BENCH_SERVING_JSON, n_docs: int = 50_000,
         encode, np.asarray(cd), levels, batches, pcfg, router
     ))
     rows.append(_upgrade_row(pcfg, router))
+    rows.append(_autoscale_row(
+        encode, np.asarray(cd), levels, batches, pcfg, router
+    ))
 
     out = {
         "bench": "serving",
@@ -1244,7 +1393,8 @@ def emit_serving_json(path: str = BENCH_SERVING_JSON, n_docs: int = 50_000,
         print(f"replicated(x{n})/replicated(x1) QPS ratio: "
               f"{repl_ratio[n]:.3f} best-paired-trial "
               f"({repl_ratio_med[n]:.3f} median, {router})")
-    sw, bg, ch, up = rows[-4], rows[-3], rows[-2], rows[-1]
+    sw, bg, ch, up, asr = (rows[-5], rows[-4], rows[-3], rows[-2],
+                           rows[-1])
     print(f"rolling swap ({sw['index_kind']}): {sw['swapped_replicas']} "
           f"replica(s) in {1e3 * sw['swap_s']:.0f} ms under traffic, "
           f"{sw['queries_during_swap']} queries served mid-swap, "
@@ -1275,6 +1425,16 @@ def emit_serving_json(path: str = BENCH_SERVING_JSON, n_docs: int = 50_000,
           f"reranked={up['reranked']}, recall "
           f"v1={up['recall_v1']:.3f} v2={up['recall_v2']:.3f} "
           f"(floor {up['recall_floor']}), final={up['final_versions']}")
+    print(f"autoscale [{asr['replicas_min']}, {asr['replicas_max']}] vs "
+          f"fixed x{asr['fixed_replicas']}: shed rate "
+          f"{asr['shed_rate_fixed']:.3f} -> "
+          f"{asr['shed_rate_autoscaled']:.3f} over {asr['submitted']} "
+          f"submissions ({asr['scale_ups']} up / {asr['scale_downs']} "
+          f"down, replicas seen [{asr['min_replicas_seen']}, "
+          f"{asr['max_replicas_seen']}], steady "
+          f"{asr['steady_state_replicas']}), lost={asr['lost']} "
+          f"reordered={asr['reordered']} "
+          f"bit_identical={asr['bit_identical']}")
     return out
 
 

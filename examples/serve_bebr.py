@@ -40,7 +40,14 @@ from repro.core import BinarizerConfig, TrainConfig, binarize_lib
 import repro.core.losses as losses_lib
 from repro.data.synthetic import clustered_corpus
 from repro.kernels.sdc import ref as R
-from repro.launch import binarizer_cache, faults, lifecycle, proxy, serving
+from repro.launch import (
+    autoscale,
+    binarizer_cache,
+    faults,
+    lifecycle,
+    proxy,
+    serving,
+)
 from repro.launch.mesh import make_replica_meshes
 from repro.train import optim
 
@@ -53,6 +60,16 @@ def main():
                          "into this many disjoint submeshes")
     ap.add_argument("--router", choices=sorted(proxy.ROUTING_POLICIES),
                     default="round-robin", help="replica routing policy")
+    ap.add_argument("--tier-spec", default=None, metavar="SPEC.json",
+                    help="declarative tier spec (launch/autoscale.py): "
+                         "starts the tier at min_replicas and runs the "
+                         "shed-pressure autoscaler over the stream. The "
+                         "8 host devices are carved into max_replicas "
+                         "submeshes up front, so every replica the "
+                         "autoscaler may ever add already owns its "
+                         "devices; scale-ups build the engine program on "
+                         "submesh i via builder.build(snapshot, "
+                         "replica=i). Overrides --replicas/--router")
     ap.add_argument("--steps", type=int, default=150,
                     help="binarizer training steps (first run only; the "
                          "checkpoint is cached under a content digest)")
@@ -91,14 +108,26 @@ def main():
                          "to watch failover + revival on the sharded "
                          "tier")
     args = ap.parse_args()
-    if N_DEVICES % args.replicas:
-        ap.error(f"--replicas must divide {N_DEVICES}")
+    spec = None
+    if args.tier_spec:
+        try:
+            spec = autoscale.TierSpec.from_file(args.tier_spec)
+        except autoscale.InvalidTierSpec as e:
+            ap.error(f"--tier-spec: {e}")
+        args.replicas = spec.min_replicas
+        args.router = spec.router
+    # The submesh carve is sized for the LARGEST tier the spec allows:
+    # scale-up must only instantiate a program on an already-reserved
+    # submesh, never re-partition live devices.
+    n_slots = spec.max_replicas if spec is not None else args.replicas
+    if N_DEVICES % n_slots:
+        ap.error(f"replica slots ({n_slots}) must divide {N_DEVICES}")
     if bool(args.coarse_levels) != bool(args.k_coarse):
         ap.error("--coarse-levels and --k-coarse must be set together")
     if args.coarse_levels and args.index != "flat":
         ap.error("--coarse-levels requires --index flat (per-leaf coarse "
                  "scan + post-merge rerank)")
-    per = N_DEVICES // args.replicas
+    per = N_DEVICES // n_slots
     shape = (per // 2, 2) if per % 2 == 0 else (per, 1)
 
     dim, code, levels = 128, 64, 4
@@ -129,10 +158,12 @@ def main():
     enc = binarize_lib.make_encode_fn(ckpt.params, ckpt.bn_state, bcfg)
     d_codes, q_codes = enc(docs), enc(queries)
 
-    meshes = make_replica_meshes(args.replicas, shape=shape)
-    print(f"replica submeshes: {args.replicas} x {dict(meshes[0].shape)} — "
+    meshes = make_replica_meshes(n_slots, shape=shape)
+    print(f"replica submeshes: {n_slots} x {dict(meshes[0].shape)} — "
           f"{args.index} index of {d_codes.shape[0]} codes sharded over "
-          f"{per} leaves per replica, router={args.router}")
+          f"{per} leaves per replica, router={args.router}"
+          + (f" (serving {args.replicas}, autoscaling up to {n_slots})"
+             if spec is not None else ""))
 
     # jit'd per-batch encode, shared across replicas: the eager path
     # would fight the leaf scans for the GIL. Query device placement
@@ -214,10 +245,27 @@ def main():
         )
     if args.probe_every:
         router.start_health_probe(batches[0], interval=args.probe_every)
+    scaler = None
+    if spec is not None:
+        # Engine tiers hand the autoscaler a replica factory instead of
+        # (snapshot, encode_fn): slot i's search closure is the shard_map
+        # program over submesh i, built by the SAME EngineBuilder the
+        # rolling swap uses.
+        scaler = autoscale.Autoscaler(
+            router, spec,
+            replica_factory=lambda slot: (
+                encode, builder.build(snapshot, replica=slot)
+            ),
+            warm_batches=batches[:1],
+            on_event=lambda msg: print(f"autoscale: {msg}"),
+        )
+        scaler.start()
     results, swap_report = lifecycle.run_stream_with_swap(
         router, stream, controller=controller, snapshot=snapshot,
         swap_after=args.swap_after,
     )
+    if scaler is not None:
+        scaler.stop()
     for inj in injectors.values():
         inj.release()  # a still-stuck scan would wedge close()'s joins
     router.close()
@@ -257,6 +305,12 @@ def main():
     if args.probe_every:
         print(f"canary re-probe every {args.probe_every}s: "
               f"{stats['revivals']} revival(s)")
+    if scaler is not None:
+        sm = scaler.summary()
+        print(f"autoscale [{sm['replicas_min']}, {sm['replicas_max']}]: "
+              f"{sm['scale_ups']} up / {sm['scale_downs']} down over "
+              f"{sm['decisions']} tick(s); ended at {sm['replicas']} "
+              f"replica(s)")
     for i, inj in sorted(injectors.items()):
         fired = ", ".join(f"{s}#{n}:{k}" for s, n, k in inj.log) or "none"
         print(f"chaos replica {i}: {len(inj.log)} fault(s) fired ({fired})")

@@ -212,6 +212,22 @@ AUTOTUNE_ROW_KEYS = (
 )
 AUTOTUNE_KINDS = ("scan", "gather", "rerank")
 
+# Shed-pressure autoscaler row (added with launch/autoscale.py): the
+# same bursty open-loop trace replayed against a fixed single-replica
+# tier and an autoscaled tier that is allowed to grow to
+# replicas_max but must settle back to the fixed tier's size. A
+# CORRECTNESS record (zero lost/reordered, bit-identical answers)
+# plus the autoscaler's reason to exist: it must shed strictly less
+# than the fixed tier at equal steady-state capacity, and its
+# replica count must never leave the TierSpec bounds.
+AUTOSCALE_ROW_KEYS = (
+    "index_kind", "replicas_min", "replicas_max", "fixed_replicas",
+    "steady_state_replicas", "submitted", "lost", "reordered",
+    "bit_identical", "shed_fixed", "shed_autoscaled",
+    "shed_rate_fixed", "shed_rate_autoscaled",
+    "scale_ups", "scale_downs", "max_replicas_seen", "min_replicas_seen",
+)
+
 # Probe-budget sweep row (BENCH_sdc_scan.json "probe_budget" section):
 # occupancy-weighted vs flat allocation at equal global budget. The
 # parity row (budget == nprobe * nlist) additionally carries
@@ -261,6 +277,53 @@ def _check_upgrade_row(row: dict, label: str, min_recall: float) -> int:
         print(f"serving gate: {label} final replica versions "
               f"{row['final_versions']} != {row['replicas']} x "
               f"'{row['to_version']}'", file=sys.stderr)
+        errors += 1
+    return errors
+
+
+def _check_autoscale_row(row: dict, label: str) -> int:
+    errors = 0
+    missing = [k for k in AUTOSCALE_ROW_KEYS if k not in row or row[k] is None]
+    if missing:
+        print(f"serving gate: {label} missing keys {missing}",
+              file=sys.stderr)
+        return errors + 1  # can't judge an incomplete row further
+    if row["lost"] != 0:
+        print(f"serving gate: {label} lost {row['lost']} result(s) across "
+              "the scale-up/scale-down churn", file=sys.stderr)
+        errors += 1
+    if row["reordered"] != 0:
+        print(f"serving gate: {label} reordered {row['reordered']} "
+              "result(s) across the scale-up/scale-down churn",
+              file=sys.stderr)
+        errors += 1
+    if row["bit_identical"] is not True:
+        print(f"serving gate: {label} answered results not bit-identical "
+              "to the sequential loop", file=sys.stderr)
+        errors += 1
+    if row["steady_state_replicas"] != row["fixed_replicas"]:
+        print(f"serving gate: {label} settled at "
+              f"{row['steady_state_replicas']} replica(s), not the fixed "
+              f"tier's {row['fixed_replicas']} — the shed comparison is "
+              "only fair at equal steady-state capacity", file=sys.stderr)
+        errors += 1
+    if row["shed_rate_autoscaled"] >= row["shed_rate_fixed"]:
+        print(f"serving gate: {label} autoscaling did not reduce shedding "
+              f"(shed rate {row['shed_rate_autoscaled']:.4f} autoscaled vs "
+              f"{row['shed_rate_fixed']:.4f} fixed on the same trace)",
+              file=sys.stderr)
+        errors += 1
+    if row["scale_ups"] < 1:
+        print(f"serving gate: {label} recorded no scale-up — the burst "
+              "never triggered the control loop", file=sys.stderr)
+        errors += 1
+    if not (row["replicas_min"] <= row["min_replicas_seen"]
+            <= row["max_replicas_seen"] <= row["replicas_max"]):
+        print(f"serving gate: {label} replica count left the TierSpec "
+              f"bounds: saw [{row['min_replicas_seen']}, "
+              f"{row['max_replicas_seen']}] outside "
+              f"[{row['replicas_min']}, {row['replicas_max']}]",
+              file=sys.stderr)
         errors += 1
     return errors
 
@@ -477,6 +540,25 @@ def check_serving(bench: dict, min_ratio: float,
                   f"reordered={r.get('reordered')},"
                   f"bit_identical={r.get('bit_identical')},"
                   f"reranked={r.get('reranked')}")
+    autoscale_rows = [r for r in rows if r.get("mode") == "autoscale"]
+    if not autoscale_rows:
+        print("serving gate: no 'autoscale' row — the shed-pressure "
+              "autoscaler drill (bursty trace, autoscaled vs fixed tier, "
+              "launch/autoscale.py) must be exercised and emitted",
+              file=sys.stderr)
+        return 1
+    for r in autoscale_rows:
+        label = f"autoscale row (index_kind={r.get('index_kind')})"
+        failures += _check_autoscale_row(r, label)
+        if "lost" in r:
+            print(f"autoscale,lost={r.get('lost')},"
+                  f"reordered={r.get('reordered')},"
+                  f"bit_identical={r.get('bit_identical')},"
+                  f"shed_rate={r.get('shed_rate_fixed')}->"
+                  f"{r.get('shed_rate_autoscaled')},"
+                  f"replicas_seen=[{r.get('min_replicas_seen')},"
+                  f"{r.get('max_replicas_seen')}],"
+                  f"steady={r.get('steady_state_replicas')}")
     for r in replicated:
         label = f"replicated row (replicas={r.get('replicas')})"
         failures += _check_replicated_schema(r, label)

@@ -38,7 +38,16 @@ fi
 
 if [ "$SKIP_TESTS" = 0 ]; then
     note "job: tier1 (PYTHONPATH=src python -m pytest -x -q)"
-    PYTHONPATH=src python -m pytest -x -q || fail=1
+    # mirror CI's coverage run when pytest-cov is installed; plain
+    # pytest otherwise (CI always installs it)
+    if python -c "import pytest_cov" >/dev/null 2>&1; then
+        PYTHONPATH=src python -m pytest -x -q --cov=repro --cov-report=xml --cov-report=term || fail=1
+        note "job: tier1 coverage floor for launch/ (>= 70%, serve.py exempt)"
+        python -m coverage report --include='src/repro/launch/*' --omit='src/repro/launch/serve.py' --fail-under=70 || fail=1
+    else
+        echo "pytest-cov not installed locally -- running without coverage"
+        PYTHONPATH=src python -m pytest -x -q || fail=1
+    fi
 else
     note "job: tier1 -- SKIPPED (--skip-tests)"
 fi

@@ -173,9 +173,14 @@ class FaultInjector:
     """
 
     def __init__(self, encode_fn: Callable, search_fn: Callable,
-                 plan: FaultPlan, *, name: str = "replica"):
+                 plan: FaultPlan, *, name: str = "replica",
+                 clock: Any = None):
+        # ``clock`` (launch.clock.Clock) times delay events; default is
+        # the real clock. Tests on a FakeClock make an injected latency
+        # spike a simulated-time event instead of a real sleep.
         self.plan = plan
         self.name = name
+        self._clock = clock
         self._fns = {"encode": encode_fn, "search": search_fn}
         self._lock = threading.Lock()
         self.calls = {"encode": 0, "search": 0}
@@ -235,7 +240,10 @@ class FaultInjector:
         # stage's (or another thread's) call counting.
         for ev in fired:
             if ev.kind == "delay":
-                time.sleep(ev.arg)
+                if self._clock is None:
+                    time.sleep(ev.arg)
+                else:
+                    self._clock.sleep(ev.arg)
             elif ev.kind == "stick":
                 self._release.wait()
             else:  # fail | flap

@@ -682,6 +682,13 @@ def run_stream_with_swap(
     seconds after its first submit attempt; a batch the tier sheds as
     expired lands as ``None`` in the results (the stream keeps going —
     a missed budget is an answer, not a tier failure).
+
+    The shed-retry pause runs on the router's injected clock and is
+    interruptible by ``router.close()`` — a teardown mid-stream no
+    longer waits out ``shed_retry_s`` (and a ``FakeClock`` tier
+    advances through it without real sleeping). A close that lands
+    during the pause surfaces as ``PipelineClosed`` from the next
+    submit.
     """
     if controller is not None and swap_after and swap_after >= len(stream):
         # Misconfiguration, not a quiet no-op — and caught BEFORE the
@@ -708,7 +715,7 @@ def run_stream_with_swap(
             swap_thread.start()
         deadline = (
             None if deadline_s is None
-            else time.perf_counter() + deadline_s
+            else router.clock.now() + deadline_s
         )
         while downstream_error is None:
             try:
@@ -718,7 +725,11 @@ def run_stream_with_swap(
                 tickets.append(None)  # budget spent waiting out sheds
                 break
             except RequestShed:
-                time.sleep(shed_retry_s)
+                # Interruptible: router.close() sets _close_event, so a
+                # teardown mid-pause wakes immediately (the next submit
+                # raises PipelineClosed); a FakeClock advances through
+                # it without real sleeping.
+                router.clock.wait(router._close_event, shed_retry_s)
             except (AllReplicasDown, IncompatibleVersion) as e:
                 # Tier down, or a versioned batch no replica can ever
                 # serve: terminal either way — stop submitting.

@@ -99,6 +99,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.launch.clock import SYSTEM_CLOCK, Clock
 from repro.launch.serving import (
     Array,
     DeadlineExpired,
@@ -127,7 +128,18 @@ class AllReplicasDown(RuntimeError):
 
 
 #: Per-replica health states (see the module docstring's diagram).
-REPLICA_STATES = ("healthy", "draining", "rebuilding", "probing", "unhealthy")
+#: "retired" (added with the autoscaler) is terminal: a scaled-down
+#: replica's slot — drained losslessly, pipeline closed, never probed
+#: or routed again. Slots are never renumbered (every per-replica dict
+#: is keyed by index), so retirement tombstones instead of deleting.
+REPLICA_STATES = ("healthy", "draining", "rebuilding", "probing",
+                  "unhealthy", "retired")
+
+#: States a replica can never leave / serve from again. For routability
+#: math ("is the tier transiently empty or genuinely down?") retired
+#: slots count like unhealthy ones — except no probe will ever revive
+#: them.
+_GONE_STATES = ("unhealthy", "retired")
 
 
 # ---------------------------------------------------------------------------
@@ -351,11 +363,26 @@ class ReplicaSet:
         if not replicas:
             raise ValueError("ReplicaSet needs at least one replica")
         self.config = config
-        gate = threading.Lock() if share_device else None
+        # Kept so replicas added later (autoscaler scale-up) join the
+        # same device command queue as the originals.
+        self._scan_gate = threading.Lock() if share_device else None
         self.pipelines = [
-            ServingPipeline(enc, srch, config=config, scan_gate=gate)
+            ServingPipeline(enc, srch, config=config, scan_gate=self._scan_gate)
             for enc, srch in replicas
         ]
+
+    def add(self, encode_fn: EncodeFn, search_fn: SearchFn) -> int:
+        """Append one more replica pipeline; returns its slot index.
+
+        The new pipeline inherits the set's config and scan gate. The
+        caller (``QueryRouter.add_replica``) is responsible for health
+        bookkeeping — a bare ``add`` leaves the pipeline running but
+        unknown to any router.
+        """
+        pipe = ServingPipeline(encode_fn, search_fn, config=self.config,
+                               scan_gate=self._scan_gate)
+        self.pipelines.append(pipe)
+        return len(self.pipelines) - 1
 
     @classmethod
     def from_factory(
@@ -443,12 +470,19 @@ class QueryRouter:
         *,
         policy: Union[str, Any] = "round-robin",
         compat: Optional[CompatibilityMatrix] = None,
+        clock: Clock = SYSTEM_CLOCK,
     ):
         """``compat``: the tier's embedding-version compatibility matrix
         (bc-trained cross-version encoders). Defaults to an empty one —
         versioned traffic then routes only to native-version replicas
-        and raises ``IncompatibleVersion`` when none exists."""
+        and raises ``IncompatibleVersion`` when none exists.
+
+        ``clock``: time source for every control loop the router owns
+        (retry backoff, probe scheduling, deadline checks). Production
+        keeps the default ``SYSTEM_CLOCK``; tests inject a ``FakeClock``
+        and advance simulated time instead of sleeping real time."""
         self.replicas = replicas
+        self.clock = clock
         self.compat = compat if compat is not None else CompatibilityMatrix()
         if isinstance(policy, str):
             try:
@@ -467,6 +501,10 @@ class QueryRouter:
         self._cond = threading.Condition(self._lock)
         self._seq = 0
         self._closed = False
+        # Set first thing in close(): any clock.wait parked on a retry
+        # backoff (submit_with_retry, run_stream_with_swap's shed retry)
+        # wakes immediately instead of waiting out its full delay.
+        self._close_event = threading.Event()
         # _healthy is the ROUTABLE set; _state carries the full health
         # state machine (a draining replica is out of _healthy but not
         # unhealthy — see REPLICA_STATES).
@@ -581,7 +619,7 @@ class QueryRouter:
         """
         req = as_search_request(queries, deadline=deadline)
         deadline = req.deadline
-        if deadline is not None and time.perf_counter() >= deadline:
+        if deadline is not None and self.clock.now() >= deadline:
             with self._lock:
                 self._deadline_expired += 1
             raise DeadlineExpired("deadline already expired at submit")
@@ -589,9 +627,10 @@ class QueryRouter:
             if self._closed:
                 raise PipelineClosed("submit after close")
             if not self._healthy:
-                if all(s == "unhealthy" for s in self._state.values()):
+                if all(s in _GONE_STATES for s in self._state.values()):
                     raise AllReplicasDown(
-                        f"all {len(self.replicas)} replicas unhealthy"
+                        f"all {len(self.replicas)} replica slots "
+                        "unhealthy or retired"
                     )
                 # Transiently empty tier (drain/rebuild/probe in flight):
                 # retryable, unlike AllReplicasDown.
@@ -664,7 +703,7 @@ class QueryRouter:
         near = (
             deadline is not None
             and self._near_deadline_s > 0.0
-            and deadline - time.perf_counter() < self._near_deadline_s
+            and deadline - self.clock.now() < self._near_deadline_s
         )
         if pressure >= self._degrade_hi or near:
             self._effort.degrade()
@@ -733,14 +772,21 @@ class QueryRouter:
                 delay = min(max_delay_s, base_delay_s * (2.0 ** attempt))
                 delay *= 1.0 + jitter * rng.random()
                 if deadline is not None \
-                        and time.perf_counter() + delay >= deadline:
+                        and self.clock.now() + delay >= deadline:
                     with self._lock:
                         self._deadline_expired += 1
                     raise DeadlineExpired(
                         f"deadline would expire during retry backoff "
                         f"(attempt {attempt + 1}/{attempts})"
                     ) from e
-                time.sleep(delay)
+                # Interruptible backoff: close() sets _close_event, so a
+                # teardown mid-backoff wakes immediately instead of
+                # waiting out the full delay (the old uninterruptible
+                # time.sleep here made close() block on stragglers).
+                if self.clock.wait(self._close_event, delay):
+                    raise PipelineClosed(
+                        "router closed during retry backoff"
+                    ) from e
         raise last
 
     def _dispatch(self, ticket: ProxyTicket, replica: int, *, force: bool = False):
@@ -901,7 +947,7 @@ class QueryRouter:
                         f"encoder reaches one"
                     )
                 elif not order and not self._closed and any(
-                    s != "unhealthy" for s in self._state.values()
+                    s not in _GONE_STATES for s in self._state.values()
                 ):
                     # Transiently unroutable (a drain/rebuild/probe owns
                     # every replica this instant): an admitted ticket is
@@ -937,7 +983,7 @@ class QueryRouter:
         must not hang on a tier that has nothing left to revive it."""
         with self._lock:
             if not self._closed and any(
-                s != "unhealthy" for s in self._state.values()
+                s not in _GONE_STATES for s in self._state.values()
             ):
                 return
             parked, self._parked = self._parked, []
@@ -1071,6 +1117,74 @@ class QueryRouter:
                 self._rebuild_from_dead.discard(replica)
             self._state[replica] = "rebuilding"
             self._cond.notify_all()
+
+    # -- elastic capacity (autoscaler scale-up / scale-down) -----------
+
+    def add_replica(self, encode_fn: EncodeFn, search_fn: SearchFn) -> int:
+        """Grow the tier by one replica slot; returns the new index.
+
+        The slot enters in ``rebuilding`` — OUT of rotation, owned by
+        the caller exactly like a swap-controller rebuild. It receives
+        no traffic until a canary ``probe(slot, ..., from_rebuild=True)``
+        succeeds, so the scale-up path gets the same warmed-and-probed
+        admission discipline as an index swap. Deliberately not
+        ``unhealthy``: admitting a brand-new replica is not a revival
+        and must not inflate ``revival_count``.
+        """
+        with self._lock:
+            if self._closed:
+                raise PipelineClosed("add_replica after close")
+            slot = self.replicas.add(encode_fn, search_fn)
+            self._state[slot] = "rebuilding"
+            self._versions[slot] = None
+            self._outstanding[slot] = set()
+            self._degraded[slot] = 0
+            self._compat_served[slot] = 0
+            self._rebuild_from_dead.discard(slot)
+            self._cond.notify_all()
+        return slot
+
+    def retire_replica(self, replica: int, *, timeout: float = 30.0) -> None:
+        """Shrink the tier: drain ``replica`` losslessly, then tombstone
+        its slot as ``retired`` and close its pipeline.
+
+        The drain is the proxy's ordinary drain path — in-flight proxy
+        tickets finish (or re-dispatch to the survivors at ``timeout``),
+        so scale-down never loses or reorders admitted work. Slots are
+        never renumbered: the retired index stays in every per-replica
+        dict, excluded from routing, probing, and the ``replicas``
+        count. Idempotent on an already-retired slot. An ``unhealthy``
+        replica retires without a drain (it holds no tickets); the
+        transient states raise — their current owner (swap controller /
+        probe) must finish first.
+        """
+        with self._lock:
+            st = self._state[replica]
+        if st == "retired":
+            return
+        if st == "healthy":
+            self.drain(replica, timeout=timeout)
+        elif st != "unhealthy":
+            raise ValueError(
+                f"retire_replica: replica {replica} is {st!r}; finish "
+                "the in-flight drain/rebuild/probe first"
+            )
+        with self._lock:
+            self._state[replica] = "retired"
+            self._healthy.discard(replica)
+            self._errors.pop(replica, None)
+            self._probe_failures.pop(replica, None)
+            self._cond.notify_all()
+        # Unreachable by routing from here on; safe to tear down.
+        self.replicas.pipelines[replica].close(drain=True)
+        self._fail_parked_if_tier_down()
+
+    def active_replicas(self) -> List[int]:
+        """Slots not retired (healthy or recoverable) — the tier's
+        current size as the autoscaler and bench gate count it."""
+        with self._lock:
+            return sorted(i for i, s in self._state.items()
+                          if s != "retired")
 
     def mark_unhealthy(self, replica: int,
                        error: Optional[BaseException] = None) -> None:
@@ -1210,14 +1324,14 @@ class QueryRouter:
 
             def loop():
                 next_due: Dict[int, float] = {}
-                while not stop.wait(interval):
+                while not self.clock.wait(stop, interval):
                     with self._lock:
                         targets = [i for i, s in self._state.items()
                                    if s == "unhealthy"]
                     for i in targets:
                         if stop.is_set():
                             return
-                        if time.perf_counter() < next_due.get(i, 0.0):
+                        if self.clock.now() < next_due.get(i, 0.0):
                             continue  # backing off a flapper
                         if self.probe(i, canary, expect=expect,
                                       timeout=timeout):
@@ -1226,7 +1340,7 @@ class QueryRouter:
                         with self._lock:
                             fails = self._probe_failures.get(i, 0) + 1
                             self._probe_failures[i] = fails
-                        next_due[i] = time.perf_counter() + probe_backoff(
+                        next_due[i] = self.clock.now() + probe_backoff(
                             interval, fails
                         )
 
@@ -1271,7 +1385,8 @@ class QueryRouter:
         """
         for i, pipe in enumerate(self.replicas.pipelines):
             pipe.start_watchdog(
-                budget_s, self._make_stall_handler(i), poll=poll
+                budget_s, self._make_stall_handler(i), poll=poll,
+                clock=self.clock,
             )
 
     def _make_stall_handler(self, replica: int):
@@ -1291,6 +1406,9 @@ class QueryRouter:
             if self._closed:
                 return
             self._closed = True
+        # First: wake every clock.wait parked on a retry backoff so
+        # teardown is not gated on waiting out backoff delays.
+        self._close_event.set()
         self._fail_parked_if_tier_down()  # closed: parked tickets fail
         try:
             self.stop_health_probe(timeout=5.0)
@@ -1330,6 +1448,8 @@ class QueryRouter:
             versions = dict(self._versions)
         per = []
         for i, pipe in enumerate(self.replicas.pipelines):
+            if i not in states:
+                continue  # add_replica raced the snapshot above
             s = pipe.stats()  # carries "generation" (bumped per revival/swap)
             s["replica"] = i
             s["healthy"] = i in healthy
@@ -1342,11 +1462,16 @@ class QueryRouter:
             per.append(s)
         n_req, n_q, lat = self._stats.snapshot()
         lat.sort()
+        # Averages (idle) and the headline count cover only live slots;
+        # retired pipelines are closed and would skew both.
+        live = [s for s in per if s["state"] != "retired"]
         idle = (
-            sum(s["device_idle_frac"] for s in per) / len(per) if per else 0.0
+            sum(s["device_idle_frac"] for s in live) / len(live)
+            if live else 0.0
         )
         return {
-            "replicas": len(self.replicas),
+            "replicas": len(live),
+            "retired_replicas": len(per) - len(live),
             "router": getattr(self.policy, "name", type(self.policy).__name__),
             "healthy": healthy,
             # proxy-level completions: a failed-over request counts once

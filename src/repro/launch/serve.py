@@ -39,7 +39,14 @@ from repro.index import hnsw_lite
 from repro.index import ivf as ivf_lib
 from repro.index.flat import FlatFloat, FlatSDC
 from repro.kernels.sdc import ref as sdc_ref
-from repro.launch import binarizer_cache, faults, lifecycle, proxy, serving
+from repro.launch import (
+    autoscale,
+    binarizer_cache,
+    faults,
+    lifecycle,
+    proxy,
+    serving,
+)
 
 
 def train_binarizer(docs: np.ndarray, cfg: TrainConfig, steps: int = 300,
@@ -172,6 +179,20 @@ def main():
     ap.add_argument("--router", choices=sorted(proxy.ROUTING_POLICIES),
                     default="round-robin",
                     help="replica routing policy")
+    ap.add_argument("--tier-spec", default=None, metavar="SPEC.json",
+                    help="declarative tier spec (launch/autoscale.py "
+                         "TierSpec JSON): replica min/max, index kind + "
+                         "build params, router policy, admission policy/"
+                         "queue depth, swap cadence, and scale thresholds. "
+                         "Overrides --replicas/--router/--queue-depth/"
+                         "--policy/--index, starts the tier at "
+                         "min_replicas, and runs the shed-pressure "
+                         "autoscaler over the stream (scale-up replicas "
+                         "are built from the spec's index params, warmed, "
+                         "and canary-probed before taking traffic; "
+                         "scale-down drains losslessly). swap_every_s > 0 "
+                         "schedules one rolling swap mid-stream when "
+                         "--swap-after/--upgrade-after are unset")
     ap.add_argument("--embedding-version", default="v1",
                     help="embedding-version tag for the trained binarizer, "
                          "the corpus snapshot, and the tier's replicas; "
@@ -224,6 +245,28 @@ def main():
                  f"(got {args.coarse_levels} of --levels {args.levels})")
     if args.probe_budget and args.index != "ivf":
         ap.error("--probe-budget only applies to --index ivf")
+
+    # Declarative tier spec: ONE artifact describes the tier's desired
+    # state; the flags it covers are overridden so an operator cannot
+    # half-apply it. The autoscaler re-applies the same spec as it
+    # resizes — scale-up replicas are built from spec.build_params, not
+    # from whatever flags happened to be on the command line.
+    spec = None
+    if args.tier_spec:
+        try:
+            spec = autoscale.TierSpec.from_file(args.tier_spec)
+        except autoscale.InvalidTierSpec as e:
+            ap.error(f"--tier-spec: {e}")
+        args.index = spec.index
+        args.replicas = spec.min_replicas
+        args.router = spec.router
+        args.queue_depth = spec.queue_depth
+        args.policy = spec.policy
+        print(f"[tier-spec] {args.tier_spec}: index={spec.index} "
+              f"replicas=[{spec.min_replicas}, {spec.max_replicas}] "
+              f"router={spec.router} policy={spec.policy} "
+              f"water=({spec.low_water}, {spec.high_water}) "
+              f"cooldown={spec.cooldown_s}s window={spec.window_s}s")
 
     print(f"[data] {args.docs} docs, {args.queries} queries, dim={args.dim}")
     docs, queries, gt = synthetic.clustered_corpus(
@@ -280,7 +323,13 @@ def main():
                   f"block_n={tp.plan.block_n} ({tp.plan.source}"
                   f"{', swept now' if tp.tuned else ''})")
 
-    if args.index == "flat":
+    if spec is not None:
+        # The spec's build params are the single source of truth; the
+        # per-family branches below consume builder.params so the
+        # initial index, every swap, and every autoscaler scale-up all
+        # build the SAME index.
+        builder = spec.make_index_builder()
+    elif args.index == "flat":
         builder = lifecycle.FlatBuilder(
             k=args.k, packed=args.packed, backend=args.backend,
             coarse_levels=cl, k_coarse=kc, block_plan=block_plan,
@@ -396,9 +445,11 @@ def main():
     # share_device: single-host replicas sit on one device; their scan
     # stages take turns instead of oversubscribing the host cores.
     compat = proxy.CompatibilityMatrix()
+    # share_device also when a tier spec may scale up later: added
+    # replicas land on the same host device as the originals.
+    share = args.replicas > 1 or (spec is not None and spec.max_replicas > 1)
     router = proxy.QueryRouter(
-        proxy.ReplicaSet(replica_fns, config=pcfg,
-                         share_device=args.replicas > 1),
+        proxy.ReplicaSet(replica_fns, config=pcfg, share_device=share),
         policy=args.router, compat=compat,
     )
     from_version = args.embedding_version
@@ -413,6 +464,11 @@ def main():
     controller = snapshot = None
     to_version = None
     stream_meta = None
+    if spec is not None and spec.swap_every_s > 0 \
+            and not (args.swap_after or args.upgrade_after):
+        # The spec's declared swap cadence, mapped onto this
+        # finite-stream demo driver: one rolling swap at mid-stream.
+        args.swap_after = max(1, len(stream) // 2)
     if args.swap_after:
         snapshot = lifecycle.CorpusSnapshot(
             codes=np.asarray(d_codes), n_levels=bcfg.n_levels,
@@ -467,6 +523,20 @@ def main():
     if args.scan_budget_ms:
         router.start_watchdogs(args.scan_budget_ms / 1e3)
 
+    scaler = None
+    if spec is not None:
+        as_snapshot = snapshot if snapshot is not None else \
+            lifecycle.CorpusSnapshot(
+                codes=np.asarray(d_codes), n_levels=bcfg.n_levels,
+                embedding_version=from_version,
+            )
+        scaler = autoscale.Autoscaler(
+            router, spec, snapshot=as_snapshot, encode_fn=encode,
+            warm_batches=batches[:1],
+            on_event=lambda msg: print(f"[autoscale] {msg}"),
+        )
+        scaler.start()
+
     t0 = time.time()
     results, swap_report = lifecycle.run_stream_with_swap(
         router, stream, controller=controller, snapshot=snapshot,
@@ -474,6 +544,8 @@ def main():
         deadline_s=(args.deadline_ms / 1e3) if args.deadline_ms else None,
     )
     dt_pipe = time.time() - t0
+    if scaler is not None:
+        scaler.stop()
     for inj in injectors.values():
         inj.release()  # a still-stuck scan would wedge close()'s joins
     router.close()
@@ -557,6 +629,14 @@ def main():
         print(f"[watchdog] {args.scan_budget_ms:.0f} ms scan budget: "
               f"{stats['watchdog_stalls']} stall(s), "
               f"{stats['failovers']} failover(s)")
+    if scaler is not None:
+        sm = scaler.summary()
+        print(f"[autoscale] spec [{sm['replicas_min']}, "
+              f"{sm['replicas_max']}]: {sm['scale_ups']} scale-up(s), "
+              f"{sm['scale_downs']} scale-down(s) over {sm['decisions']} "
+              f"tick(s); replicas ended at {sm['replicas']} "
+              f"(seen [{sm['min_replicas_seen']}, "
+              f"{sm['max_replicas_seen']}])")
     for i, inj in sorted(injectors.items()):
         fired = ", ".join(f"{s}#{n}:{k}" for s, n, k in inj.log) or "none"
         print(f"[chaos] replica {i}: {len(inj.log)} fault(s) fired "

@@ -770,6 +770,7 @@ class ServingPipeline:
         on_stall: Callable[["ServingPipeline", int, float], None],
         *,
         poll: Optional[float] = None,
+        clock: Optional[Any] = None,
     ) -> None:
         """Watch for scans that hang past ``budget_s`` without completing.
 
@@ -782,6 +783,10 @@ class ServingPipeline:
         work. The stalled scan itself is left alone: there is no safe
         way to kill it, and first-wins resolution discards its result
         if it ever completes. Idempotent while the watchdog is alive.
+
+        ``clock`` (a ``launch.clock.Clock``) drives only the poll
+        cadence; the stall-age math stays on ``time.perf_counter``
+        because ``_scan_started`` records real dispatch instants.
         """
         if budget_s <= 0:
             raise ValueError(f"watchdog budget must be > 0, got {budget_s}")
@@ -791,10 +796,14 @@ class ServingPipeline:
         stop = threading.Event()
         self._watchdog_stop = stop
         tick = poll if poll is not None else budget_s / 4.0
+        wait_tick = (
+            stop.wait if clock is None
+            else (lambda t: clock.wait(stop, t))
+        )
 
         def loop():
             last_fired = -1  # seqs are monotonic; FIFO scans never return
-            while not stop.wait(tick):
+            while not wait_tick(tick):
                 with self._watch_lock:
                     if not self._scan_started:
                         continue

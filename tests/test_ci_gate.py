@@ -402,6 +402,21 @@ def _bigranular_swap_row(**overrides):
     return row
 
 
+def _autoscale_row(**overrides):
+    row = {
+        "mode": "autoscale", "index_kind": "flat",
+        "replicas_min": 1, "replicas_max": 3, "fixed_replicas": 1,
+        "steady_state_replicas": 1, "submitted": 500,
+        "lost": 0, "reordered": 0, "bit_identical": True,
+        "shed_fixed": 200, "shed_autoscaled": 120,
+        "shed_rate_fixed": 0.4, "shed_rate_autoscaled": 0.24,
+        "scale_ups": 2, "scale_downs": 2,
+        "max_replicas_seen": 3, "min_replicas_seen": 1,
+    }
+    row.update(overrides)
+    return row
+
+
 def _serving_bench(ratio: float, paired_ratio: float = 0.95):
     return {"bench": "serving", "rows": [
         {"mode": "sequential", "qps": 1000.0},
@@ -412,6 +427,7 @@ def _serving_bench(ratio: float, paired_ratio: float = 0.95):
         _chaos_row(),
         _upgrade_row(),
         _bigranular_swap_row(),
+        _autoscale_row(),
     ]}
 
 
@@ -768,6 +784,90 @@ def test_serving_gate_fails_when_bigranular_swap_breaks_bit_identity(
     out = _run_gate(tmp_path, bench)
     assert out.returncode != 0
     assert "not bit-identical" in out.stderr
+
+
+# -- shed-pressure autoscaler drill (autoscale row) ---------------------------
+
+
+def test_serving_gate_requires_an_autoscale_row(tmp_path):
+    """The autoscaler drill is part of the schema now: a report without
+    it (emitter regression) must not pass green."""
+    bench = _serving_bench(1.2)
+    bench["rows"] = bench["rows"][:8]  # drop the autoscale row
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "no 'autoscale' row" in out.stderr
+
+
+def test_serving_gate_fails_on_malformed_autoscale_row(tmp_path):
+    bench = _serving_bench(1.2)
+    del bench["rows"][8]["shed_rate_autoscaled"]
+    del bench["rows"][8]["max_replicas_seen"]
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "missing keys" in out.stderr
+    assert "shed_rate_autoscaled" in out.stderr
+    assert "max_replicas_seen" in out.stderr
+
+
+def test_serving_gate_fails_when_autoscaling_does_not_reduce_shed(tmp_path):
+    """The row's reason to exist: strictly fewer sheds than the fixed
+    tier on the same trace. Equal shed rates also fail — scaling up has
+    to buy something."""
+    bench = _serving_bench(1.2)
+    bench["rows"][8] = _autoscale_row(shed_rate_autoscaled=0.4,
+                                      shed_rate_fixed=0.4)
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "did not reduce shedding" in out.stderr
+
+
+def test_serving_gate_fails_on_lost_results_during_autoscale(tmp_path):
+    bench = _serving_bench(1.2)
+    bench["rows"][8] = _autoscale_row(lost=3)
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "lost 3 result(s)" in out.stderr
+
+
+def test_serving_gate_fails_on_reordered_results_during_autoscale(tmp_path):
+    bench = _serving_bench(1.2)
+    bench["rows"][8] = _autoscale_row(reordered=1)
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "reordered 1 result(s)" in out.stderr
+
+
+def test_serving_gate_fails_when_replicas_leave_spec_bounds(tmp_path):
+    bench = _serving_bench(1.2)
+    bench["rows"][8] = _autoscale_row(max_replicas_seen=4)  # spec max is 3
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "left the TierSpec bounds" in out.stderr
+
+    bench["rows"][8] = _autoscale_row(min_replicas_seen=0)  # spec min is 1
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "left the TierSpec bounds" in out.stderr
+
+
+def test_serving_gate_fails_on_unequal_steady_state_comparison(tmp_path):
+    """A tier that never settles back to the fixed tier's size is not a
+    fair shed comparison — more steady-state replicas would win on
+    capacity alone."""
+    bench = _serving_bench(1.2)
+    bench["rows"][8] = _autoscale_row(steady_state_replicas=2)
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "equal steady-state capacity" in out.stderr
+
+
+def test_serving_gate_fails_when_autoscaler_never_scaled_up(tmp_path):
+    bench = _serving_bench(1.2)
+    bench["rows"][8] = _autoscale_row(scale_ups=0)
+    out = _run_gate(tmp_path, bench)
+    assert out.returncode != 0
+    assert "no scale-up" in out.stderr
 
 
 # -- docs lint (scripts/check_docs_links.py) ---------------------------------

@@ -17,6 +17,7 @@ import pytest
 from repro.index import hnsw_lite
 from repro.index import ivf as ivf_lib
 from repro.kernels.sdc import ref as R
+from repro.launch.clock import FakeClock
 from repro.launch.faults import (
     FaultEvent,
     FaultInjector,
@@ -115,13 +116,24 @@ def test_fail_after_fails_forever_and_fail_at_picks_indices():
 
 
 def test_delay_every_sleeps_then_calls_through():
-    inj = _injector(FaultPlan.delay_every(0.05, at=1))
-    t0 = time.perf_counter()
-    inj.search(0)
-    assert time.perf_counter() - t0 < 0.04  # before `at`: no delay
-    t0 = time.perf_counter()
-    assert inj.search(1) == ("scan", 1)
-    assert time.perf_counter() - t0 >= 0.05
+    """Runs on FakeClock via the injector's clock kwarg: the delay is
+    proven to park on the clock for the scheduled duration rather than
+    measured against a noisy host timer."""
+    clk = FakeClock()
+    enc, scan = _identity_pair()
+    inj = FaultInjector(enc, scan, FaultPlan.delay_every(0.05, at=1),
+                        name="t", clock=clk)
+    assert inj.search(0) == ("scan", 0)
+    assert clk.sleepers == 0  # before `at`: no delay, clock untouched
+    out = []
+    th = threading.Thread(target=lambda: out.append(inj.search(1)))
+    th.start()
+    assert clk.wait_for_sleepers(1)  # the delayed call parks on the clock
+    assert th.is_alive() and not out
+    clk.advance(0.05)  # serve out exactly the scheduled delay
+    th.join(timeout=5)
+    assert not th.is_alive()
+    assert out == [("scan", 1)]
 
 
 def test_stick_blocks_until_release_then_calls_through():
@@ -129,7 +141,9 @@ def test_stick_blocks_until_release_then_calls_through():
     out = []
     th = threading.Thread(target=lambda: out.append(inj.search("q")))
     th.start()
-    time.sleep(0.05)
+    deadline = time.time() + 5  # wait on the observable, not a timer
+    while time.time() < deadline and inj.stuck_count == 0:
+        time.sleep(0.002)
     assert th.is_alive() and inj.stuck_count == 1 and not out
     inj.release()
     th.join(timeout=5)

@@ -16,6 +16,7 @@ import numpy as np
 import pytest
 
 from repro.launch import lifecycle, serving
+from repro.launch.clock import FakeClock
 from repro.launch.faults import FaultEvent, FaultInjector, FaultPlan
 from repro.launch.lifecycle import (
     CorpusSnapshot,
@@ -139,22 +140,37 @@ def test_rolling_swap_under_live_traffic_bit_identical(kind):
     # Fresh builder instance for the controller: the tier builder's
     # digest cache would hand the swap the identical pre-swap SearchFn,
     # leaving the rebuild path untested.
+    swap_started = [threading.Event() for _ in range(2)]
+
+    def on_event(msg):
+        for i, ev in enumerate(swap_started):
+            if msg.startswith(f"replica {i}: draining"):
+                ev.set()
+
     controller = RollingSwapController(
         router, make_builder(kind, **BUILDER_PARAMS[kind]),
         warm_batches=batches[:1], drain_timeout=15.0, probe_timeout=60.0,
+        on_event=on_event,
     )
     stream = batches * 8
     tickets = []
 
     def feeder():
-        for b in stream:
+        # Event-gated pacing instead of a per-batch timer sleep: hold a
+        # chunk of the stream back until each replica's swap has begun,
+        # so traffic provably overlaps BOTH swap windows no matter how
+        # fast this host drains the queue.
+        for j, b in enumerate(stream):
+            if j == len(stream) // 3:
+                assert swap_started[0].wait(timeout=30)
+            elif j == (2 * len(stream)) // 3:
+                assert swap_started[1].wait(timeout=30)
             while True:
                 try:
                     tickets.append(router.submit(b))
                     break
                 except RequestShed:
                     time.sleep(1e-3)
-            time.sleep(1e-3)  # stretch the stream across the swap window
 
     try:
         th = threading.Thread(target=feeder)
@@ -504,26 +520,30 @@ def test_canary_probe_revives_and_separates_generations():
 
 
 def test_periodic_health_probe_thread_revives_when_fault_clears():
+    """Runs on FakeClock: each tick hands the probe loop exactly one
+    interval, so 'still down after N probes' and 'revives on the first
+    probe after the fault clears' are counted, not slept for."""
+    clk = FakeClock()
     fail = [10**9]  # persistently down until we clear it
     router = QueryRouter(ReplicaSet(
         [_identity_replica(), _flaky_replica(fail)],
         config=ServingConfig(queue_depth=8),
-    ))
+    ), clock=clk)
     try:
-        router.start_health_probe(_batches(1)[0], interval=0.02)
+        router.start_health_probe(_batches(1)[0], interval=1.0)
         b = _batches(6)
         for i in range(4):
             router.submit(b[i]).result(timeout=10)
-        # the probe loop cycles unhealthy -> probing -> unhealthy every
-        # interval, so a sample may land mid-probe; what matters is the
-        # replica never reaches healthy while the fault persists
-        assert router.states()[1] in ("unhealthy", "probing")
-        time.sleep(0.15)
-        assert router.states()[1] in ("unhealthy", "probing")
-        fail[0] = 0  # fault clears; the next probe revives
-        deadline = time.time() + 15
-        while time.time() < deadline and router.states()[1] != "healthy":
-            time.sleep(0.01)
+        assert router.states()[1] == "unhealthy"
+        for _ in range(3):  # probes fail at t=1, t=2; t=3 backs off
+            clk.tick(1.0)
+        assert router.states()[1] == "unhealthy"
+        assert router.probe_failures().get(1, 0) >= 2
+        fail[0] = 0  # fault clears; the next due probe revives
+        for _ in range(16):
+            clk.tick(1.0)
+            if router.states()[1] == "healthy":
+                break
         assert router.states()[1] == "healthy"
         assert router.revival_count >= 1
         # revived replica serves real traffic again

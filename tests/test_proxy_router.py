@@ -16,6 +16,7 @@ from repro.index import ivf as ivf_lib
 from repro.index.flat import FlatSDC
 from repro.index.hnsw_lite import build_hnsw, prepare_batched, search_hnsw_batched
 from repro.kernels.sdc import ref as R
+from repro.launch.clock import FakeClock
 from repro.launch.faults import FaultInjector, FaultPlan
 from repro.launch.mesh import make_replica_meshes
 from repro.launch.proxy import (
@@ -410,7 +411,7 @@ def test_submit_rejects_already_expired_deadline():
         router.close()
 
 
-def _gated_tier(n_extra_queued=1):
+def _gated_tier(n_extra_queued=1, clock=None):
     """One replica whose encode blocks on a gate, with its admission
     queue then filled: the next submit must shed tier-wide."""
     gate = threading.Event()
@@ -424,10 +425,12 @@ def _gated_tier(n_extra_queued=1):
     def search(c):
         return c * 2, c + 1
 
+    kw = {} if clock is None else {"clock": clock}
     router = QueryRouter(
         ReplicaSet([(encode, search)],
                    config=ServingConfig(queue_depth=n_extra_queued,
                                         policy="shed")),
+        **kw,
     )
     head, *rest = _batches(1 + n_extra_queued)
     tickets = [router.submit(head)]
@@ -439,18 +442,35 @@ def _gated_tier(n_extra_queued=1):
 
 
 def test_submit_with_retry_succeeds_once_pressure_clears():
-    router, gate, tickets = _gated_tier()
+    """Runs on FakeClock: the retry parks on the simulated clock, the
+    gate opens mid-backoff, and the test hands it time to retry."""
+    clk = FakeClock()
+    router, gate, tickets = _gated_tier(clock=clk)
     try:
-        # saturated right now -> first attempts shed; the gate opens
-        # mid-backoff and a later attempt lands
-        threading.Timer(0.05, gate.set).start()
-        t = router.submit_with_retry(
-            _batches(3)[2], attempts=20, base_delay_s=0.01,
-            max_delay_s=0.05,
-        )
-        vals, ids = t.result(timeout=10)
-        np.testing.assert_array_equal(np.asarray(vals), np.full((4,), 4))
+        result = {}
+
+        def work():
+            t = router.submit_with_retry(
+                _batches(3)[2], attempts=20, base_delay_s=0.5,
+                max_delay_s=2.0,
+            )
+            result["vals"] = t.result(timeout=10)[0]
+
+        w = threading.Thread(target=work)
+        w.start()
+        # saturated right now -> the first attempt sheds and the retry
+        # parks on the clock for its backoff
+        clk.wait_for_sleepers(1)
         assert router.shed_count >= 1  # it genuinely shed before landing
+        gate.set()  # pressure clears while the retry is backing off
+        deadline = time.time() + 10
+        while w.is_alive() and time.time() < deadline:
+            clk.advance(2.0)  # serve out the current backoff (jitter incl.)
+            time.sleep(0.005)
+        w.join(timeout=10)
+        assert not w.is_alive()
+        np.testing.assert_array_equal(np.asarray(result["vals"]),
+                                      np.full((4,), 4))
         for tk in tickets:
             tk.result(timeout=10)
     finally:
@@ -459,16 +479,18 @@ def test_submit_with_retry_succeeds_once_pressure_clears():
 
 
 def test_submit_with_retry_deadline_cuts_backoff_short():
-    router, gate, tickets = _gated_tier()
+    clk = FakeClock()
+    router, gate, tickets = _gated_tier(clock=clk)
     try:
-        t0 = time.perf_counter()
+        t0 = clk.now()
         with pytest.raises(DeadlineExpired, match="retry backoff"):
             router.submit_with_retry(
-                _batches(3)[2], deadline=time.perf_counter() + 0.05,
+                _batches(3)[2], deadline=clk.now() + 0.05,
                 attempts=50, base_delay_s=0.2, jitter=0.0,
             )
-        # failed by deadline math, not by burning 50 x 0.2s of backoff
-        assert time.perf_counter() - t0 < 2.0
+        # failed by deadline MATH: simulated time never moved, so not a
+        # single second of the 50 x 0.2s backoff schedule was served
+        assert clk.now() == t0
         assert router.stats()["deadline_expired"] >= 1
     finally:
         gate.set()
@@ -516,21 +538,25 @@ def test_stop_health_probe_raises_when_probe_thread_is_wedged():
     """A probe wedged on a stuck canary must make stop_health_probe fail
     LOUDLY (the old silent join timeout leaked a daemon thread that kept
     reviving replicas behind the caller's back)."""
+    clk = FakeClock()
     stuck = FaultInjector(*_identity_replica(0),
                           plan=FaultPlan.stick_at(0), name="r0")
     router = QueryRouter(
         ReplicaSet([stuck.pair], config=ServingConfig(queue_depth=4)),
+        clock=clk,
     )
     try:
         router.mark_unhealthy(0, RuntimeError("down"))
-        router.start_health_probe(_batches(1)[0], interval=0.01,
+        router.start_health_probe(_batches(1)[0], interval=1.0,
                                   timeout=30.0)
+        clk.wait_for_sleepers(1)
+        clk.advance(1.0)  # first tick: the probe dives into the canary
         deadline = time.time() + 10
         while time.time() < deadline and stuck.stuck_count == 0:
             time.sleep(0.005)
         assert stuck.stuck_count == 1  # the probe is wedged in the canary
         with pytest.raises(RuntimeError, match="did not exit"):
-            router.stop_health_probe(timeout=0.2)
+            router.stop_health_probe(timeout=0.05)
         # the hang clears: the wedged probe completes, revives the
         # replica, sees the stop flag, and the thread exits for real
         stuck.release()
@@ -541,24 +567,30 @@ def test_stop_health_probe_raises_when_probe_thread_is_wedged():
 
 
 def test_flap_suppression_backs_off_a_permanently_failing_replica():
+    """Runs on FakeClock: the probe loop is handed exactly one simulated
+    second per tick, so the backoff schedule is counted, not raced."""
+    clk = FakeClock()
     flaky = FaultInjector(*_identity_replica(1),
                           plan=FaultPlan.fail_after(0), name="r1")
     router = QueryRouter(
         ReplicaSet([_identity_replica(0), flaky.pair],
                    config=ServingConfig(queue_depth=8)),
+        clock=clk,
     )
     try:
         tickets = [router.submit(b) for b in _batches(4)]
         for t in tickets:
             t.result(timeout=15)  # failover absorbs replica 1's faults
         assert router.wait_state(1, ("unhealthy",), timeout=10)
-        router.start_health_probe(_batches(1)[0], interval=0.02,
+        router.start_health_probe(_batches(1)[0], interval=1.0,
                                   timeout=2.0)
-        time.sleep(0.6)
+        for _ in range(16):  # 16 simulated seconds, lockstep with the loop
+            clk.tick(1.0)
         fails = router.probe_failures().get(1, 0)
-        # without backoff ~0.6/0.02 = 30 probes; with 1x,2x,4x... spacing
-        # the count stays small — and it must have actually retried
-        assert 2 <= fails <= 10, fails
+        # without backoff 16 ticks = 16 probes; with 1x,2x,4x... spacing
+        # the probe lands at t=1,2,4,8,16 — and it must have actually
+        # retried, not given up after the first failure
+        assert 2 <= fails <= 6, fails
         assert router.states()[1] == "unhealthy"
     finally:
         router.close()
